@@ -1,0 +1,31 @@
+"""Shared benchmark plumbing: timed runs + CSV emission.
+
+The container is CPU-only, so each benchmark reports BOTH:
+  * ``wall_us``    — measured CPU wall time (real execution of the system)
+  * ``modeled_ms`` — the transfer-time model with the paper's PCIe-3 GPU
+    constants evaluated on the *actual* per-iteration frontier statistics
+    of that execution (this is the quantity the paper's tables measure).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+ROWS: list[tuple] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    times = []
+    for _ in range(repeats):
+        t0 = time.monotonic()
+        out = fn(*args, **kw)
+        times.append(time.monotonic() - t0)
+    return out, float(np.median(times)) * 1e6

@@ -1,0 +1,46 @@
+"""Fig. 7 analogue: HyTM's per-iteration engine mix (execution path) for
+PageRank and SSSP — filter early / zero-copy late for PR, zero-copy ->
+filter -> compaction arc for SSSP."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.constants import PCIE3
+from repro.core.cost_model import COMPACT, FILTER, ZEROCOPY
+from repro.core.hytm import HyTMConfig, run_hytm
+from repro.graph.algorithms import PAGERANK, SSSP
+from repro.graph.generators import rmat_graph
+from repro.graph.hub_sort import hub_sort
+
+
+def run(n_nodes: int = 20_000, n_edges: int = 320_000, n_partitions: int = 64):
+    g = rmat_graph(n_nodes, n_edges, seed=10)
+    hs = hub_sort(g)
+    link = PCIE3.with_(mr=4.0)  # avoid transaction-group ties at CPU scale
+    shares = {}
+    for aname, prog, src in [
+        ("pr", dataclasses.replace(PAGERANK, tolerance=1e-5), None),
+        ("sssp", SSSP, 0),
+    ]:
+        cfg = HyTMConfig(n_partitions=n_partitions, link=link, cds_mode="hub")
+        res = run_hytm(
+            hs.graph, prog, source=int(hs.perm[0]) if src is not None else None,
+            config=cfg, n_hubs=hs.n_hubs,
+        )
+        eng = res.history["engines"]
+        for name, eid in [("filter", FILTER), ("compact", COMPACT), ("zerocopy", ZEROCOPY)]:
+            share = (eng == eid).sum(axis=1) / eng.shape[1]
+            shares[(aname, name)] = share
+            emit(
+                f"fig7/{aname}/{name}_share", 0.0,
+                "|".join(f"{x:.2f}" for x in share[: min(16, len(share))]),
+            )
+    return shares
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Fig. 8 analogue: ablation of Task Combining (TC) and Contribution-
+Driven Scheduling (CDS) over the raw hybrid transfer management."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit
+from repro.core.constants import PCIE3
+from repro.core.hytm import HyTMConfig, run_hytm
+from repro.graph.algorithms import BFS, CC, PAGERANK, SSSP
+from repro.graph.generators import rmat_graph
+from repro.graph.hub_sort import hub_sort
+
+
+LINK = PCIE3.with_(mr=4.0)  # fine transaction groups: avoids ties at CPU scale
+
+
+def run(n_nodes: int = 20_000, n_edges: int = 320_000, n_partitions: int = 64):
+    g = rmat_graph(n_nodes, n_edges, seed=11)
+    hs = hub_sort(g)
+    gsym = hs.graph.symmetrize()
+    gains = {}
+    for aname, prog, src in [
+        ("pr", dataclasses.replace(PAGERANK, tolerance=1e-5), None),
+        ("sssp", SSSP, 0),
+        ("cc", CC, None),
+        ("bfs", BFS, 0),
+    ]:
+        graph = gsym if aname == "cc" else hs.graph
+        source = int(hs.perm[0]) if src is not None else None
+        cds_mode = "delta" if aname == "pr" else "hub"
+        variants = {
+            "raw": HyTMConfig(link=LINK, n_partitions=n_partitions, cds_mode="none",
+                              enable_task_combination=False, recompute_once=False),
+            "tc": HyTMConfig(link=LINK, n_partitions=n_partitions, cds_mode="none",
+                             enable_task_combination=True, recompute_once=False),
+            "tc+cds": HyTMConfig(link=LINK, n_partitions=n_partitions, cds_mode=cds_mode,
+                                 enable_task_combination=True, recompute_once=True),
+        }
+        modeled = {}
+        for vname, cfg in variants.items():
+            res = run_hytm(graph, prog, source=source, config=cfg, n_hubs=hs.n_hubs)
+            modeled[vname] = res.modeled_seconds
+            emit(f"fig8/{aname}/{vname}", 0.0,
+                 f"modeled_ms={res.modeled_seconds*1e3:.3f};iters={res.iterations}")
+        gains[aname] = (
+            modeled["raw"] / max(modeled["tc"], 1e-12),
+            modeled["raw"] / max(modeled["tc+cds"], 1e-12),
+        )
+        emit(f"fig8/{aname}/speedup", 0.0,
+             f"tc={gains[aname][0]:.2f}x;tc+cds={gains[aname][1]:.2f}x")
+    return gains
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Fig. 9 analogue: RMAT size ladder (CPU-scaled: 0.04M -> 2.5M edges,
+64x range like the paper's 0.1B -> 6.4B) — runtime growth of HyTM vs the
+single-engine baselines."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.core.constants import PCIE3
+from repro.core.cost_model import COMPACT, FILTER, ZEROCOPY
+from repro.core.hytm import HyTMConfig, run_hytm
+from repro.graph.algorithms import SSSP
+from repro.graph.generators import rmat_graph
+
+LINK = PCIE3.with_(mr=4.0)  # fine transaction groups: avoids ties at CPU scale
+
+SYSTEMS = {"hytm": None, "exptm-f": FILTER, "exptm-c": COMPACT, "imptm-zc": ZEROCOPY}
+
+
+def run():
+    sizes = [(2_500, 40_000), (5_000, 160_000), (20_000, 640_000), (40_000, 2_560_000)]
+    growth = {}
+    for sname, engine in SYSTEMS.items():
+        modeled = []
+        for n, m in sizes:
+            g = rmat_graph(n, m, seed=12)
+            cfg = HyTMConfig(link=LINK, n_partitions=max(8, m // 40_000), forced_engine=engine)
+            res, wall_us = timed(run_hytm, g, SSSP, source=0, config=cfg, repeats=1)
+            modeled.append(res.modeled_seconds)
+            emit(f"fig9/{sname}/edges_{m}", wall_us,
+                 f"modeled_ms={res.modeled_seconds*1e3:.3f}")
+        growth[sname] = modeled[-1] / max(modeled[0], 1e-12)
+        emit(f"fig9/{sname}/growth_64x", 0.0, f"{growth[sname]:.1f}x")
+    return growth
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,108 @@
+"""Roofline analysis from the dry-run's compiled artifacts.
+
+For every (arch x shape x mesh) JSON produced by repro.launch.dryrun:
+
+  compute term    = HLO_FLOPs(per-device) / peak_FLOP/s
+  memory term     = HLO_bytes(per-device) / HBM_bw
+  collective term = wire_bytes(per-device, ring-factored) / link_bw
+
+plus MODEL_FLOPS / (HLO_FLOPs * n_devices) — the useful-compute ratio
+(catching remat/redundancy waste) — and the dominant bottleneck.
+
+No jax required: this module only reads the JSON records, so it runs in
+the 1-device benchmark process.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.core.constants import HBM_BANDWIDTH, ICI_BANDWIDTH, PEAK_FLOPS_BF16
+
+from benchmarks.common import emit
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if rec.get("status") != "OK":
+        return None
+    flops = rec["cost"]["flops"]
+    mem_bytes = rec["cost"]["bytes_accessed"]
+    wire = sum(c["wire_bytes"] for c in rec["collectives"].values())
+    model_flops = rec.get("model_flops", 0.0)
+    hlo_total = flops * rec["n_devices"]
+    useful = model_flops / hlo_total if hlo_total else 0.0
+    # XLA:CPU cost_analysis counts while-loop (scan) bodies approximately:
+    # a useful_ratio >> 1 flags trip-count under-attribution.  The compute
+    # term therefore uses the ANALYTIC model FLOPs when they exceed the
+    # HLO count; memory/collective terms are scaled by the same loop
+    # factor (the under-counted loop body contains the bulk of both).
+    correction = max(useful, 1.0)
+    t_compute = max(flops, model_flops / rec["n_devices"]) / PEAK_FLOPS_BF16
+    t_memory = mem_bytes * correction / HBM_BANDWIDTH
+    t_coll = wire * correction / ICI_BANDWIDTH
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    # achievable fraction of the compute roofline if perfectly overlapped
+    frac = t_compute / bound if bound > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute": t_compute, "t_memory": t_memory, "t_collective": t_coll,
+        "dominant": dominant, "useful_ratio": useful,
+        "roofline_fraction": frac,
+        "peak_gib": rec["memory"]["peak_device_bytes"] / 2**30,
+    }
+
+
+def load_all(dryrun_dir: str = "experiments/dryrun") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyze_record(rec)
+        if row is None:
+            out.append({
+                "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+                "skip": rec.get("reason", rec.get("error", ""))[:80],
+            })
+        else:
+            out.append(row)
+    return out
+
+
+def markdown_table(rows: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) | dominant | useful | roofline frac | peak GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "skip" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP: {r['skip']} |||||||")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['t_compute']:.2e} | "
+            f"{r['t_memory']:.2e} | {r['t_collective']:.2e} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} | {r['peak_gib']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def run(dryrun_dir: str = "experiments/dryrun"):
+    rows = load_all(dryrun_dir)
+    ok = [r for r in rows if "skip" not in r]
+    for r in ok:
+        emit(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+            f"dom={r['dominant']};frac={r['roofline_fraction']:.2f};useful={r['useful_ratio']:.2f}",
+        )
+    if ok:
+        worst = sorted(ok, key=lambda r: r["roofline_fraction"])[:5]
+        emit("roofline/worst5", 0.0,
+             ";".join(f"{r['arch']}/{r['shape']}/{r['mesh']}={r['roofline_fraction']:.2f}" for r in worst))
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown_table(run()))

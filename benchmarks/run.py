@@ -1,0 +1,43 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit)."""
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="run a single benchmark module")
+    ap.add_argument("--fast", action="store_true", help="smaller graphs")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig3_analysis,
+        fig7_execution_path,
+        fig8_gains,
+        fig9_scaling,
+        kernels,
+        roofline,
+        table5_runtime,
+        table6_transfer,
+    )
+
+    kw = dict(n_nodes=5000, n_edges=80_000, n_partitions=32) if args.fast else {}
+    mods = {
+        "table5": lambda: table5_runtime.run(**kw),
+        "table6": lambda: table6_transfer.run(**kw),
+        "fig3": lambda: fig3_analysis.run(**kw),
+        "fig7": lambda: fig7_execution_path.run(**kw),
+        "fig8": lambda: fig8_gains.run(**kw),
+        "fig9": lambda: fig9_scaling.run(),
+        "kernels": lambda: kernels.run(),
+        "roofline": lambda: roofline.run(),
+    }
+    print("name,us_per_call,derived")
+    for name, fn in mods.items():
+        if args.only and name != args.only:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

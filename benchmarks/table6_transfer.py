@@ -1,0 +1,47 @@
+"""Table VI analogue: transfer volume normalized to edge-array bytes for
+SSSP and PageRank under each system (modeled bytes on real frontiers)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit
+from repro.core.constants import PCIE3
+from repro.core.cost_model import COMPACT, FILTER, ZEROCOPY
+from repro.core.hytm import HyTMConfig, run_hytm
+from repro.graph.algorithms import PAGERANK, SSSP
+from repro.graph.generators import rmat_graph
+from repro.graph.hub_sort import hub_sort
+
+LINK = PCIE3.with_(mr=4.0)  # fine transaction groups: avoids ties at CPU scale
+
+SYSTEMS = {"exptm-f": FILTER, "exptm-c": COMPACT, "imptm-zc": ZEROCOPY, "hytm": None}
+
+
+def run(n_nodes: int = 20_000, n_edges: int = 320_000, n_partitions: int = 64):
+    g = rmat_graph(n_nodes, n_edges, seed=8)
+    hs = hub_sort(g)
+    edge_bytes = g.n_edges * 4.0
+    results = {}
+    for aname, prog, src in [
+        ("sssp", SSSP, 0),
+        ("pr", dataclasses.replace(PAGERANK, tolerance=1e-5), None),
+    ]:
+        for sname, engine in SYSTEMS.items():
+            cfg = HyTMConfig(link=LINK,
+                n_partitions=n_partitions, forced_engine=engine,
+                cds_mode="hub" if engine is None else "none",
+                recompute_once=engine is None,
+            )
+            res = run_hytm(
+                hs.graph, prog, source=int(hs.perm[0]) if src is not None else None,
+                config=cfg, n_hubs=hs.n_hubs,
+            )
+            ratio = res.total_transfer_bytes / edge_bytes
+            results[(aname, sname)] = ratio
+            emit(f"table6/{aname}/{sname}", 0.0, f"transfer_over_edges={ratio:.2f}x")
+    return results
+
+
+if __name__ == "__main__":
+    run()

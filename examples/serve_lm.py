@@ -1,0 +1,72 @@
+"""Serve a small LM with batched requests: prefill + decode loop with a
+KV cache, continuous batched generation (the serving-side e2e driver).
+
+    PYTHONPATH=src python examples/serve_lm.py [--requests 16 --gen 32]
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import (
+    TransformerConfig,
+    decode_step,
+    init_cache,
+    init_transformer,
+    prefill,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = TransformerConfig(
+        name="serve-demo", n_layers=6, d_model=256, n_heads=8, n_kv_heads=4,
+        d_head=32, d_ff=1024, vocab=32_000, window_pattern=(256, 256, 0),
+        dtype="float32", param_dtype="float32", remat=False,
+    )
+    params = init_transformer(jax.random.PRNGKey(0), cfg)
+    n_params = sum(l.size for l in jax.tree.leaves(params))
+    print(f"model: {n_params/1e6:.1f}M params, batch={args.requests}")
+
+    B, P, G = args.requests, args.prompt_len, args.gen
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0, cfg.vocab)
+    caches = init_cache(cfg, B, P + G)
+
+    jit_prefill = jax.jit(lambda p, t, c: prefill(p, t, cfg, c))
+    jit_decode = jax.jit(lambda p, t, c, i: decode_step(p, t, cfg, c, i))
+
+    t0 = time.monotonic()
+    logits, caches = jit_prefill(params, prompts, caches)
+    jax.block_until_ready(logits)
+    t_prefill = time.monotonic() - t0
+    print(f"prefill: {B}x{P} tokens in {t_prefill*1e3:.1f} ms "
+          f"({B*P/t_prefill:.0f} tok/s)")
+
+    tokens = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    generated = [tokens]
+    t0 = time.monotonic()
+    for step in range(G - 1):
+        logits, caches = jit_decode(params, tokens, caches, jnp.int32(P + step))
+        tokens = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        generated.append(tokens)
+    jax.block_until_ready(tokens)
+    t_dec = time.monotonic() - t0
+    out = jnp.concatenate(generated, axis=1)
+    print(f"decode: {B}x{G-1} tokens in {t_dec*1e3:.1f} ms "
+          f"({B*(G-1)/t_dec:.0f} tok/s, {t_dec/(G-1)*1e3:.1f} ms/step)")
+    assert bool(jnp.all((out >= 0) & (out < cfg.vocab)))
+    print("sample continuation ids:", out[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""End-to-end GNN training driver: GraphSAGE on a synthetic reddit-like
+power-law graph with real neighbour sampling, fault-tolerant loop with
+async checkpointing, a few hundred steps.
+
+    PYTHONPATH=src python examples/train_gnn.py [--steps 300]
+"""
+
+import argparse
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import GraphBatches
+from repro.graph.generators import rmat_graph
+from repro.graph.sampler import sample_neighbors
+from repro.models.gnn import GNNConfig, graphsage_minibatch_forward, init_gnn
+from repro.train.fault_tolerance import FaultInjector, FaultTolerantLoop
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--nodes", type=int, default=50_000)
+    ap.add_argument("--edges", type=int, default=1_000_000)
+    args = ap.parse_args()
+
+    g = rmat_graph(args.nodes, args.edges, seed=0)
+    n_classes, d_feat = 16, 64
+    rng = np.random.default_rng(0)
+    feats = jnp.asarray(rng.standard_normal((args.nodes, d_feat)), jnp.float32)
+    # planted labels so the loss is learnable: class = f(feature clusters)
+    proj = rng.standard_normal((d_feat, n_classes))
+    labels_np = np.argmax(np.asarray(feats) @ proj, axis=1)
+    labels = jnp.asarray(labels_np, jnp.int32)
+
+    cfg = GNNConfig(name="sage", arch="graphsage", n_layers=2, d_hidden=128,
+                    d_in=d_feat, d_out=n_classes, sample_sizes=(15, 10))
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    oc = OptimizerConfig(learning_rate=3e-3, warmup_steps=20, total_steps=args.steps)
+
+    fan = cfg.sample_sizes
+    batch_nodes = 512
+
+    def loss_fn(p, batch):
+        sizes = [batch_nodes, batch_nodes * fan[0], batch_nodes * fan[0] * fan[1]]
+        lf = [feats[batch[f"hop{k}"]] for k in range(3)]
+        logits = graphsage_minibatch_forward(p, lf, cfg)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], axis=-1))
+
+    pipe = GraphBatches(n_nodes=args.nodes, batch_nodes=batch_nodes, n_classes=n_classes)
+
+    def batch_fn(step):
+        seeds = pipe.make(step)["seeds"]
+        hops = sample_neighbors(g, seeds, fan, seed=step)
+        return {
+            **{f"hop{k}": jnp.asarray(h, jnp.int32) for k, h in enumerate(hops)},
+            "y": labels[jnp.asarray(seeds)],
+        }
+
+    step_fn = jax.jit(make_train_step(loss_fn, oc))
+    state = init_train_state(params, oc)
+
+    with tempfile.TemporaryDirectory() as td:
+        loop = FaultTolerantLoop(
+            step_fn=step_fn, batch_fn=batch_fn, ckpt_dir=td, ckpt_every=50,
+            injector=FaultInjector(fail_at_steps=(args.steps // 2,)),
+        )
+        state, log, restarts = loop.run(state, args.steps)
+
+    first = np.mean([m["loss"] for m in log[:20]])
+    last = np.mean([m["loss"] for m in log[-20:]])
+    print(f"steps={args.steps} restarts={restarts} (injected fault survived)")
+    print(f"loss: {first:.4f} -> {last:.4f}  ({'improved' if last < first else 'NO IMPROVEMENT'})")
+    assert last < first, "training did not reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Architecture registry: ``--arch <id>`` -> ArchSpec with per-shape cells.
+
+10 assigned architectures + the paper's own graph-analytics engine.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = {
+    # LM family (5)
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t_a32b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "internlm2-1.8b": "repro.configs.internlm2_1p8b",
+    "granite-20b": "repro.configs.granite_20b",
+    "gemma3-12b": "repro.configs.gemma3_12b",
+    # GNN family (4)
+    "graphsage-reddit": "repro.configs.graphsage_reddit",
+    "pna": "repro.configs.pna",
+    "gatedgcn": "repro.configs.gatedgcn",
+    "meshgraphnet": "repro.configs.meshgraphnet",
+    # RecSys (1)
+    "dlrm-mlperf": "repro.configs.dlrm_mlperf",
+    # The paper's own system (bonus arch: graph analytics engine)
+    "hytgraph": "repro.configs.hytgraph_paper",
+}
+
+
+def get_arch(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(ARCHS[name]).ARCH
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)

@@ -1,0 +1,579 @@
+"""Cell builders: everything the dry-run / smoke tests need per
+(architecture x input-shape) pair.
+
+A *cell* resolves to a ``CellBuild``: the step function, abstract input
+specs (ShapeDtypeStruct — no allocation), in/out shardings for the given
+mesh, and the analytic MODEL_FLOPS used by the roofline's useful-compute
+ratio.  ``skip`` cells (e.g. long_500k on pure full-attention archs)
+carry the reason instead.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import (
+    batch_axes,
+    dlrm_rule,
+    gnn_data_spec,
+    gnn_rule,
+    lm_batch_spec,
+    lm_cache_rule,
+    lm_rule,
+    tree_shardings,
+)
+from repro.models import dlrm as dlrm_mod
+from repro.models import gnn as gnn_mod
+from repro.models import transformer as tf_mod
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+
+@dataclass
+class CellBuild:
+    fn: Callable
+    args: tuple                 # abstract ShapeDtypeStructs
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple = ()
+    model_flops: float = 0.0    # 6*N*D (train) / 2*N*D (serve) useful FLOPs
+    note: str = ""
+
+
+@dataclass
+class ArchSpec:
+    name: str
+    family: str                                 # 'lm' | 'gnn' | 'recsys' | 'graph'
+    cells: dict = field(default_factory=dict)   # shape -> builder(mesh) -> CellBuild
+    skips: dict = field(default_factory=dict)   # shape -> reason
+    smoke: Callable | None = None               # () -> reduced-config smoke callable
+    model_config: Any = None
+
+    def shapes(self) -> list[str]:
+        return list(self.cells) + list(self.skips)
+
+
+# ---------------------------------------------------------------- LM cells
+
+def lm_param_count(cfg: tf_mod.TransformerConfig) -> tuple[float, float]:
+    """(total, active) parameter counts, analytic."""
+    abstract = tf_mod.abstract_params(cfg)
+    total = sum(l.size for l in jax.tree.leaves(abstract))
+    active = total
+    if cfg.moe is not None:
+        m = cfg.moe
+        per_expert = 3 * cfg.d_model * m.d_ff
+        inactive = (m.n_experts - m.top_k) * per_expert
+        active = total - cfg.n_scan_layers * inactive
+    return float(total), float(active)
+
+
+def _lm_state_abstract(cfg, opt_cfg):
+    return jax.eval_shape(
+        lambda: init_train_state(
+            tf_mod.init_transformer(jax.random.PRNGKey(0), cfg), opt_cfg
+        )
+    )
+
+
+def lm_train_cell(
+    cfg: tf_mod.TransformerConfig,
+    opt_cfg: OptimizerConfig,
+    global_batch: int,
+    seq_len: int,
+    microbatches: int = 1,
+    grad_accum_dtype: str = "float32",
+):
+    def build(mesh) -> CellBuild:
+        ba = batch_axes(mesh)
+        loss_fn = lambda p, b: tf_mod.lm_loss(
+            p, b["tokens"], cfg, mesh=mesh, batch_axes=ba
+        )
+
+        def pin_micro(mbs):
+            return jax.tree.map(
+                lambda x: jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(None, ba, *([None] * (x.ndim - 2))))
+                ),
+                mbs,
+            )
+
+        step = make_train_step(
+            loss_fn, opt_cfg, microbatches=microbatches,
+            microbatch_constraint=pin_micro if microbatches > 1 else None,
+            accum_dtype=jnp.dtype(grad_accum_dtype),
+        )
+        state = _lm_state_abstract(cfg, opt_cfg)
+        batch = {"tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)}
+        rule = lm_rule(mesh)
+        state_sh = tree_shardings(state, mesh, rule)
+        batch_sh = {"tokens": NamedSharding(mesh, lm_batch_spec(mesh))}
+        scalar = NamedSharding(mesh, P())
+        _, active = lm_param_count(cfg)
+        tokens = global_batch * (seq_len - 1)
+        return CellBuild(
+            fn=step,
+            args=(state, batch),
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, {"loss": scalar, "grad_norm": scalar}),
+            donate_argnums=(0,),
+            model_flops=6.0 * active * tokens,
+        )
+
+    return build
+
+
+def lm_prefill_cell(cfg: tf_mod.TransformerConfig, batch: int, seq_len: int):
+    serve_cfg = cfg.replace(remat=False, param_dtype="bfloat16")
+
+    def build(mesh) -> CellBuild:
+        ba = batch_axes(mesh)
+
+        def fn(params, tokens, caches):
+            return tf_mod.prefill(params, tokens, serve_cfg, caches, mesh=mesh, batch_axes=ba)
+
+        params = tf_mod.abstract_params(serve_cfg)
+        caches = jax.eval_shape(lambda: tf_mod.init_cache(serve_cfg, batch, seq_len))
+        tokens = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+        rule = lm_rule(mesh)
+        cache_rule = lm_cache_rule(mesh, serve_cfg.n_kv_heads)
+        p_sh = tree_shardings(params, mesh, rule)
+        c_sh = tree_shardings(caches, mesh, cache_rule)
+        t_sh = NamedSharding(mesh, lm_batch_spec(mesh))
+        logits_sh = NamedSharding(mesh, P(ba, "model"))
+        _, active = lm_param_count(serve_cfg)
+        return CellBuild(
+            fn=fn,
+            args=(params, tokens, caches),
+            in_shardings=(p_sh, t_sh, c_sh),
+            out_shardings=(logits_sh, c_sh),
+            donate_argnums=(2,),
+            model_flops=2.0 * active * batch * seq_len,
+        )
+
+    return build
+
+
+def lm_decode_cell(cfg: tf_mod.TransformerConfig, batch: int, cache_len: int):
+    serve_cfg = cfg.replace(remat=False, param_dtype="bfloat16")
+
+    def build(mesh) -> CellBuild:
+        ba = batch_axes(mesh)
+        ba_size = 1
+        for a in ba:
+            ba_size *= mesh.shape[a]
+        # tiny-batch long-context decode: batch dim replicated (the cache
+        # rule shards the sequence dim instead)
+        ba_eff = ba if batch % ba_size == 0 else None
+
+        def fn(params, token, caches, index):
+            return tf_mod.decode_step(
+                params, token, serve_cfg, caches, index, mesh=mesh, batch_axes=ba
+            )
+
+        params = tf_mod.abstract_params(serve_cfg)
+        caches = jax.eval_shape(lambda: tf_mod.init_cache(serve_cfg, batch, cache_len))
+        token = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+        index = jax.ShapeDtypeStruct((), jnp.int32)
+        rule = lm_rule(mesh)
+        cache_rule = lm_cache_rule(mesh, serve_cfg.n_kv_heads)
+        p_sh = tree_shardings(params, mesh, rule)
+        c_sh = tree_shardings(caches, mesh, cache_rule)
+        t_sh = NamedSharding(mesh, P(ba_eff, None))
+        logits_sh = NamedSharding(mesh, P(ba_eff, "model"))
+        _, active = lm_param_count(serve_cfg)
+        return CellBuild(
+            fn=fn,
+            args=(params, token, caches, index),
+            in_shardings=(p_sh, t_sh, c_sh, NamedSharding(mesh, P())),
+            out_shardings=(logits_sh, c_sh),
+            donate_argnums=(2,),
+            model_flops=2.0 * active * batch,
+        )
+
+    return build
+
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+def standard_lm_arch(
+    name: str,
+    cfg: tf_mod.TransformerConfig,
+    opt_cfg: OptimizerConfig,
+    microbatches: int = 1,
+    grad_accum_dtype: str = "float32",
+) -> ArchSpec:
+    cells = {
+        "train_4k": lm_train_cell(cfg, opt_cfg, 256, 4096, microbatches, grad_accum_dtype),
+        "prefill_32k": lm_prefill_cell(cfg, 32, 32768),
+        "decode_32k": lm_decode_cell(cfg, 128, 32768),
+    }
+    skips = {}
+    if cfg.sub_quadratic:
+        cells["long_500k"] = lm_decode_cell(cfg, 1, 524288)
+    else:
+        skips["long_500k"] = (
+            "pure full-attention arch: 500k-token context requires "
+            "sub-quadratic attention (DESIGN.md §4)"
+        )
+    return ArchSpec(name=name, family="lm", cells=cells, skips=skips, model_config=cfg)
+
+
+# --------------------------------------------------------------- GNN cells
+
+def gnn_flops_per_edge(cfg: gnn_mod.GNNConfig) -> float:
+    """Analytic useful FLOPs per edge per layer (message + aggregation)."""
+    d = cfg.d_hidden
+    per_edge = {
+        "graphsage": 2 * d,               # gather+reduce; linears are per-node
+        "pna": 2 * (2 * d) * d + 8 * d,   # message MLP + 4 aggregators
+        "gatedgcn": 3 * 2 * d * d + 6 * d,
+        "meshgraphnet": (3 * d) * d * 2 * cfg.mlp_layers,
+    }[cfg.arch]
+    return float(per_edge)
+
+
+def gnn_node_flops(cfg: gnn_mod.GNNConfig) -> float:
+    d = cfg.d_hidden
+    per_node = {
+        "graphsage": 2 * 2 * cfg.d_in * d + (cfg.n_layers - 1) * 4 * d * d,
+        "pna": 2 * (13 * d) * d * cfg.n_layers,
+        "gatedgcn": 3 * 2 * d * d * cfg.n_layers,
+        "meshgraphnet": (2 * d) * d * 2 * cfg.mlp_layers * cfg.n_layers,
+    }[cfg.arch]
+    return float(per_node)
+
+
+def _pad_to(n: int, m: int = 512) -> int:
+    """Round a node/edge count up to a shardable multiple (padding rows
+    are masked in real runs: self-loop edges / zero-weight labels)."""
+    return -(-n // m) * m
+
+
+def gnn_train_cell(
+    cfg: gnn_mod.GNNConfig,
+    opt_cfg: OptimizerConfig,
+    n_nodes: int,
+    n_edges: int,
+    d_feat: int,
+    n_graphs: int = 0,
+):
+    cell_cfg = cfg.replace(d_in=d_feat)
+    n_nodes_orig, n_edges_orig = n_nodes, n_edges
+    n_nodes, n_edges = _pad_to(n_nodes), _pad_to(n_edges)
+
+    def build(mesh) -> CellBuild:
+        needs_edge_feats = cell_cfg.arch in ("gatedgcn", "meshgraphnet")
+
+        def loss_fn(params, b):
+            ef = b.get("edge_feats")
+            if cell_cfg.task == "graph":
+                return gnn_mod.gnn_loss(
+                    params, cell_cfg, b["feats"], b["src"], b["dst"], b["labels"],
+                    edge_feats=ef, graph_ids=b["graph_ids"], n_graphs=n_graphs,
+                )
+            return gnn_mod.gnn_loss(
+                params, cell_cfg, b["feats"], b["src"], b["dst"], b["labels"],
+                edge_feats=ef,
+            )
+
+        step = make_train_step(loss_fn, opt_cfg)
+        state = jax.eval_shape(
+            lambda: init_train_state(
+                gnn_mod.init_gnn(jax.random.PRNGKey(0), cell_cfg), opt_cfg
+            )
+        )
+        batch = {
+            "feats": jax.ShapeDtypeStruct((n_nodes, d_feat), jnp.float32),
+            "src": jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+            "dst": jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+        }
+        vec = NamedSharding(mesh, gnn_data_spec(mesh, "vector"))
+        mat = NamedSharding(mesh, gnn_data_spec(mesh, "matrix"))
+        batch_sh = {"feats": mat, "src": vec, "dst": vec}
+        if needs_edge_feats:
+            batch["edge_feats"] = jax.ShapeDtypeStruct((n_edges, cell_cfg.d_edge_in), jnp.float32)
+            batch_sh["edge_feats"] = mat
+        if cell_cfg.task == "graph":
+            batch["graph_ids"] = jax.ShapeDtypeStruct((n_nodes,), jnp.int32)
+            batch["labels"] = jax.ShapeDtypeStruct((n_graphs,), jnp.int32)
+            batch_sh["graph_ids"] = vec
+            batch_sh["labels"] = vec
+        elif cell_cfg.task == "regression":
+            batch["labels"] = jax.ShapeDtypeStruct((n_nodes, cell_cfg.d_out), jnp.float32)
+            batch_sh["labels"] = mat
+        else:
+            batch["labels"] = jax.ShapeDtypeStruct((n_nodes,), jnp.int32)
+            batch_sh["labels"] = vec
+        state_sh = tree_shardings(state, mesh, gnn_rule(mesh))
+        scalar = NamedSharding(mesh, P())
+        flops = 3.0 * (
+            gnn_flops_per_edge(cell_cfg) * n_edges_orig * cell_cfg.n_layers
+            + gnn_node_flops(cell_cfg) * n_nodes_orig
+        )
+        return CellBuild(
+            fn=step,
+            args=(state, batch),
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, {"loss": scalar, "grad_norm": scalar}),
+            donate_argnums=(0,),
+            model_flops=flops,
+        )
+
+    return build
+
+
+def gnn_minibatch_cell(
+    cfg: gnn_mod.GNNConfig,
+    opt_cfg: OptimizerConfig,
+    n_nodes: int,
+    d_feat: int,
+    batch_nodes: int,
+    fanouts: tuple,
+    n_classes: int,
+):
+    """Sampled-training cell: the sampler output (layered vertex ids) is
+    the batch; the resident feature table is gathered on device — the
+    sparse-frontier regime of HyTM (gather engine)."""
+    cell_cfg = cfg.replace(d_in=d_feat, sample_sizes=fanouts, d_out=n_classes)
+    n_nodes = _pad_to(n_nodes)
+
+    def build(mesh) -> CellBuild:
+        def loss_fn(params, b):
+            sizes = [batch_nodes]
+            for f in fanouts:
+                sizes.append(sizes[-1] * f)
+            layer_feats = [b["feats"][b[f"hop{k}"]] for k in range(len(sizes))]
+            logits = gnn_mod.graphsage_minibatch_forward(params, layer_feats, cell_cfg)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            return -jnp.mean(jnp.take_along_axis(logp, b["labels"][:, None], axis=-1))
+
+        step = make_train_step(loss_fn, opt_cfg)
+        state = jax.eval_shape(
+            lambda: init_train_state(
+                gnn_mod.init_gnn(jax.random.PRNGKey(0), cell_cfg), opt_cfg
+            )
+        )
+        batch = {"feats": jax.ShapeDtypeStruct((n_nodes, d_feat), jnp.float32)}
+        batch_sh = {"feats": NamedSharding(mesh, gnn_data_spec(mesh, "matrix"))}
+        size = batch_nodes
+        vec = NamedSharding(mesh, gnn_data_spec(mesh, "vector"))
+        batch["hop0"] = jax.ShapeDtypeStruct((size,), jnp.int32)
+        batch_sh["hop0"] = vec
+        for k, f in enumerate(fanouts):
+            size *= f
+            batch[f"hop{k + 1}"] = jax.ShapeDtypeStruct((size,), jnp.int32)
+            batch_sh[f"hop{k + 1}"] = vec
+        batch["labels"] = jax.ShapeDtypeStruct((batch_nodes,), jnp.int32)
+        batch_sh["labels"] = vec
+        state_sh = tree_shardings(state, mesh, gnn_rule(mesh))
+        scalar = NamedSharding(mesh, P())
+        total_gathered = sum(
+            batch_nodes * int(jnp.prod(jnp.asarray(fanouts[:k] or (1,))))
+            for k in range(len(fanouts) + 1)
+        )
+        flops = 3.0 * total_gathered * 4 * cell_cfg.d_hidden * max(d_feat, cell_cfg.d_hidden)
+        return CellBuild(
+            fn=step,
+            args=(state, batch),
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, {"loss": scalar, "grad_norm": scalar}),
+            donate_argnums=(0,),
+            model_flops=flops,
+        )
+
+    return build
+
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(n_nodes=2708, n_edges=10556, d_feat=1433),
+    "minibatch_lg": dict(n_nodes=232965, n_edges=114615892, batch_nodes=1024, fanout=(15, 10)),
+    "ogb_products": dict(n_nodes=2449029, n_edges=61859140, d_feat=100),
+    "molecule": dict(n_nodes=30, n_edges=64, batch=128),
+}
+
+
+def standard_gnn_arch(name: str, cfg: gnn_mod.GNNConfig, opt_cfg: OptimizerConfig) -> ArchSpec:
+    """The four GNN shape cells.  minibatch_lg uses the real neighbour
+    sampler for all archs (fanout sampling is aggregation-agnostic); the
+    GraphSAGE estimator path is exercised arch-natively, other archs
+    train on the sampled block as an edge-list subgraph."""
+    s = GNN_SHAPES
+    mol_nodes = s["molecule"]["batch"] * s["molecule"]["n_nodes"]
+    mol_edges = s["molecule"]["batch"] * s["molecule"]["n_edges"] * 2  # undirected
+    if cfg.task == "regression":
+        mol_cfg = cfg.replace(d_out=3)
+    else:
+        mol_cfg = cfg.replace(task="graph", d_out=2)
+
+    cells = {
+        "full_graph_sm": gnn_train_cell(
+            cfg.replace(d_out=7), opt_cfg,
+            s["full_graph_sm"]["n_nodes"], s["full_graph_sm"]["n_edges"],
+            s["full_graph_sm"]["d_feat"],
+        ),
+        "ogb_products": gnn_train_cell(
+            cfg.replace(d_out=47), opt_cfg,
+            s["ogb_products"]["n_nodes"], s["ogb_products"]["n_edges"],
+            s["ogb_products"]["d_feat"],
+        ),
+        "molecule": gnn_train_cell(
+            mol_cfg, opt_cfg, mol_nodes, mol_edges, 16,
+            n_graphs=s["molecule"]["batch"],
+        ),
+    }
+    if cfg.arch == "graphsage":
+        cells["minibatch_lg"] = gnn_minibatch_cell(
+            cfg, opt_cfg, s["minibatch_lg"]["n_nodes"], 602,
+            s["minibatch_lg"]["batch_nodes"], s["minibatch_lg"]["fanout"], 41,
+        )
+    else:
+        # sampled subgraph as an edge list: batch_nodes seeds + full fanout
+        # closure => 1024 * (1 + 15 + 150) nodes, edges = sampled arcs
+        nodes = s["minibatch_lg"]["batch_nodes"] * (1 + 15 + 15 * 10)
+        edges = s["minibatch_lg"]["batch_nodes"] * (15 + 15 * 10)
+        mb_cfg = cfg.replace(d_out=41) if cfg.task != "regression" else cfg.replace(d_out=3)
+        cells["minibatch_lg"] = gnn_train_cell(mb_cfg, opt_cfg, nodes, edges, 602)
+    return ArchSpec(name=name, family="gnn", cells=cells, model_config=cfg)
+
+
+# -------------------------------------------------------------- DLRM cells
+
+def dlrm_train_cell(cfg, opt_cfg: OptimizerConfig, batch: int):
+    def build(mesh) -> CellBuild:
+        loss_fn = lambda p, b: dlrm_mod.dlrm_loss(p, b["dense"], b["sparse"], b["labels"], cfg)
+        step = make_train_step(loss_fn, opt_cfg)
+        state = jax.eval_shape(
+            lambda: init_train_state(dlrm_mod.init_dlrm(jax.random.PRNGKey(0), cfg), opt_cfg)
+        )
+        ba = batch_axes(mesh)
+        batch_specs = {
+            "dense": jax.ShapeDtypeStruct((batch, cfg.n_dense), jnp.float32),
+            "sparse": jax.ShapeDtypeStruct((batch, cfg.n_sparse), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch,), jnp.float32),
+        }
+        bsh = {
+            "dense": NamedSharding(mesh, P(ba, None)),
+            "sparse": NamedSharding(mesh, P(ba, None)),
+            "labels": NamedSharding(mesh, P(ba)),
+        }
+        state_sh = tree_shardings(state, mesh, dlrm_rule(mesh))
+        scalar = NamedSharding(mesh, P())
+        return CellBuild(
+            fn=step,
+            args=(state, batch_specs),
+            in_shardings=(state_sh, bsh),
+            out_shardings=(state_sh, {"loss": scalar, "grad_norm": scalar}),
+            donate_argnums=(0,),
+            model_flops=3.0 * batch * _dlrm_fwd_flops(cfg),
+        )
+
+    return build
+
+
+def _dlrm_fwd_flops(cfg) -> float:
+    f = 0.0
+    dims = [cfg.n_dense, *cfg.bot_mlp]
+    f += sum(2 * dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+    f += cfg.n_sparse * cfg.multi_hot * cfg.embed_dim          # bag reduce
+    nf = cfg.n_sparse + 1
+    f += 2 * nf * nf * cfg.embed_dim                            # interaction
+    dims = [cfg.embed_dim + cfg.n_interact_features, *cfg.top_mlp]
+    f += sum(2 * dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+    return f
+
+
+def dlrm_serve_cell(cfg, batch: int):
+    def build(mesh) -> CellBuild:
+        fn = lambda p, d, s: dlrm_mod.dlrm_forward(p, d, s, cfg)
+        params = dlrm_mod.abstract_dlrm_params(cfg)
+        ba = batch_axes(mesh)
+        args = (
+            params,
+            jax.ShapeDtypeStruct((batch, cfg.n_dense), jnp.float32),
+            jax.ShapeDtypeStruct((batch, cfg.n_sparse), jnp.int32),
+        )
+        in_sh = (
+            tree_shardings(params, mesh, dlrm_rule(mesh)),
+            NamedSharding(mesh, P(ba, None)),
+            NamedSharding(mesh, P(ba, None)),
+        )
+        return CellBuild(
+            fn=fn, args=args, in_shardings=in_sh,
+            out_shardings=NamedSharding(mesh, P(ba)),
+            model_flops=batch * _dlrm_fwd_flops(cfg),
+        )
+
+    return build
+
+
+def dlrm_retrieval_cell(cfg, batch: int, n_candidates: int, top_k: int = 100):
+    def build(mesh) -> CellBuild:
+        fn = lambda p, d, c: dlrm_mod.retrieval_score(p, d, c, top_k=top_k)
+        params = dlrm_mod.abstract_dlrm_params(cfg)
+        args = (
+            params,
+            jax.ShapeDtypeStruct((batch, cfg.n_dense), jnp.float32),
+            jax.ShapeDtypeStruct((n_candidates, cfg.embed_dim), jnp.float32),
+        )
+        ba = batch_axes(mesh)
+        in_sh = (
+            tree_shardings(params, mesh, dlrm_rule(mesh)),
+            NamedSharding(mesh, P(None, None)),
+            NamedSharding(mesh, P(ba, None)),   # candidates sharded
+        )
+        out_sh = NamedSharding(mesh, P())  # single spec broadcast to (scores, ids)
+        return CellBuild(
+            fn=fn, args=args, in_shardings=in_sh, out_shardings=out_sh,
+            model_flops=2.0 * batch * n_candidates * cfg.embed_dim,
+        )
+
+    return build
+
+
+# ------------------------------------------------------- smoke reduction
+
+import dataclasses
+
+
+def reduce_lm_config(cfg: tf_mod.TransformerConfig) -> tf_mod.TransformerConfig:
+    """Reduced smoke config: shrink dims, keep the family's structure
+    (MQA/MLA/MoE/windows) — used by per-arch smoke tests and the local
+    train/serve launchers."""
+    kw = dict(
+        n_layers=min(cfg.n_layers, 3 if cfg.moe else 4),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads > 1 else 1,
+        d_head=16,
+        d_ff=128,
+        vocab=211,
+        dtype="float32",
+        param_dtype="float32",
+        d_ff_dense=128 if cfg.d_ff_dense else 0,
+    )
+    if cfg.window_pattern != (0,):
+        kw["window_pattern"] = (4, 4, 0)
+    if cfg.mla is not None:
+        kw["mla"] = dataclasses.replace(cfg.mla, kv_lora=32, d_nope=16, d_rope=8, d_v=16)
+    if cfg.moe is not None:
+        kw["moe"] = cfg.moe.replace(
+            n_experts=8, top_k=min(cfg.moe.top_k, 2), d_ff=32,
+            d_ff_shared=0, capacity_factor=4.0, chunk_tokens=0,
+        )
+        kw["first_dense_layers"] = min(cfg.first_dense_layers, 1)
+    return cfg.replace(**kw)
+
+

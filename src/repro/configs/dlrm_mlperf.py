@@ -1,0 +1,36 @@
+"""dlrm-mlperf [arXiv:1906.00091; paper] — MLPerf DLRM (Criteo 1TB).
+
+13 dense + 26 sparse features, embed_dim=128, bottom 13-512-256-128,
+top 1024-1024-512-256-1, dot interaction.  ~188M embedding rows,
+row-sharded over ('data','model') (dist/sharding.py)."""
+
+from repro.configs.common import (
+    ArchSpec,
+    dlrm_retrieval_cell,
+    dlrm_serve_cell,
+    dlrm_train_cell,
+)
+from repro.models.dlrm import MLPERF_VOCAB_SIZES, DLRMConfig
+from repro.train.optimizer import OptimizerConfig
+
+# Row-sharded tables are padded to a shardable multiple (512 covers every
+# mesh: 16x16 and 2x16x16); small tables stay replicated and unpadded.
+_PADDED_VOCABS = tuple(
+    (-(-v // 512) * 512) if v >= 4096 else v for v in MLPERF_VOCAB_SIZES
+)
+
+CONFIG = DLRMConfig(vocab_sizes=_PADDED_VOCABS)
+
+OPT = OptimizerConfig(name="adamw", learning_rate=1e-3, warmup_steps=100)
+
+ARCH = ArchSpec(
+    name="dlrm-mlperf",
+    family="recsys",
+    cells={
+        "train_batch": dlrm_train_cell(CONFIG, OPT, 65536),
+        "serve_p99": dlrm_serve_cell(CONFIG, 512),
+        "serve_bulk": dlrm_serve_cell(CONFIG, 262144),
+        "retrieval_cand": dlrm_retrieval_cell(CONFIG, 1, 1_000_000),
+    },
+    model_config=CONFIG,
+)

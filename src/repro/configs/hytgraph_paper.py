@@ -1,0 +1,30 @@
+"""The paper's own workload as an arch: the HyTM graph-analytics engine.
+
+Not one of the 40 assigned cells — a bonus config so ``--arch hytgraph``
+drives the reproduction itself (SSSP / BFS / CC / PageRank over RMAT)
+through the same launcher.
+"""
+
+from dataclasses import dataclass
+
+from repro.configs.common import ArchSpec
+from repro.core.hytm import HyTMConfig
+
+
+@dataclass(frozen=True)
+class HyTGraphWorkload:
+    algorithm: str = "sssp"
+    n_nodes: int = 100_000
+    n_edges: int = 1_600_000
+    n_partitions: int = 64
+    hytm: HyTMConfig = HyTMConfig(n_partitions=64)
+
+
+CONFIG = HyTGraphWorkload()
+
+ARCH = ArchSpec(
+    name="hytgraph",
+    family="graph",
+    cells={},  # driven by examples/quickstart.py + benchmarks, not dryrun
+    model_config=CONFIG,
+)

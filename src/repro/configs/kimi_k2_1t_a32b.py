@@ -1,0 +1,40 @@
+"""kimi-k2-1t-a32b [arXiv:2501.kimi2; unverified] — trillion-param MoE.
+
+61L d_model=7168 64H (GQA kv=8) expert d_ff=2048 vocab=163840,
+MoE 384 routed experts top-8; first layer dense (d_ff=18432, as in the
+DeepSeek-V3/K2 family).  ~1.04T total params, ~32B active.
+
+Memory plan (DESIGN.md §5): bf16 params + Adafactor (factored second
+moments) keep params+opt+grads within a 512-chip v5e slice; activations
+bound by layer remat + token-chunked MoE dispatch.
+"""
+
+from repro.configs.common import standard_lm_arch
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig
+from repro.train.optimizer import OptimizerConfig
+
+CONFIG = TransformerConfig(
+    name="kimi-k2-1t-a32b",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=2048,
+    vocab=163840,
+    moe=MoEConfig(
+        n_experts=384, top_k=8, d_ff=2048, n_shared=0,
+        capacity_factor=1.25, dispatch="sorted", chunk_tokens=4096,
+    ),
+    first_dense_layers=1,
+    d_ff_dense=18432,
+    tie_embeddings=False,
+    param_dtype="bfloat16",
+)
+
+OPT = OptimizerConfig(name="adafactor", learning_rate=2e-4, warmup_steps=2000)
+
+ARCH = standard_lm_arch(
+    "kimi-k2-1t-a32b", CONFIG, OPT, microbatches=8, grad_accum_dtype="bfloat16"
+)

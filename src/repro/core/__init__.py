@@ -1,0 +1,11 @@
+"""HyTM core — the paper's contribution (cost model, engines, scheduling)."""
+
+from repro.core.constants import PCIE3, TPU_V5E_HBM, TPU_V5E_ICI, LinkModel
+from repro.core.cost_model import COMPACT, FILTER, NONE, ZEROCOPY
+from repro.core.hytm import HyTMConfig, HyTMResult, build_runtime, run_hytm
+
+__all__ = [
+    "PCIE3", "TPU_V5E_HBM", "TPU_V5E_ICI", "LinkModel",
+    "COMPACT", "FILTER", "NONE", "ZEROCOPY",
+    "HyTMConfig", "HyTMResult", "build_runtime", "run_hytm",
+]

@@ -1,0 +1,120 @@
+"""The three transfer/processing engines (paper §II-B/C, Fig. 2).
+
+All three engines relax the *same* active edges and must produce identical
+results; they differ in how the edge bytes travel from the big memory to
+the compute units:
+
+* ``FILTER``   — stream the whole partition block contiguously (cudaMemcpy
+  analogue; on TPU: dense (8,128)-tiled HBM->VMEM DMA, `kernels/segment_spmm`).
+  Inactive edges ride along and are masked in compute.
+* ``COMPACT``  — first squeeze the active edges to the front of the block
+  (prefix-sum stream compaction; the paper's CPU pass becomes an on-device
+  pass, `kernels/frontier_compact`), then stream only the dense prefix.
+* ``ZEROCOPY`` — fine-grained per-vertex gathers of neighbour segments
+  straight from the big memory (`kernels/hyb_gather`): no redundancy, no
+  extra pass, but request-granular bandwidth.
+
+The pure-JAX implementations below are the semantic oracles: `filter` is a
+masked dense block, `compact` really sorts active edges to the front and
+relaxes the prefix, `zerocopy` gathers edge ids through a take (random
+access).  ``lax.switch`` executes exactly one path per partition.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.algorithms import MIN, VertexProgram
+
+
+class EdgeBlock(NamedTuple):
+    """One partition's (padded) edge block."""
+
+    src: jax.Array      # (B,) int32
+    dst: jax.Array      # (B,) int32
+    weight: jax.Array   # (B,) float32
+    active: jax.Array   # (B,) bool — source active AND edge in partition
+
+
+class RelaxOut(NamedTuple):
+    agg: jax.Array       # (n,) combined messages
+    touched: jax.Array   # (n,) bool — destinations receiving any message
+
+
+def _messages(block: EdgeBlock, operand: jax.Array, program: VertexProgram) -> jax.Array:
+    """Per-edge messages; inactive lanes emit the combiner identity."""
+    src_op = operand[block.src]
+    msg = program.edge_message(src_op, block.weight)
+    identity = jnp.inf if program.combine == MIN else 0.0
+    return jnp.where(block.active, msg, identity)
+
+
+def _combine(block: EdgeBlock, msg: jax.Array, n: int, program: VertexProgram) -> RelaxOut:
+    if program.combine == MIN:
+        agg = jax.ops.segment_min(msg, block.dst, num_segments=n)
+        touched = jnp.isfinite(agg)
+    else:
+        agg = jax.ops.segment_sum(msg, block.dst, num_segments=n)
+        got = jax.ops.segment_sum(
+            block.active.astype(jnp.float32), block.dst, num_segments=n
+        )
+        touched = got > 0
+    return RelaxOut(agg=agg, touched=touched)
+
+
+# ------------------------------------------------------------------ engines
+
+def relax_filter(block: EdgeBlock, operand: jax.Array, n: int, program: VertexProgram) -> RelaxOut:
+    """Whole-block masked relax (dense stream)."""
+    return _combine(block, _messages(block, operand, program), n, program)
+
+
+def relax_compact(block: EdgeBlock, operand: jax.Array, n: int, program: VertexProgram) -> RelaxOut:
+    """Compact active edges to the front (stable), then relax the prefix.
+
+    The sort is the on-device analogue of the paper's CPU compaction pass:
+    after it, the active edges occupy a dense prefix, which is what the
+    downstream dense kernel would stream.  Correctness is unaffected by
+    the permutation (combiners are commutative).
+    """
+    order = jnp.argsort(~block.active, stable=True)
+    compacted = EdgeBlock(
+        src=block.src[order],
+        dst=block.dst[order],
+        weight=block.weight[order],
+        active=block.active[order],
+    )
+    return _combine(compacted, _messages(compacted, operand, program), n, program)
+
+
+def relax_zerocopy(block: EdgeBlock, operand: jax.Array, n: int, program: VertexProgram) -> RelaxOut:
+    """Fine-grained gather relax: edge fields are re-fetched through an
+    explicit random-access ``take`` (per-request access pattern), then
+    combined.  Semantically identical; access pattern is the ZC one."""
+    idx = jnp.arange(block.src.shape[0], dtype=jnp.int32)
+    gathered = EdgeBlock(
+        src=jnp.take(block.src, idx),
+        dst=jnp.take(block.dst, idx),
+        weight=jnp.take(block.weight, idx),
+        active=jnp.take(block.active, idx),
+    )
+    return _combine(gathered, _messages(gathered, operand, program), n, program)
+
+
+ENGINE_FNS = (relax_filter, relax_compact, relax_zerocopy)
+
+
+def relax_with_engine(
+    engine_id: jax.Array,  # scalar int32: 0 filter / 1 compact / 2 zerocopy
+    block: EdgeBlock,
+    operand: jax.Array,
+    n: int,
+    program: VertexProgram,
+) -> RelaxOut:
+    return jax.lax.switch(
+        jnp.clip(engine_id, 0, 2),
+        [lambda b=b: ENGINE_FNS[b](block, operand, n, program) for b in range(3)],
+    )

@@ -1,0 +1,336 @@
+"""HyTM engine orchestration — ties cost model, task generation, and
+asynchronous scheduling into the iterate-until-convergence loop (paper
+Fig. 5: cost-aware task generation <-> asynchronous task scheduling).
+
+One *iteration* is a single jitted function:
+
+  1. per-partition activity stats      (segment reductions, on device)
+  2. cost model + engine selection     (Eqs. 1-3, Algorithm 1)
+  3. task combination                  (merged task count -> launch overhead)
+  4. priority schedule                 (hub / delta contribution-driven order)
+  5. asynchronous sweep                (scan over partitions in priority
+     order; each partition relaxes through its selected engine against the
+     *current* values — later partitions see earlier updates)
+  6. recompute-once second pass        (loaded priority partitions, no
+     additional transfer)
+
+The convergence loop runs on host (the per-iteration frontier population
+is the loop condition — the same device->host sync real GPU frameworks
+do), collecting the per-iteration history that feeds the Fig-7 execution
+path, Table-VI transfer volume, and Table-V runtime analyses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.constants import PCIE3, LinkModel
+from repro.core.cost_model import (
+    COMPACT,
+    FILTER,
+    NONE,
+    ZEROCOPY,
+    partition_stats,
+    zc_request_counts,
+)
+from repro.core.engines import EdgeBlock, relax_with_engine
+from repro.core.partition import (
+    DevicePartitions,
+    PartitionTable,
+    partition_graph,
+    to_device_partitions,
+)
+from repro.core.scheduler import make_schedule
+from repro.core.task_generation import TaskPlan, forced_engine_plan, generate_tasks
+from repro.graph.algorithms import MIN, SUM, VertexProgram
+from repro.graph.csr import CSRGraph, DeviceCSR, to_device_csr
+
+
+@dataclass(frozen=True)
+class HyTMConfig:
+    link: LinkModel = PCIE3
+    n_partitions: int | None = None
+    partition_bytes: int = 32 * 2**20  # paper default: 32 MB partitions
+    async_sweep: bool = True
+    cds_mode: str = "hub"  # 'hub' | 'delta' | 'none'
+    enable_task_combination: bool = True
+    recompute_once: bool = True
+    combine_k: int = 4
+    max_iters: int = 10_000
+    forced_engine: int | None = None  # force a single engine (baselines)
+    hub_fraction: float = 0.08
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class HyTMState:
+    values: jax.Array   # (n,) f32
+    delta: jax.Array    # (n,) f32 (accumulative programs)
+    frontier: jax.Array  # (n,) bool
+
+
+@dataclass
+class Runtime:
+    """Device-resident inputs shared by every iteration."""
+
+    csr: DeviceCSR
+    parts: DevicePartitions
+    zc_req: jax.Array          # (n,) float32
+    inv_deg: jax.Array         # (n,) float32 — 1/max(deg,1) (or 1/sum(w)
+                               # for weighted accumulative programs: PHP)
+    n_hub_partitions: int
+
+
+def build_runtime(
+    g: CSRGraph, config: HyTMConfig, n_hubs: int = 0, weighted_norm: bool = False
+) -> Runtime:
+    table: PartitionTable = partition_graph(
+        g, n_partitions=config.n_partitions,
+        partition_bytes=config.partition_bytes, d1=config.link.d1,
+    )
+    block = int(table.edges_per_partition.max(initial=1))
+    block = max(128, -(-block // 128) * 128)
+    capacity = -(-(g.n_edges + block) // 128) * 128
+    csr = to_device_csr(g, capacity=capacity)
+    parts = to_device_partitions(table, g.n_nodes, capacity)
+    assert parts.block_size <= block
+    zc_req = zc_request_counts(csr.out_degree, csr.seg_start, config.link)
+    if weighted_norm:
+        # accumulative programs over weighted edges (PHP) push
+        # delta * w_ij / sum_j w_ij — normalize by weighted out-degree so
+        # total mass is non-expanding.
+        wsum = jax.ops.segment_sum(
+            jnp.where(csr.edge_valid, csr.edge_weight, 0.0),
+            csr.edge_src, num_segments=g.n_nodes,
+        )
+        inv_deg = 1.0 / jnp.maximum(wsum, 1e-30)
+    else:
+        inv_deg = 1.0 / jnp.maximum(csr.out_degree.astype(jnp.float32), 1.0)
+    n_hub_parts = int(np.searchsorted(np.asarray(table.vertex_start), n_hubs, side="left"))
+    n_hub_parts = max(n_hub_parts, 1) if n_hubs > 0 else 0
+    return Runtime(
+        csr=csr, parts=parts, zc_req=zc_req, inv_deg=inv_deg,
+        n_hub_partitions=n_hub_parts,
+    )
+
+
+# --------------------------------------------------------------------------
+# One iteration (jitted)
+# --------------------------------------------------------------------------
+
+def _slice_block(arr: jax.Array, start: jax.Array, size: int) -> jax.Array:
+    return jax.lax.dynamic_slice_in_dim(arr, start, size)
+
+
+def _sweep(
+    state: HyTMState,
+    rt: Runtime,
+    program: VertexProgram,
+    engines: jax.Array,       # (P,) — NONE entries are skipped
+    order: jax.Array,         # (P,) processing order
+    frontier: jax.Array,      # (n,) sources active for this sweep
+    async_sweep: bool,
+    consume: str,             # 'all' (pass 1: every partition is visited)
+                              # | 'processed' (pass 2: only loaded ones)
+) -> tuple[HyTMState, jax.Array]:
+    """Scan partitions in priority order; returns new state + activated."""
+    n = rt.csr.n_nodes
+    B = rt.parts.block_size
+    values0, delta0 = state.values, state.delta
+
+    def body(carry, p):
+        values, delta, activated = carry
+        eng = engines[p]
+        start = rt.parts.edge_start[p]
+        local = jnp.arange(B, dtype=jnp.int32)
+        in_range = local < rt.parts.part_edges[p]
+        src = _slice_block(rt.csr.edge_src, start, B)
+        dst = _slice_block(rt.csr.edge_dst, start, B)
+        w = _slice_block(rt.csr.edge_weight, start, B)
+        processed = eng != NONE
+        active_lane = frontier[src] & in_range & processed
+        block = EdgeBlock(src=src, dst=dst, weight=w, active=active_lane)
+
+        if program.combine == SUM:
+            dsrc = delta if async_sweep else delta0
+            operand = program.damping * dsrc * rt.inv_deg
+        else:
+            operand = values if async_sweep else values0
+
+        out = relax_with_engine(eng, block, operand, n, program)
+
+        if program.combine == MIN:
+            improved = out.touched & (out.agg < values)
+            values = jnp.where(improved, out.agg, values)
+            activated = activated | improved
+        else:
+            # consumption (rank += delta) is vertex-local compute on
+            # accelerator-resident vertex data — it happens for every
+            # active vertex of the partition even when the partition has
+            # no active *edges* to transfer (deg-0 vertices would
+            # otherwise hold their delta forever and never converge).
+            in_part = rt.parts.vertex_part_id == p
+            if consume == "all":
+                consumed = frontier & in_part
+            else:  # pass 2 touches only the re-processed partitions
+                consumed = frontier & in_part & processed
+            # value absorbs the consumed delta; pending delta resets, then
+            # accumulates fresh contributions from this partition's edges.
+            values = values + jnp.where(consumed, delta if async_sweep else delta0, 0.0)
+            delta = jnp.where(consumed, 0.0, delta) + out.agg
+            activated = activated | out.touched
+        return (values, delta, activated), None
+
+    init = (values0, delta0, jnp.zeros(n, dtype=bool))
+    (values, delta, activated), _ = jax.lax.scan(body, init, order)
+    return HyTMState(values=values, delta=delta, frontier=state.frontier), activated
+
+
+@partial(
+    jax.jit,
+    static_argnames=("program", "config", "n_hub_partitions"),
+)
+def hytm_iteration(
+    state: HyTMState,
+    csr: DeviceCSR,
+    parts: DevicePartitions,
+    zc_req: jax.Array,
+    inv_deg: jax.Array,
+    program: VertexProgram,
+    config: HyTMConfig,
+    n_hub_partitions: int,
+) -> tuple[HyTMState, dict[str, Any]]:
+    rt = Runtime(csr=csr, parts=parts, zc_req=zc_req, inv_deg=inv_deg,
+                 n_hub_partitions=n_hub_partitions)
+    n = csr.n_nodes
+    frontier = state.frontier
+
+    # (1-3) stats -> costs -> engines -> combined tasks
+    stats = partition_stats(frontier, csr.out_degree, zc_req, parts)
+    if config.forced_engine is None:
+        plan: TaskPlan = generate_tasks(
+            stats, config.link, combine_k=config.combine_k,
+            enable_combination=config.enable_task_combination,
+        )
+    else:
+        plan = forced_engine_plan(
+            stats, config.link, config.forced_engine,
+            enable_combination=config.enable_task_combination,
+            combine_k=config.combine_k,
+        )
+
+    # (4) contribution-driven priority schedule
+    delta_mass = jax.ops.segment_sum(
+        jnp.abs(state.delta) * frontier, parts.vertex_part_id,
+        num_segments=parts.n_partitions,
+    )
+    mode = config.cds_mode if program.combine == SUM or config.cds_mode != "delta" else "delta"
+    sched = make_schedule(
+        plan.engines, delta_mass, n_hub_partitions, mode, config.recompute_once,
+    )
+
+    # (5) asynchronous sweep in priority order
+    state1, activated = _sweep(
+        state, rt, program, plan.engines, sched.order, frontier,
+        config.async_sweep, consume="all",
+    )
+
+    # (6) recompute-once: loaded priority partitions, zero extra transfer.
+    engines2 = jnp.where(sched.second_pass, plan.engines, NONE)
+    if program.combine == MIN:
+        frontier2 = frontier | activated
+    else:
+        frontier2 = state1.delta > program.tolerance
+    state2, activated2 = _sweep(
+        state1, rt, program, engines2, sched.order, frontier2,
+        config.async_sweep, consume="processed",
+    )
+    activated = activated | activated2
+
+    # next frontier
+    if program.combine == MIN:
+        next_frontier = activated
+    else:
+        next_frontier = state2.delta > program.tolerance
+    new_state = HyTMState(values=state2.values, delta=state2.delta, frontier=next_frontier)
+
+    info = {
+        "engines": plan.engines,
+        "transfer_bytes": plan.transfer_bytes,
+        "transfer_time": jnp.sum(plan.transfer_time)
+        + plan.n_tasks.astype(jnp.float32) * config.link.launch_overhead_s,
+        "n_tasks": plan.n_tasks,
+        "active_vertices": jnp.sum(frontier.astype(jnp.int32)),
+        "active_edges": jnp.sum(stats.active_edges),
+        "next_active": jnp.sum(next_frontier.astype(jnp.int32)),
+    }
+    return new_state, info
+
+
+# --------------------------------------------------------------------------
+# Convergence loop
+# --------------------------------------------------------------------------
+
+@dataclass
+class HyTMResult:
+    values: np.ndarray
+    delta: np.ndarray
+    iterations: int
+    wall_seconds: float
+    modeled_seconds: float
+    total_transfer_bytes: float
+    history: dict[str, np.ndarray]  # per-iteration arrays
+
+
+def run_hytm(
+    g: CSRGraph,
+    program: VertexProgram,
+    source: int | None = 0,
+    config: HyTMConfig = HyTMConfig(),
+    n_hubs: int = 0,
+    runtime: Runtime | None = None,
+) -> HyTMResult:
+    rt = runtime if runtime is not None else build_runtime(
+        g, config, n_hubs=n_hubs,
+        weighted_norm=program.use_delta and program.weighted,
+    )
+    values, delta, frontier = program.init_state(g.n_nodes, source)
+    state = HyTMState(values=values, delta=delta, frontier=frontier)
+
+    hist: dict[str, list] = {
+        "engines": [], "transfer_bytes": [], "transfer_time": [],
+        "active_vertices": [], "active_edges": [], "n_tasks": [],
+    }
+    t0 = time.monotonic()
+    iters = 0
+    for _ in range(config.max_iters):
+        state, info = hytm_iteration(
+            state, rt.csr, rt.parts, rt.zc_req, rt.inv_deg,
+            program, config, rt.n_hub_partitions,
+        )
+        iters += 1
+        for k in hist:
+            hist[k].append(np.asarray(info[k]))
+        if int(info["next_active"]) == 0:
+            break
+    jax.block_until_ready(state.values)
+    wall = time.monotonic() - t0
+
+    history = {k: np.stack(v) if np.ndim(v[0]) else np.asarray(v) for k, v in hist.items()}
+    return HyTMResult(
+        values=np.asarray(state.values),
+        delta=np.asarray(state.delta),
+        iterations=iters,
+        wall_seconds=wall,
+        modeled_seconds=float(np.sum(history["transfer_time"])),
+        total_transfer_bytes=float(np.sum(history["transfer_bytes"])),
+        history=history,
+    )

@@ -1,0 +1,72 @@
+"""Asynchronous task scheduling — paper §VI.
+
+Two pieces:
+
+1. **Contribution-driven priority** (§VI-A).  The processing *order* of
+   partitions within an iteration matters because the sweep is
+   asynchronous (later partitions read values already improved by earlier
+   ones).  Priorities:
+     * ``hub``  — hub-vertex-driven: after hub sorting, hub vertices live
+       in the lowest partition ids, so "hubs first" == ascending id.
+     * ``delta`` — Δ-driven (for accumulative programs): partitions with
+       the largest pending |Δ| mass first.
+   The paper schedules FILTER tasks first (they carry the priority), then
+   ZC / COMPACT tasks (§VI-B).
+
+2. **Recompute-once** (§VI-A): loaded (FILTER/COMPACT) priority partitions
+   are processed one extra time per iteration — data is already resident,
+   so the second pass costs no transfer (ZC partitions are excluded:
+   zero-copy has no reuse, §II-C).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_model import COMPACT, FILTER
+
+
+class Schedule(NamedTuple):
+    order: jax.Array          # (P,) permutation: processing order
+    second_pass: jax.Array    # (P,) bool — partitions re-processed once
+
+
+def _rank(keys: jax.Array) -> jax.Array:
+    """Dense rank of each element under ascending sort (stable)."""
+    order = jnp.argsort(keys, stable=True)
+    ranks = jnp.zeros_like(order)
+    return ranks.at[order].set(jnp.arange(order.shape[0], dtype=order.dtype))
+
+
+def make_schedule(
+    engines: jax.Array,        # (P,)
+    delta_mass: jax.Array,     # (P,) pending |delta| per partition
+    n_hub_partitions: int,
+    mode: str,                 # 'hub' | 'delta' | 'none'
+    recompute_once: bool,
+    second_pass_fraction: float = 0.125,
+) -> Schedule:
+    P = engines.shape[0]
+    pid = jnp.arange(P, dtype=jnp.int32)
+
+    if mode == "delta":
+        score = delta_mass
+        priority_mask = _rank(-delta_mass) < max(1, int(P * second_pass_fraction))
+    elif mode == "hub":
+        score = -pid.astype(jnp.float32)  # low id == hub partitions first
+        priority_mask = pid < n_hub_partitions
+    else:
+        score = jnp.zeros(P, dtype=jnp.float32)
+        priority_mask = jnp.zeros(P, dtype=bool)
+
+    # Engine tier: FILTER first (paper §VI-B), then ZC/COMPACT, skips last.
+    tier = jnp.where(engines == FILTER, 0, jnp.where(engines >= 0, 1, 2))
+    key = tier.astype(jnp.int32) * (2 * P) + _rank(-score).astype(jnp.int32)
+    order = jnp.argsort(key, stable=True).astype(jnp.int32)
+
+    loaded = (engines == FILTER) | (engines == COMPACT)
+    second = priority_mask & loaded if recompute_once else jnp.zeros(P, dtype=bool)
+    return Schedule(order=order, second_pass=second)

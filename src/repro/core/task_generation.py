@@ -1,0 +1,113 @@
+"""Cost-aware task generation — paper Algorithm 1 + §V-B task combination.
+
+Selection runs vectorized on-device (cost_model.py); this module adds the
+*task combination* accounting: HyTGraph decouples partition granularity
+(small, for fine cost analysis) from scheduling granularity:
+
+* consecutive FILTER partitions merge into tasks of at most ``k`` (k=4),
+* all COMPACT partitions merge into ONE task (their active edges are
+  written to one contiguous staging buffer),
+* all ZEROCOPY partitions merge into ONE kernel (implicit overlap).
+
+The merged task count drives the modeled per-task scheduling overhead
+(kernel launches / fragmented transfers) and the Fig-8 "TC" ablation.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.constants import LinkModel
+from repro.core.cost_model import (
+    COMPACT,
+    FILTER,
+    ZEROCOPY,
+    EngineCosts,
+    PartitionStats,
+    engine_costs,
+    modeled_time_seconds,
+    modeled_transfer_bytes,
+    select_engines,
+)
+
+
+class TaskPlan(NamedTuple):
+    engines: jax.Array        # (P,) int32 engine ids (NONE = skip)
+    n_tasks: jax.Array        # scalar — combined task count
+    transfer_bytes: jax.Array  # (P,) modeled bytes under chosen engine
+    transfer_time: jax.Array   # (P,) modeled seconds under chosen engine
+    costs: EngineCosts
+
+
+def _merged_filter_tasks(is_filter: jax.Array, k: int) -> jax.Array:
+    """Number of tasks after merging runs of consecutive FILTER partitions
+    into chunks of at most k (Algorithm 1 lines 15-24)."""
+
+    def step(carry, f):
+        run_len = carry
+        # a new task starts when f is set and run position hits a multiple of k
+        starts = f & (run_len % k == 0)
+        run_len = jnp.where(f, run_len + 1, 0)
+        return run_len, starts
+
+    _, starts = jax.lax.scan(step, jnp.int32(0), is_filter)
+    return jnp.sum(starts.astype(jnp.int32))
+
+
+def generate_tasks(
+    stats: PartitionStats,
+    link: LinkModel,
+    combine_k: int = 4,
+    enable_combination: bool = True,
+) -> TaskPlan:
+    costs = engine_costs(stats, link)
+    engines = select_engines(stats, costs, link)
+    active = engines >= 0
+    if enable_combination:
+        n_filter_tasks = _merged_filter_tasks(engines == FILTER, combine_k)
+        n_tasks = (
+            n_filter_tasks
+            + jnp.any(engines == COMPACT).astype(jnp.int32)
+            + jnp.any(engines == ZEROCOPY).astype(jnp.int32)
+        )
+    else:
+        n_tasks = jnp.sum(active.astype(jnp.int32))
+    return TaskPlan(
+        engines=engines,
+        n_tasks=n_tasks,
+        transfer_bytes=modeled_transfer_bytes(stats, engines, link),
+        transfer_time=modeled_time_seconds(costs, engines),
+        costs=costs,
+    )
+
+
+def forced_engine_plan(
+    stats: PartitionStats,
+    link: LinkModel,
+    engine: int,
+    enable_combination: bool = True,
+    combine_k: int = 4,
+) -> TaskPlan:
+    """Single-engine baseline plan (pure ExpTM-F / ExpTM-C / ImpTM-ZC
+    systems the paper compares against in Table V)."""
+    costs = engine_costs(stats, link)
+    engines = jnp.where(stats.active_edges > 0, engine, -1).astype(jnp.int32)
+    if enable_combination:
+        n_filter_tasks = _merged_filter_tasks(engines == FILTER, combine_k)
+        n_tasks = (
+            n_filter_tasks
+            + jnp.any(engines == COMPACT).astype(jnp.int32)
+            + jnp.any(engines == ZEROCOPY).astype(jnp.int32)
+        )
+    else:
+        n_tasks = jnp.sum((engines >= 0).astype(jnp.int32))
+    return TaskPlan(
+        engines=engines,
+        n_tasks=n_tasks,
+        transfer_bytes=modeled_transfer_bytes(stats, engines, link),
+        transfer_time=modeled_time_seconds(costs, engines),
+        costs=costs,
+    )

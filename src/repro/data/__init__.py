@@ -1,0 +1,5 @@
+"""Deterministic synthetic data pipelines (LM / GNN / RecSys)."""
+
+from repro.data.pipeline import GraphBatches, LMBatches, RecSysBatches
+
+__all__ = ["LMBatches", "GraphBatches", "RecSysBatches"]

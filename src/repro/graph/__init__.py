@@ -1,0 +1,23 @@
+"""Graph substrate: CSR containers, generators, partitioning, frontier ops.
+
+Everything the HyTM core (``repro.core``) consumes lives here.  Host-side
+preprocessing (generation, hub sorting, partitioning) is numpy; the runtime
+structures handed to jitted code are jnp pytrees.
+"""
+
+from repro.graph.csr import CSRGraph, DeviceCSR, csr_from_edges
+from repro.graph.generators import rmat_graph, uniform_graph, grid_mesh_graph, batched_molecule_graphs
+from repro.graph.hub_sort import hub_sort
+from repro.graph.sampler import sample_neighbors
+
+__all__ = [
+    "CSRGraph",
+    "DeviceCSR",
+    "csr_from_edges",
+    "rmat_graph",
+    "uniform_graph",
+    "grid_mesh_graph",
+    "batched_molecule_graphs",
+    "hub_sort",
+    "sample_neighbors",
+]

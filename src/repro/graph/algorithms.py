@@ -1,0 +1,163 @@
+"""Vertex-centric push-based programs (paper §II-A) + numpy references.
+
+A ``VertexProgram`` is the generic function the paper's Figure 1
+illustrates: each *active* vertex sends a message along its out-edges;
+messages combine at the destination with an associative-commutative
+combiner; updated destinations become active next iteration.
+
+Two families, matching the paper's two "typical active-vertex change
+patterns" (§III):
+
+* traversal / value-replacement (combine=min): SSSP, BFS, CC — active set
+  grows then shrinks.
+* accumulative (combine=sum): Δ-PageRank, PHP [41] — active set shrinks
+  monotonically; vertex carries (value, pending-Δ).
+
+TPU note: destination combining uses ``segment_min``/``segment_sum``
+(associative reductions) instead of GPU atomics — semantics identical for
+these combiners (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+MIN, SUM = 0, 1
+
+
+@dataclass(frozen=True)
+class VertexProgram:
+    name: str
+    combine: int  # MIN or SUM
+    # message emitted along an edge: f(source_operand, edge_weight) where
+    # source_operand is `values[src]` (traversal) or `delta[src]` (accum).
+    edge_message: Callable
+    # per-source normalization operand (accum programs divide by out-degree)
+    use_delta: bool = False
+    damping: float = 0.85
+    tolerance: float = 1e-3
+    weighted: bool = True
+
+    def init_state(self, n: int, source: int | None):
+        if self.use_delta:
+            values = jnp.zeros(n, dtype=jnp.float32)
+            delta = jnp.full(n, 1.0 - self.damping, dtype=jnp.float32)
+            frontier = jnp.ones(n, dtype=bool)
+        elif self.name == "cc":
+            values = jnp.arange(n, dtype=jnp.float32)
+            delta = jnp.zeros(n, dtype=jnp.float32)
+            frontier = jnp.ones(n, dtype=bool)
+        else:
+            values = jnp.full(n, jnp.inf, dtype=jnp.float32)
+            values = values.at[source].set(0.0)
+            delta = jnp.zeros(n, dtype=jnp.float32)
+            frontier = jnp.zeros(n, dtype=bool).at[source].set(True)
+        return values, delta, frontier
+
+
+def _sssp_msg(src_val, w):
+    return src_val + w
+
+
+def _bfs_msg(src_val, w):
+    return src_val + 1.0
+
+
+def _cc_msg(src_val, w):
+    return src_val
+
+
+def _pr_msg(src_delta_over_deg, w):
+    return src_delta_over_deg  # damping folded in by the engine
+
+
+def _php_msg(src_delta_over_deg, w):
+    return src_delta_over_deg * w
+
+
+SSSP = VertexProgram("sssp", MIN, _sssp_msg, weighted=True)
+BFS = VertexProgram("bfs", MIN, _bfs_msg, weighted=False)
+CC = VertexProgram("cc", MIN, _cc_msg, weighted=False)
+PAGERANK = VertexProgram("pagerank", SUM, _pr_msg, use_delta=True, weighted=False)
+PHP = VertexProgram("php", SUM, _php_msg, use_delta=True, weighted=True)
+
+ALGORITHMS = {p.name: p for p in (SSSP, BFS, CC, PAGERANK, PHP)}
+
+
+# --------------------------------------------------------------------------
+# Numpy references (oracles for tests / benchmarks)
+# --------------------------------------------------------------------------
+
+def reference_sssp(g: CSRGraph, source: int) -> np.ndarray:
+    """Bellman-Ford over CSR (handles arbitrary positive weights)."""
+    dist = np.full(g.n_nodes, np.inf, dtype=np.float64)
+    dist[source] = 0.0
+    src = g.edge_sources()
+    w = g.weights if g.weights is not None else np.ones(g.n_edges, dtype=np.float64)
+    for _ in range(g.n_nodes):
+        cand = dist[src] + w
+        new = dist.copy()
+        np.minimum.at(new, g.indices, cand)
+        if np.allclose(new, dist, equal_nan=True):
+            break
+        dist = new
+    return dist
+
+
+def reference_bfs(g: CSRGraph, source: int) -> np.ndarray:
+    level = np.full(g.n_nodes, np.inf)
+    level[source] = 0
+    frontier = np.array([source])
+    depth = 0
+    while len(frontier):
+        depth += 1
+        nxt = []
+        for u in frontier:
+            nbrs = g.indices[g.indptr[u]:g.indptr[u + 1]]
+            fresh = nbrs[level[nbrs] == np.inf]
+            level[fresh] = depth
+            nxt.append(np.unique(fresh))
+        frontier = np.concatenate(nxt) if nxt else np.array([], dtype=np.int64)
+        frontier = np.unique(frontier)
+    return level
+
+
+def reference_cc(g: CSRGraph) -> np.ndarray:
+    """Min-label propagation on the symmetrized graph (matches the device
+    program's semantics: component id = min vertex id in component)."""
+    sym = g.symmetrize()
+    label = np.arange(sym.n_nodes, dtype=np.int64)
+    src = sym.edge_sources()
+    changed = True
+    while changed:
+        cand = label[src]
+        new = label.copy()
+        np.minimum.at(new, sym.indices, cand)
+        new = np.minimum(new, label)
+        changed = not np.array_equal(new, label)
+        label = new
+    return label
+
+
+def reference_pagerank(g: CSRGraph, damping: float = 0.85, iters: int = 200) -> np.ndarray:
+    """Unnormalized PR matching Δ-PR semantics: r = (1-d)·1 + d·AᵀD⁻¹r,
+    dangling mass dropped (same as push-based Δ-PR over out-edges)."""
+    n = g.n_nodes
+    deg = np.maximum(g.out_degrees.astype(np.float64), 1)
+    src = g.edge_sources()
+    r = np.full(n, 1.0 - damping)
+    for _ in range(iters):
+        contrib = damping * r[src] / deg[src]
+        nxt = np.full(n, 1.0 - damping)
+        np.add.at(nxt, g.indices, contrib)
+        if np.max(np.abs(nxt - r)) < 1e-10:
+            r = nxt
+            break
+        r = nxt
+    return r

@@ -1,0 +1,185 @@
+"""CSR graph containers.
+
+``CSRGraph`` is the host-side (numpy) container used by preprocessing:
+generation, hub sorting, partitioning, and reference algorithms.
+
+``DeviceCSR`` is the device-side pytree consumed by jitted HyTM code.  It
+carries, in addition to the CSR triplet, the *expanded source array*
+(``edge_src``, the COO row index of every edge).  The paper's push-based
+engines relax each active edge ``(u -> v, w)`` as ``msg = f(val[u], w)``;
+with ``edge_src`` resident this becomes a flat gather over edge blocks,
+which is the TPU-friendly layout (contiguous (8,128)-tileable streams)
+instead of a per-vertex pointer chase.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class CSRGraph:
+    """Host-side CSR graph. ``indptr[v]:indptr[v+1]`` are v's out-edges."""
+
+    indptr: np.ndarray  # (n+1,) int64
+    indices: np.ndarray  # (m,)  int32 — destination of each out-edge
+    weights: np.ndarray | None = None  # (m,) float32
+
+    def __post_init__(self):
+        self.indptr = np.asarray(self.indptr, dtype=np.int64)
+        self.indices = np.asarray(self.indices, dtype=np.int32)
+        if self.weights is not None:
+            self.weights = np.asarray(self.weights, dtype=np.float32)
+
+    # ------------------------------------------------------------------ stats
+    @property
+    def n_nodes(self) -> int:
+        return len(self.indptr) - 1
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.indptr[-1])
+
+    @property
+    def out_degrees(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int64)
+
+    @property
+    def in_degrees(self) -> np.ndarray:
+        return np.bincount(self.indices, minlength=self.n_nodes).astype(np.int64)
+
+    def edge_sources(self) -> np.ndarray:
+        """COO row index for every edge ('expanded' indptr)."""
+        return np.repeat(
+            np.arange(self.n_nodes, dtype=np.int32), self.out_degrees
+        )
+
+    # ------------------------------------------------------------- transforms
+    def transpose(self) -> "CSRGraph":
+        """Reverse every edge (used to derive pull-direction / in-degrees)."""
+        src = self.edge_sources()
+        return csr_from_edges(
+            self.n_nodes, self.indices.astype(np.int64), src.astype(np.int64),
+            self.weights,
+        )
+
+    def symmetrize(self) -> "CSRGraph":
+        """Union of the graph and its transpose (CC runs on this)."""
+        src = self.edge_sources().astype(np.int64)
+        dst = self.indices.astype(np.int64)
+        s = np.concatenate([src, dst])
+        d = np.concatenate([dst, src])
+        w = None
+        if self.weights is not None:
+            w = np.concatenate([self.weights, self.weights])
+        return csr_from_edges(self.n_nodes, s, d, w, dedup=True)
+
+    def permute(self, perm: np.ndarray) -> "CSRGraph":
+        """Relabel vertices: new id of old vertex v is ``perm[v]``.
+
+        Edge (u, v, w) becomes (perm[u], perm[v], w).  Used by hub sorting.
+        """
+        src = perm[self.edge_sources().astype(np.int64)]
+        dst = perm[self.indices.astype(np.int64)]
+        return csr_from_edges(self.n_nodes, src, dst, self.weights)
+
+    def validate(self) -> None:
+        assert self.indptr[0] == 0
+        assert np.all(np.diff(self.indptr) >= 0), "indptr must be monotone"
+        assert self.indptr[-1] == len(self.indices)
+        if len(self.indices):
+            assert self.indices.min() >= 0
+            assert self.indices.max() < self.n_nodes
+        if self.weights is not None:
+            assert len(self.weights) == len(self.indices)
+
+
+def csr_from_edges(
+    n_nodes: int,
+    src: np.ndarray,
+    dst: np.ndarray,
+    weights: np.ndarray | None = None,
+    dedup: bool = False,
+) -> CSRGraph:
+    """Build a CSR graph from COO edge lists (host-side, O(m log m))."""
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if dedup:
+        key = src * n_nodes + dst
+        _, uniq_idx = np.unique(key, return_index=True)
+        src, dst = src[uniq_idx], dst[uniq_idx]
+        if weights is not None:
+            weights = np.asarray(weights)[uniq_idx]
+    order = np.lexsort((dst, src))
+    src, dst = src[order], dst[order]
+    if weights is not None:
+        weights = np.asarray(weights, dtype=np.float32)[order]
+    counts = np.bincount(src, minlength=n_nodes)
+    indptr = np.zeros(n_nodes + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return CSRGraph(indptr=indptr, indices=dst.astype(np.int32), weights=weights)
+
+
+# --------------------------------------------------------------------------
+# Device-side structure
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class DeviceCSR:
+    """Device-resident CSR + expanded COO rows, padded to static shapes.
+
+    Layout mirrors the paper's residency split: the *vertex-associated*
+    arrays (``indptr`` analogue: ``out_degree``/``seg_start``, activity and
+    values live with the HyTM state) are small; the *edge-associated* arrays
+    (``edge_src``, ``edge_dst``, ``edge_weight``) are the large streams whose
+    movement HyTM manages.
+
+    Edges are padded to ``capacity`` with self-loops on vertex 0 and weight
+    +inf (traversal) so padding never relaxes anything; ``edge_valid`` masks
+    them explicitly for sum-combine algorithms.
+    """
+
+    edge_src: jax.Array  # (capacity,) int32
+    edge_dst: jax.Array  # (capacity,) int32
+    edge_weight: jax.Array  # (capacity,) float32
+    edge_valid: jax.Array  # (capacity,) bool
+    out_degree: jax.Array  # (n,) int32
+    seg_start: jax.Array  # (n,) int32 — indptr[:-1]: start of v's edge segment
+    n_nodes: int = dataclasses.field(metadata=dict(static=True))
+    n_edges: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def capacity(self) -> int:
+        return self.edge_src.shape[0]
+
+
+def to_device_csr(g: CSRGraph, capacity: int | None = None, pad_multiple: int = 1024) -> DeviceCSR:
+    """Upload a host CSR to a padded device structure."""
+    m = g.n_edges
+    if capacity is None:
+        capacity = max(pad_multiple, -(-m // pad_multiple) * pad_multiple)
+    assert capacity >= m
+    src = np.zeros(capacity, dtype=np.int32)
+    dst = np.zeros(capacity, dtype=np.int32)
+    w = np.full(capacity, np.float32(np.inf), dtype=np.float32)
+    valid = np.zeros(capacity, dtype=bool)
+    src[:m] = g.edge_sources()
+    dst[:m] = g.indices
+    w[:m] = g.weights if g.weights is not None else 1.0
+    valid[:m] = True
+    return DeviceCSR(
+        edge_src=jnp.asarray(src),
+        edge_dst=jnp.asarray(dst),
+        edge_weight=jnp.asarray(w),
+        edge_valid=jnp.asarray(valid),
+        out_degree=jnp.asarray(g.out_degrees, dtype=jnp.int32),
+        seg_start=jnp.asarray(g.indptr[:-1], dtype=jnp.int32),
+        n_nodes=g.n_nodes,
+        n_edges=m,
+    )

@@ -1,0 +1,75 @@
+"""Fanout neighbour sampling (GraphSAGE [arXiv:1706.02216] minibatch path).
+
+The `minibatch_lg` shape cell requires a *real* neighbour sampler: given a
+CSR graph, seed nodes, and a fanout list (e.g. 15-10), draw a fixed number
+of neighbours per layer with replacement (the GraphSAGE estimator).  Static
+output shapes make the result directly jittable.
+
+Two implementations with identical semantics:
+  * ``sample_neighbors`` — host-side numpy (data-pipeline path).
+  * ``sample_neighbors_device`` — jnp/jax.random (in-step path; used when
+    the CSR fits on device, e.g. reddit-scale).
+Zero-degree vertices sample themselves (self-loop fallback) so downstream
+aggregation never sees invalid ids.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+
+def sample_neighbors(
+    g: CSRGraph,
+    seeds: np.ndarray,
+    fanouts: Sequence[int],
+    seed: int = 0,
+) -> list[np.ndarray]:
+    """Layered sampling. Returns ``[seeds, hop1, hop2, ...]`` where
+    ``hop_k`` has shape ``seeds.shape + (fanouts[0], ..., fanouts[k-1])``
+    flattened to ``(n_prev * fanout_k,)`` row-major."""
+    rng = np.random.default_rng(seed)
+    deg = g.out_degrees
+    layers = [np.asarray(seeds, dtype=np.int64)]
+    frontier = layers[0]
+    for f in fanouts:
+        d = deg[frontier]
+        offs = rng.integers(0, np.maximum(d, 1)[:, None], size=(len(frontier), f))
+        base = g.indptr[frontier][:, None]
+        eids = base + offs
+        nbrs = g.indices[np.minimum(eids, g.n_edges - 1)].astype(np.int64)
+        # self-loop fallback for isolated vertices
+        nbrs = np.where(d[:, None] == 0, frontier[:, None], nbrs)
+        frontier = nbrs.reshape(-1)
+        layers.append(frontier)
+    return layers
+
+
+def sample_neighbors_device(
+    key: jax.Array,
+    indptr: jax.Array,      # (n+1,) int32
+    indices: jax.Array,     # (m,) int32
+    seeds: jax.Array,       # (b,) int32
+    fanouts: Sequence[int],
+) -> list[jax.Array]:
+    """Device-side equivalent (uniform with replacement, static shapes)."""
+    deg = jnp.diff(indptr)
+    layers = [seeds.astype(jnp.int32)]
+    frontier = layers[0]
+    for i, f in enumerate(fanouts):
+        key_i = jax.random.fold_in(key, i)
+        d = deg[frontier]
+        u = jax.random.uniform(key_i, (frontier.shape[0], f))
+        offs = jnp.floor(u * jnp.maximum(d, 1)[:, None]).astype(jnp.int32)
+        base = indptr[frontier][:, None].astype(jnp.int32)
+        eids = jnp.minimum(base + offs, indices.shape[0] - 1)
+        nbrs = indices[eids]
+        nbrs = jnp.where(d[:, None] == 0, frontier[:, None], nbrs)
+        frontier = nbrs.reshape(-1)
+        layers.append(frontier)
+    return layers

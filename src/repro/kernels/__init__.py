@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the HyTM engines' compute hot spots.
+
+Each kernel directory ships three files:
+  <name>.py — pl.pallas_call + BlockSpec VMEM tiling (the TPU target)
+  ops.py    — jit'd public wrapper (interpret=True on CPU)
+  ref.py    — pure-jnp oracle the tests sweep against
+
+Kernel -> engine map (DESIGN.md §2):
+  segment_spmm     — FILTER engine compute core: dense (8,128)-tiled edge
+                     streaming + one-hot-matmul segment reduction (the
+                     TPU-native replacement for GPU atomics)
+  frontier_compact — COMPACTION engine: sequential-grid stream compaction
+                     with an SMEM running offset (the paper's CPU pass,
+                     on-device)
+  hyb_gather       — ZEROCOPY engine: per-vertex neighbour-segment DMA
+                     (EMOGI's merged/aligned accesses, as DMA descriptors)
+  flash_attention  — LM hot spot (causal + sliding window fwd)
+  embedding_bag    — DLRM hot spot (fused gather + bag reduce)
+  grouped_matmul   — MoE hot spot (capacity-grouped expert GEMM)
+"""

@@ -1,0 +1,3 @@
+from repro.kernels.embedding_bag.ops import embedding_bag
+
+__all__ = ["embedding_bag"]

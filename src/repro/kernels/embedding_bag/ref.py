@@ -1,0 +1,7 @@
+"""Oracle: models/embedding.py gather engine."""
+
+from repro.models.embedding import embedding_bag as _bag
+
+
+def embedding_bag_ref(table, indices, mode="sum"):
+    return _bag(table, indices, mode=mode, engine="gather")

@@ -1,0 +1,112 @@
+"""Fused attention Pallas kernel (FlashAttention-2 forward) with causal +
+sliding-window masking — the LM-family compute hot spot.
+
+Grid: (batch*heads, n_q_blocks, n_kv_blocks); TPU executes the kv axis
+sequentially, so the online-softmax state (m, l) and the output
+accumulator live in VMEM scratch and flush on the last kv step.  Blocks
+are (TILE_Q, dh) / (TILE_K, dh) with dh lane-padded to 128.
+
+Training uses the pure-jnp custom-VJP oracle in models/attention.py (the
+same recurrence); this kernel is the serving/prefill fast path and the
+allclose target for the tests' shape x dtype sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE_Q = 256
+TILE_K = 256
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, window, causal):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale       # (TILE_Q, dh)
+    k = k_ref[0].astype(jnp.float32)               # (TILE_K, dh)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                              # (TILE_Q, TILE_K)
+
+    q_pos = qi * TILE_Q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * TILE_K + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones(s.shape, dtype=jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[...]                            # (TILE_Q, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "causal", "interpret")
+)
+def flash_attention_pallas(
+    q: jax.Array,   # (BH, S, dh)
+    k: jax.Array,   # (BH, L, dh)
+    v: jax.Array,   # (BH, L, dh)
+    scale: float,
+    window: int = 0,
+    causal: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    BH, S, dh = q.shape
+    L = k.shape[1]
+    s_pad = -(-S // TILE_Q) * TILE_Q
+    l_pad = -(-L // TILE_K) * TILE_K
+    d_pad = -(-dh // 128) * 128
+    qp = jnp.pad(q, ((0, 0), (0, s_pad - S), (0, d_pad - dh)))
+    kp = jnp.pad(k, ((0, 0), (0, l_pad - L), (0, d_pad - dh)))
+    vp = jnp.pad(v, ((0, 0), (0, l_pad - L), (0, d_pad - dh)))
+
+    grid = (BH, s_pad // TILE_Q, l_pad // TILE_K)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, TILE_Q, d_pad), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, TILE_K, d_pad), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, TILE_K, d_pad), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_Q, d_pad), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, s_pad, d_pad), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((TILE_Q, 1), jnp.float32),
+            pltpu.VMEM((TILE_Q, 1), jnp.float32),
+            pltpu.VMEM((TILE_Q, d_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :S, :dh]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle: dense masked attention."""
+
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, scale, window=0, causal=True):
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    S, L = s.shape[1], s.shape[2]
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(L)[None, :]
+    mask = jnp.ones((S, L), bool)
+    if causal:
+        mask &= qp >= kp
+    if window > 0:
+        mask &= qp - kp < window
+    s = jnp.where(mask[None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask[None], p, 0.0)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.frontier_compact.ops import frontier_compact
+
+__all__ = ["frontier_compact"]

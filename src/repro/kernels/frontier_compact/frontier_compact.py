@@ -1,0 +1,90 @@
+"""Stream-compaction Pallas kernel — the COMPACTION engine.
+
+The paper's ExpTM-compaction removes inactive edges on the CPU before the
+PCIe transfer.  On TPU the pass runs on-device (DESIGN.md §2): a single
+sequential sweep over (TILE, c) edge tiles that
+
+  1. computes each kept lane's local rank with an in-tile cumsum,
+  2. permutes kept lanes to the tile front with a one-hot matmul
+     (gather/scatter as MXU compute — no atomics needed),
+  3. appends the dense prefix at the running offset via a dynamic store
+     (HBM DMA with data-dependent destination), carrying the offset in
+     SMEM across grid steps (TPU grids are sequential).
+
+Because later tiles overwrite earlier tiles' padding, the output is the
+dense compacted stream; the total count lands in the (1,) count output.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE = 512
+
+
+def _kernel(mask_ref, val_ref, out_ref, cnt_ref, off_ref):
+    bi = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    @pl.when(bi == 0)
+    def _init():
+        off_ref[0] = 0
+
+    mask = mask_ref[...]                       # (TILE,)
+    vals = val_ref[...]                        # (TILE, c)
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    kept = pos[TILE - 1] + 1
+    # one-hot permutation: lane i -> output lane pos[i] (kept lanes only)
+    onehot = (
+        (pos[:, None] == jax.lax.broadcasted_iota(jnp.int32, (TILE, TILE), 1))
+        & mask[:, None]
+    ).astype(vals.dtype)
+    tile = jax.lax.dot_general(
+        onehot, vals, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(vals.dtype)                       # (TILE, c) dense prefix
+
+    off = off_ref[0]
+    pl.store(out_ref, (pl.ds(off, TILE), slice(None)), tile)
+    off_ref[0] = off + kept
+
+    @pl.when(bi == nb - 1)
+    def _fin():
+        cnt_ref[0] = off_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def frontier_compact_pallas(
+    values: jax.Array,   # (m, c) packed edge fields
+    mask: jax.Array,     # (m,) bool
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    m, c = values.shape
+    m_pad = -(-m // TILE) * TILE
+    vals = jnp.pad(values, ((0, m_pad - m), (0, 0)))
+    msk = jnp.pad(mask, (0, m_pad - m), constant_values=False)
+
+    out, cnt = pl.pallas_call(
+        _kernel,
+        grid=(m_pad // TILE,),
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE, c), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),   # whole output: dynamic stores
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_pad + TILE, c), values.dtype),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(msk, vals)
+    return out[:m], cnt[0]

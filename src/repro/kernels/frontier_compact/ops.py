@@ -1,0 +1,19 @@
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.frontier_compact.frontier_compact import frontier_compact_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def frontier_compact(values: jax.Array, mask: jax.Array):
+    """Compact rows of ``values`` where ``mask`` is set to a dense prefix.
+    Returns (compacted (m, c), count)."""
+    squeeze = False
+    if values.ndim == 1:
+        values, squeeze = values[:, None], True
+    out, cnt = frontier_compact_pallas(values, mask, interpret=not _on_tpu())
+    return (out[:, 0] if squeeze else out), cnt

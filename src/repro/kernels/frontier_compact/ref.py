@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for stream compaction."""
+
+import jax
+import jax.numpy as jnp
+
+
+def frontier_compact_ref(values: jax.Array, mask: jax.Array):
+    """Stable compaction: kept rows move to the front (original order),
+    the tail is unspecified (compared only up to `count` in tests)."""
+    order = jnp.argsort(~mask, stable=True)
+    return values[order], jnp.sum(mask.astype(jnp.int32))

@@ -1,0 +1,3 @@
+from repro.kernels.grouped_matmul.ops import grouped_matmul
+
+__all__ = ["grouped_matmul"]

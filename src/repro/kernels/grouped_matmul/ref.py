@@ -1,0 +1,16 @@
+"""Oracle: per-expert dense matmul over sorted groups."""
+
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(x_sorted, weights, starts, counts):
+    T, D = x_sorted.shape
+    E, _, F = weights.shape
+    rows = jnp.arange(T)
+    # expert id per row from group ranges
+    eid = jnp.sum(rows[:, None] >= (starts + counts)[None, :], axis=1)
+    eid = jnp.clip(eid, 0, E - 1)
+    in_group = (rows >= starts[eid]) & (rows < starts[eid] + counts[eid])
+    w_rows = weights[eid]                      # (T, D, F)
+    y = jnp.einsum("td,tdf->tf", x_sorted.astype(jnp.float32), w_rows.astype(jnp.float32))
+    return jnp.where(in_group[:, None], y, 0.0).astype(x_sorted.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.hyb_gather.ops import hyb_gather
+
+__all__ = ["hyb_gather"]

@@ -1,0 +1,64 @@
+"""Per-vertex neighbour-segment gather Pallas kernel — the ZEROCOPY engine.
+
+EMOGI's zero-copy issues one fine-grained memory request per (vertex,
+cache line); the TPU analogue is one DMA descriptor per neighbour
+segment, issued straight against the HBM-resident edge array (DESIGN.md
+§2).  The kernel:
+
+* scalar-prefetches the active vertices' segment starts/degrees (the
+  compacted frontier produced by `frontier_compact` or the scheduler),
+* per grid step, DMAs one vertex's neighbour window
+  ``edges[start : start + PAD]`` into a VMEM block (`pl.load` with a
+  dynamic slice == one descriptor; misaligned starts cost the extra
+  transaction the cost model's am(v) term charges),
+* masks lanes past the vertex's true degree.
+
+Output is the (n_active, PAD, c) padded neighbour tensor the downstream
+relax kernel consumes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+PAD = 128  # neighbour window per vertex (one (8,128) tile row group)
+
+
+def _kernel(starts_ref, degs_ref, edges_ref, out_ref):
+    vi = pl.program_id(0)
+    start = starts_ref[vi]
+    deg = degs_ref[vi]
+    window = pl.load(edges_ref, (pl.ds(start, PAD), slice(None)))  # one DMA
+    lane = jax.lax.broadcasted_iota(jnp.int32, window.shape, 0)
+    out_ref[0] = jnp.where(lane < deg, window, 0).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hyb_gather_pallas(
+    edges: jax.Array,       # (m_pad, c) edge fields, HBM resident
+    seg_start: jax.Array,   # (a,) int32 segment starts of active vertices
+    degree: jax.Array,      # (a,) int32
+    interpret: bool = True,
+) -> jax.Array:
+    a = seg_start.shape[0]
+    c = edges.shape[1]
+    # stay in-bounds for the fixed-size window DMA
+    edges = jnp.pad(edges, ((0, PAD), (0, 0)))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(a,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((1, PAD, c), lambda vi, starts, degs: (vi, 0, 0)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((a, PAD, c), edges.dtype),
+        interpret=interpret,
+    )(seg_start.astype(jnp.int32), degree.astype(jnp.int32), edges)
+    return out

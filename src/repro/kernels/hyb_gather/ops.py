@@ -1,0 +1,20 @@
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.hyb_gather.hyb_gather import PAD, hyb_gather_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def hyb_gather(edges: jax.Array, seg_start: jax.Array, degree: jax.Array):
+    """Gather each active vertex's neighbour window (zero-copy engine).
+    Returns (a, PAD, c); lanes past the vertex degree are zeroed.
+    Vertices with degree > PAD are split by the scheduler upstream."""
+    squeeze = False
+    if edges.ndim == 1:
+        edges, squeeze = edges[:, None], True
+    out = hyb_gather_pallas(edges, seg_start, degree, interpret=not _on_tpu())
+    return out[..., 0] if squeeze else out

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the per-vertex neighbour gather."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hyb_gather.hyb_gather import PAD
+
+
+def hyb_gather_ref(edges: jax.Array, seg_start: jax.Array, degree: jax.Array):
+    e = jnp.pad(edges, ((0, PAD), (0, 0)))
+    idx = seg_start[:, None] + jnp.arange(PAD)[None, :]
+    out = e[idx]                                        # (a, PAD, c)
+    lane = jnp.arange(PAD)[None, :, None]
+    return jnp.where(lane < degree[:, None, None], out, 0).astype(edges.dtype)

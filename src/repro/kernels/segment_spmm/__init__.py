@@ -1,0 +1,3 @@
+from repro.kernels.segment_spmm.ops import segment_spmm
+
+__all__ = ["segment_spmm"]

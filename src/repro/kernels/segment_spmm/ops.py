@@ -1,0 +1,32 @@
+"""Public wrapper: interpret=True on CPU (this container), compiled
+Pallas on TPU backends."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_spmm.segment_spmm import segment_spmm_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def segment_spmm(
+    messages: jax.Array,
+    seg_ids: jax.Array,
+    n_segments: int,
+    valid: jax.Array | None = None,
+) -> jax.Array:
+    """Segment-sum (m, d) messages into (n_segments, d) — the filter
+    engine's blocked aggregation."""
+    if valid is None:
+        valid = jnp.ones(messages.shape[0], dtype=bool)
+    squeeze = False
+    if messages.ndim == 1:
+        messages, squeeze = messages[:, None], True
+    out = segment_spmm_pallas(
+        messages, seg_ids, valid, n_segments, interpret=not _on_tpu()
+    )
+    return out[:, 0] if squeeze else out

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the blocked segment-SpMM kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_spmm_ref(
+    messages: jax.Array,  # (m, d) per-edge messages (dst-sorted NOT required)
+    seg_ids: jax.Array,   # (m,) destination ids
+    n_segments: int,
+    valid: jax.Array | None = None,  # (m,) bool
+) -> jax.Array:
+    if valid is not None:
+        messages = jnp.where(valid[:, None], messages, 0.0)
+    return jax.ops.segment_sum(messages, seg_ids, num_segments=n_segments)

@@ -1,0 +1,96 @@
+"""Blocked segment-SpMM Pallas kernel — the FILTER engine's compute core.
+
+The paper's filter engine streams whole partitions over the slow link and
+masks inactive edges in compute.  TPU adaptation (DESIGN.md §2):
+
+* edge messages arrive as an (m, d) stream, tiled (TILE_E, d) through
+  VMEM with lane-aligned blocks — the ``cudaMemcpy``-style saturated
+  contiguous DMA;
+* destination combining cannot use atomics (TPU has none); instead each
+  tile builds a one-hot (TILE_E, TILE_N) routing matrix and reduces with
+  ONE MXU matmul: ``partial = onehot^T @ messages`` — scatter-add
+  re-expressed as systolic compute, the TPU-native idiom;
+* the grid is (n_out_blocks, n_edge_tiles); TPU grids execute
+  sequentially, so each output block accumulates across edge tiles in a
+  fp32 VMEM scratch accumulator and flushes on the last tile.
+
+Inactive lanes (``valid=False``: filter-engine masked edges / padding)
+contribute zero rows through the same matmul.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE_E = 512   # edges per tile
+TILE_N = 128   # output segments per block (lane-aligned)
+
+
+def _kernel(seg_ref, valid_ref, msg_ref, out_ref, acc_ref):
+    oi = pl.program_id(0)   # output block index
+    ei = pl.program_id(1)   # edge tile index
+    n_edge_tiles = pl.num_programs(1)
+
+    @pl.when(ei == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seg = seg_ref[...]        # (TILE_E,)
+    valid = valid_ref[...]    # (TILE_E,)
+    msg = msg_ref[...]        # (TILE_E, d)
+
+    base = oi * TILE_N
+    local = seg - base
+    in_block = (local >= 0) & (local < TILE_N) & valid
+    # one-hot routing matrix (TILE_E, TILE_N): scatter-add as MXU matmul
+    onehot = (
+        (local[:, None] == jax.lax.broadcasted_iota(jnp.int32, (TILE_E, TILE_N), 1))
+        & in_block[:, None]
+    ).astype(msg.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        onehot, msg,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(acc_ref.dtype)
+
+    @pl.when(ei == n_edge_tiles - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_segments", "interpret"))
+def segment_spmm_pallas(
+    messages: jax.Array,   # (m, d)
+    seg_ids: jax.Array,    # (m,) int32
+    valid: jax.Array,      # (m,) bool
+    n_segments: int,
+    interpret: bool = True,
+) -> jax.Array:
+    m, d = messages.shape
+    m_pad = -(-m // TILE_E) * TILE_E
+    n_pad = -(-n_segments // TILE_N) * TILE_N
+    d_pad = -(-d // 128) * 128
+    msg = jnp.pad(messages, ((0, m_pad - m), (0, d_pad - d)))
+    seg = jnp.pad(seg_ids.astype(jnp.int32), (0, m_pad - m), constant_values=-1)
+    val = jnp.pad(valid, (0, m_pad - m), constant_values=False)
+
+    grid = (n_pad // TILE_N, m_pad // TILE_E)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_E,), lambda oi, ei: (ei,)),
+            pl.BlockSpec((TILE_E,), lambda oi, ei: (ei,)),
+            pl.BlockSpec((TILE_E, d_pad), lambda oi, ei: (ei, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_N, d_pad), lambda oi, ei: (oi, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d_pad), messages.dtype),
+        scratch_shapes=[pltpu.VMEM((TILE_N, d_pad), jnp.float32)],
+        interpret=interpret,
+    )(seg, val, msg)
+    return out[:n_segments, :d]

@@ -1,0 +1,209 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the
+device count at first init).  For every cell this produces:
+
+  * ``memory_analysis()``  — proves the program fits per-device HBM,
+  * ``cost_analysis()``    — per-device HLO FLOPs / bytes,
+  * collective byte census — parsed from the post-SPMD HLO text,
+
+which benchmarks/roofline.py turns into the three roofline terms.
+Results land in ``experiments/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                   # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single     # 16x16 only
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from collections import defaultdict
+
+import jax
+
+from repro.configs import get_arch, list_archs
+from repro.launch.mesh import make_production_mesh
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+# result shapes like: bf16[8,128,2048]{2,1,0} or tuple results "(f32[..], ..)"
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_census(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op in the per-device HLO, and
+    estimate per-device ICI wire bytes with ring-algorithm factors."""
+    per_op = defaultdict(lambda: {"count": 0, "result_bytes": 0.0, "wire_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(?[a-z0-9\[\],{}\s/]*\)?)\s*([a-z0-9\-]+)\(", stripped)
+        if not m:
+            continue
+        op = m.group(2)
+        base = op.replace("-start", "").replace("-done", "")
+        if base not in _COLLECTIVES or op.endswith("-done"):
+            continue
+        result_bytes = _shape_bytes(m.group(1))
+        gm = _GROUPS_RE.search(stripped)
+        if gm:
+            group = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(stripped)
+            group = int(gi.group(2)) if gi else 2
+        n = max(group, 2)
+        if base == "all-reduce":
+            wire = 2.0 * result_bytes * (n - 1) / n
+        elif base == "all-gather":
+            wire = result_bytes * (n - 1) / n
+        elif base == "reduce-scatter":
+            wire = result_bytes * (n - 1)       # result is the scattered shard
+        elif base == "all-to-all":
+            wire = result_bytes * (n - 1) / n
+        else:  # collective-permute
+            wire = result_bytes
+        rec = per_op[base]
+        rec["count"] += 1
+        rec["result_bytes"] += result_bytes
+        rec["wire_bytes"] += wire
+    return dict(per_op)
+
+
+def run_cell(arch_name: str, shape: str, multi_pod: bool) -> dict:
+    arch = get_arch(arch_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    record = {
+        "arch": arch_name, "shape": shape, "mesh": mesh_name,
+        "n_devices": 512 if multi_pod else 256,
+    }
+    if shape in arch.skips:
+        record["status"] = "SKIP"
+        record["reason"] = arch.skips[shape]
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    build = arch.cells[shape](mesh)
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(
+            build.fn,
+            in_shardings=build.in_shardings,
+            out_shardings=build.out_shardings,
+            donate_argnums=build.donate_argnums,
+        )
+        lowered = jitted.lower(*build.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    census = collective_census(compiled.as_text())
+
+    record.update({
+        "status": "OK",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_device_bytes": (
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+            ),
+        },
+        "cost": {
+            "flops": ca.get("flops", 0.0),
+            "bytes_accessed": ca.get("bytes accessed", 0.0),
+        },
+        "collectives": census,
+        "model_flops": build.model_flops,
+        "note": build.note,
+    })
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch (default: all)")
+    ap.add_argument("--shape", default=None, help="single shape (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, "dry-run requires 512 host devices"
+
+    archs = [args.arch] if args.arch else [a for a in list_archs() if a != "hytgraph"]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = []
+    for arch_name in archs:
+        arch = get_arch(arch_name)
+        shapes = [args.shape] if args.shape else arch.shapes()
+        for shape in shapes:
+            for multi_pod in meshes:
+                mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+                tag = f"{arch_name}__{shape}__{mesh_name}"
+                try:
+                    rec = run_cell(arch_name, shape, multi_pod)
+                except Exception as e:  # a failure here is a bug in the system
+                    rec = {
+                        "arch": arch_name, "shape": shape, "mesh": mesh_name,
+                        "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-2000:],
+                    }
+                    failures.append(tag)
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "OK":
+                    peak = rec["memory"]["peak_device_bytes"] / 2**30
+                    extra = (
+                        f"peak {peak:.2f} GiB/dev | {rec['cost']['flops']:.3g} flops/dev"
+                        f" | compile {rec['compile_s']}s"
+                    )
+                elif status == "FAIL":
+                    extra = rec["error"][:160]
+                print(f"[{status:4s}] {tag}: {extra}", flush=True)
+
+    if failures:
+        print(f"\n{len(failures)} FAILURES: {failures}")
+        raise SystemExit(1)
+    print("\nall dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

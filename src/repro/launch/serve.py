@@ -1,0 +1,53 @@
+"""Serving launcher: batched prefill+decode for an LM arch (reduced
+config locally; the full-mesh serving cells lower via launch/dryrun.py).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    from repro.configs import get_arch
+    from repro.models import transformer as tf
+    from repro.configs.common import reduce_lm_config
+
+    arch = get_arch(args.arch)
+    if arch.family != "lm":
+        raise SystemExit(f"{args.arch} is not an LM arch")
+    cfg = reduce_lm_config(arch.model_config).replace(remat=False)
+    params = tf.init_transformer(jax.random.PRNGKey(0), cfg)
+
+    B, P, G = args.requests, args.prompt_len, args.gen
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0, cfg.vocab)
+    caches = tf.init_cache(cfg, B, P + G)
+    jit_prefill = jax.jit(lambda p, t, c: tf.prefill(p, t, cfg, c))
+    jit_decode = jax.jit(lambda p, t, c, i: tf.decode_step(p, t, cfg, c, i))
+
+    logits, caches = jit_prefill(params, prompts, caches)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    t0 = time.monotonic()
+    for s in range(G - 1):
+        logits, caches = jit_decode(params, tok, caches, jnp.int32(P + s))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(tok)
+    dt = time.monotonic() - t0
+    print(f"{args.arch} (reduced): {B} requests, {G-1} decode steps, "
+          f"{B*(G-1)/dt:.0f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Training launcher: ``--arch <id>`` selects the architecture config;
+runs the fault-tolerant training loop on the local device set (the
+production path jit-shards the same step functions over the mesh — see
+launch/dryrun.py for the mesh lowering of every arch x shape cell).
+
+    PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+        --steps 50 --scale tiny
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    from repro.configs import get_arch
+    from repro.data.pipeline import LMBatches
+    from repro.models import transformer as tf
+    from repro.train.fault_tolerance import FaultTolerantLoop
+    from repro.train.optimizer import OptimizerConfig
+    from repro.train.train_step import init_train_state, make_train_step
+
+    arch = get_arch(args.arch)
+    if arch.family != "lm":
+        raise SystemExit(
+            f"{args.arch} is a {arch.family} arch; use examples/train_gnn.py "
+            "or examples/ for non-LM training drivers."
+        )
+
+    # reduced config of the same family (full configs are mesh-scale:
+    # exercise them via repro.launch.dryrun)
+    from repro.configs.common import reduce_lm_config
+    cfg = reduce_lm_config(arch.model_config)
+    print(f"arch={args.arch} (reduced: {cfg.n_layers}L d={cfg.d_model} "
+          f"moe={'yes' if cfg.moe else 'no'} attn={cfg.attention})")
+
+    oc = OptimizerConfig(learning_rate=1e-3, warmup_steps=10, total_steps=args.steps)
+    params = tf.init_transformer(jax.random.PRNGKey(0), cfg)
+    state = init_train_state(params, oc)
+    pipe = LMBatches(vocab=cfg.vocab, batch=args.batch, seq_len=args.seq)
+    step = jax.jit(make_train_step(lambda p, b: tf.lm_loss(p, b["tokens"], cfg), oc))
+
+    ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="repro-ckpt-")
+    loop = FaultTolerantLoop(
+        step_fn=step, batch_fn=lambda s: {"tokens": pipe.make(s)["tokens"]},
+        ckpt_dir=ckpt, ckpt_every=max(args.steps // 4, 1),
+    )
+    state, log, _ = loop.run(state, args.steps)
+    print(f"loss {log[0]['loss']:.4f} -> {log[-1]['loss']:.4f} "
+          f"(checkpoints in {ckpt})")
+
+
+if __name__ == "__main__":
+    main()

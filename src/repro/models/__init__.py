@@ -1,0 +1,2 @@
+"""Model zoo: LM transformers (dense / MoE / MLA / local:global), GNNs,
+and DLRM — every assigned architecture is a config over these modules."""

@@ -1,0 +1,399 @@
+"""Attention variants: GQA/MQA (grouped KV), MLA (DeepSeek-V2 latent KV),
+with causal + sliding-window masking and decode-time KV caches.
+
+Masking uses absolute positions so the same code path serves training
+(full sequence), chunked prefill, and single-token decode.  The sliding
+window size is a *traced* scalar per layer, so a single scan-over-layers
+supports gemma-style 5:1 local:global patterns (window=0 means global).
+
+The jnp implementation here is the oracle; `kernels/flash_attention`
+provides the fused Pallas path for the TPU target (selected via
+``use_flash``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense_init, rms_norm
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    kv_lora: int = 512
+    q_lora: int = 0        # 0 = direct q projection (V2-Lite)
+    d_nope: int = 128      # non-rotary head dim
+    d_rope: int = 64       # shared rotary dim
+    d_v: int = 128         # value head dim
+
+
+# ------------------------------------------------------------------ masks
+
+def attention_mask(
+    q_pos: jax.Array,   # (S,) absolute positions of queries
+    kv_pos: jax.Array,  # (L,) absolute positions of keys
+    kv_valid: jax.Array | None,  # (B, L) or None
+    window: jax.Array | int,     # 0 = global
+) -> jax.Array:
+    causal = q_pos[:, None] >= kv_pos[None, :]
+    w = jnp.asarray(window, dtype=jnp.int32)
+    in_window = jnp.where(
+        w > 0, q_pos[:, None] - kv_pos[None, :] < w, True
+    )
+    mask = causal & in_window  # (S, L)
+    if kv_valid is not None:
+        mask = mask[None] & kv_valid[:, None, :]  # (B, S, L)... broadcast later
+        return mask[:, None]  # (B, 1, S, L)
+    return mask[None, None]   # (1, 1, S, L)
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: (B,S,KV,G,dh) k/v: (B,L,KV,dh) -> (B,S,KV,G,dv)."""
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32) * scale
+    # mask: (B|1, 1, S, L) -> (B|1, 1, 1, S, L) broadcasts over (B,KV,G,S,L)
+    scores = jnp.where(mask[:, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgst,btkd->bskgd", probs, v)
+
+
+# Above this many score elements per (q_len x kv_len) tile, attention runs
+# blocked with an online softmax (never materializing the S x L matrix).
+_FLASH_THRESHOLD = 2048 * 2048
+_Q_BLOCK = 512
+_KV_BLOCK = 1024
+
+
+def _pad_dim(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def _block_mask(qpb, kpb, kv_last, w):
+    """(qb, kb) validity from absolute positions."""
+    return (
+        (qpb[:, None] >= kpb[None, :])
+        & (kpb[None, :] <= kv_last)
+        & jnp.where(w > 0, qpb[:, None] - kpb[None, :] < w, True)
+    )
+
+
+def _flash_fwd_blocks(q_blocks, k_blocks, v_blocks, qp_blocks, kp_blocks, kv_last, w):
+    """Returns out (B,nq*qb,KV,G,dv) and lse (B,KV,G,nq*qb)."""
+    B, nq, QB, KV, G, dh = q_blocks.shape
+    nk, KB = kp_blocks.shape
+    dv = v_blocks.shape[-1]
+
+    def q_step(_, qi):
+        qb = q_blocks[:, qi]
+        qpb = qp_blocks[qi]
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            s = jnp.einsum("bskgd,btkd->bkgst", qb, k_blocks[:, ki].astype(jnp.float32))
+            valid = _block_mask(qpb, kp_blocks[ki], kv_last, w)
+            s = jnp.where(valid[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_safe[..., None]), 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgst,btkd->bkgsd", p, v_blocks[:, ki].astype(jnp.float32)
+            )
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KV, G, QB), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, QB), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, QB, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        lse = m_safe + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (jnp.transpose(out, (0, 3, 1, 2, 4)), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * QB, KV, G, dv)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, KV, G, nq * QB)  # (B,KV,G,S)
+    return out, lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=())
+def _flash_core(q_pad, k_pad, v_pad, qp_pad, kp_pad, kv_last, w):
+    out, _ = _flash_fwd_blocks(*_to_blocks(q_pad, k_pad, v_pad, qp_pad, kp_pad), kv_last, w)
+    return out
+
+
+def _to_blocks(q_pad, k_pad, v_pad, qp_pad, kp_pad):
+    B, Sq, KV, G, dh = q_pad.shape
+    L = k_pad.shape[1]
+    nq, nk = Sq // _Q_BLOCK, L // _KV_BLOCK
+    return (
+        q_pad.reshape(B, nq, _Q_BLOCK, KV, G, dh),
+        k_pad.reshape(B, nk, _KV_BLOCK, KV, dh),
+        v_pad.reshape(B, nk, _KV_BLOCK, KV, v_pad.shape[-1]),
+        qp_pad.reshape(nq, _Q_BLOCK),
+        kp_pad.reshape(nk, _KV_BLOCK),
+    )
+
+
+def _flash_core_fwd(q_pad, k_pad, v_pad, qp_pad, kp_pad, kv_last, w):
+    blocks = _to_blocks(q_pad, k_pad, v_pad, qp_pad, kp_pad)
+    out, lse = _flash_fwd_blocks(*blocks, kv_last, w)
+    return out, (q_pad, k_pad, v_pad, qp_pad, kp_pad, kv_last, w, out, lse)
+
+
+def _flash_core_bwd(res, dout):
+    """FlashAttention-2 backward: recompute p per (q,kv) block — nothing
+    tile-sized survives the forward (the 20 GB/device difference on the
+    train_4k dry-run cells; see EXPERIMENTS.md §Perf)."""
+    q_pad, k_pad, v_pad, qp_pad, kp_pad, kv_last, w, out, lse = res
+    q_blocks, k_blocks, v_blocks, qpb_all, kpb_all = _to_blocks(
+        q_pad, k_pad, v_pad, qp_pad, kp_pad
+    )
+    B, nq, QB, KV, G, dh = q_blocks.shape
+    nk = kpb_all.shape[0]
+    KB = kpb_all.shape[1]
+    dv = v_blocks.shape[-1]
+    dout = dout.astype(jnp.float32)
+    # D_i = rowsum(dout * out)  (B,KV,G,S)
+    delta = jnp.einsum("bskgd,bskgd->bkgs", dout, out.astype(jnp.float32))
+    lse_blocks = lse.reshape(B, KV, G, nq, QB)
+    delta_blocks = delta.reshape(B, KV, G, nq, QB)
+    dout_blocks = dout.reshape(B, nq, QB, KV, G, dv)
+
+    def q_step(carry, qi):
+        dk_acc, dv_acc = carry
+        qb = q_blocks[:, qi]
+        qpb = qpb_all[qi]
+        lse_b = lse_blocks[:, :, :, qi]
+        delta_b = delta_blocks[:, :, :, qi]
+        dob = dout_blocks[:, qi]
+
+        def kv_step(carry2, ki):
+            dq_b, dk_a, dv_a = carry2
+            kb = k_blocks[:, ki].astype(jnp.float32)
+            vb = v_blocks[:, ki].astype(jnp.float32)
+            s = jnp.einsum("bskgd,btkd->bkgst", qb, kb)
+            valid = _block_mask(qpb, kpb_all[ki], kv_last, w)
+            s = jnp.where(valid[None, None, None], s, -jnp.inf)
+            p = jnp.where(jnp.isfinite(s), jnp.exp(s - lse_b[..., None]), 0.0)
+            dp = jnp.einsum("bskgd,btkd->bkgst", dob, vb)
+            ds = p * (dp - delta_b[..., None])
+            dq_b = dq_b + jnp.einsum("bkgst,btkd->bskgd", ds, kb)
+            dk_a = dk_a.at[:, ki].add(jnp.einsum("bkgst,bskgd->btkd", ds, qb))
+            dv_a = dv_a.at[:, ki].add(jnp.einsum("bkgst,bskgd->btkd", p, dob))
+            return (dq_b, dk_a, dv_a), None
+
+        dq0 = jnp.zeros((B, QB, KV, G, dh), jnp.float32)
+        (dq_b, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc), jnp.arange(nk)
+        )
+        return (dk_acc, dv_acc), dq_b
+
+    dk0 = jnp.zeros((B, nk, KB, KV, dh), jnp.float32)
+    dv0 = jnp.zeros((B, nk, KB, KV, dv), jnp.float32)
+    (dk, dvv), dqs = jax.lax.scan(q_step, (dk0, dv0), jnp.arange(nq))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(q_pad.shape)
+    dk = dk.reshape(k_pad.shape).astype(k_pad.dtype)
+    dvv = dvv.reshape(v_pad.shape).astype(v_pad.dtype)
+    return dq.astype(q_pad.dtype), dk, dvv, None, None, None, None
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def _flash_sdpa(q, k, v, q_pos, kv_pos, kv_last, window, scale):
+    """Blocked attention with online softmax (FlashAttention-2 fwd+bwd,
+    pure-jnp oracle; the Pallas kernel `kernels/flash_attention` is the
+    fused TPU path).  Never materializes more than a (qb x kb) tile.
+
+    q: (B,S,KV,G,dh); k: (B,L,KV,dh); v: (B,L,KV,dv)
+    q_pos: (S,) absolute positions; kv_pos: (L,); kv_last: scalar — last
+    valid cache position (huge when no cache); window: 0 = global.
+    """
+    B, S, KV, G, dh = q.shape
+    dv = v.shape[-1]
+    qf = q.astype(jnp.float32) * scale
+    q_pad, S0 = _pad_dim(qf, 1, _Q_BLOCK)
+    qp_pad, _ = _pad_dim(q_pos.astype(jnp.int32), 0, _Q_BLOCK)
+    k_pad, L0 = _pad_dim(k, 1, _KV_BLOCK)
+    v_pad, _ = _pad_dim(v, 1, _KV_BLOCK)
+    kp_pad, _ = _pad_dim(kv_pos.astype(jnp.int32), 0, _KV_BLOCK)
+    # padded kv positions never attend: push them past every query
+    pad_mask = jnp.arange(k_pad.shape[1]) < L0
+    kp_pad = jnp.where(pad_mask, kp_pad, jnp.int32(2**30))
+    out = _flash_core(
+        q_pad, k_pad, v_pad, qp_pad, kp_pad,
+        jnp.asarray(kv_last, jnp.int32), jnp.asarray(window, jnp.int32),
+    )
+    return out[:, :S0].astype(v.dtype)
+
+
+# ------------------------------------------------------------------- GQA
+
+def init_gqa(key, d_model, n_heads, n_kv, d_head, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d_model, n_heads * d_head, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv * d_head, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv * d_head, dtype),
+        "wo": dense_init(ks[3], n_heads * d_head, d_model, dtype),
+    }
+
+
+def gqa_attention(
+    p: dict,
+    x: jax.Array,            # (B, S, D)
+    positions: jax.Array,    # (S,)
+    n_heads: int,
+    n_kv: int,
+    d_head: int,
+    rope_theta: float,
+    window: jax.Array | int = 0,
+    cache: dict | None = None,      # {'k': (B,L,KV,dh), 'v': ...}
+    cache_index: jax.Array | None = None,
+    shard_fn=None,
+):
+    B, S, D = x.shape
+    G = n_heads // n_kv
+    dt = x.dtype
+    sc = shard_fn or (lambda a, kind: a)
+
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, n_kv, G, d_head)
+    k = (x @ p["wk"].astype(dt)).reshape(B, S, n_kv, d_head)
+    v = (x @ p["wv"].astype(dt)).reshape(B, S, n_kv, d_head)
+    q = apply_rope(q.reshape(B, S, n_kv * G, d_head), positions, rope_theta)
+    q = sc(q.reshape(B, S, n_kv, G, d_head), "qheads")
+    k = sc(apply_rope(k, positions, rope_theta), "kvheads")
+    v = sc(v, "kvheads")
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(d_head))
+    if cache is not None:
+        L = cache["k"].shape[1]
+        k_all = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_index, axis=1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_index, axis=1)
+        kv_pos = jnp.arange(L, dtype=jnp.int32)
+        kv_last = cache_index + S - 1
+        new_cache = {"k": k_all, "v": v_all}
+    else:
+        k_all, v_all = k, v
+        kv_pos = positions
+        kv_last = jnp.int32(2**30)
+        new_cache = None
+
+    L = k_all.shape[1]
+    if S * L > _FLASH_THRESHOLD:
+        out = _flash_sdpa(q, k_all, v_all, positions, kv_pos, kv_last, window, scale)
+    else:
+        kv_valid = None
+        if cache is not None:
+            kv_valid = (kv_pos[None, :] <= kv_last) * jnp.ones((B, 1), bool)
+        mask = attention_mask(positions, kv_pos, kv_valid, window)
+        out = _sdpa(q, k_all, v_all, mask, scale)
+    out = out.reshape(B, S, n_heads * d_head)
+    return out @ p["wo"].astype(dt), new_cache
+
+
+# ------------------------------------------------------------------- MLA
+
+def init_mla(key, d_model, n_heads, mla: MLAConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    p = {
+        "w_dkv": dense_init(ks[1], d_model, mla.kv_lora, dtype),
+        "kv_norm": jnp.zeros((mla.kv_lora,), dtype),
+        "w_uk": dense_init(ks[2], mla.kv_lora, n_heads * mla.d_nope, dtype),
+        "w_uv": dense_init(ks[3], mla.kv_lora, n_heads * mla.d_v, dtype),
+        "w_kr": dense_init(ks[4], d_model, mla.d_rope, dtype),
+        "wo": dense_init(ks[5], n_heads * mla.d_v, d_model, dtype),
+    }
+    if mla.q_lora:
+        kq = jax.random.split(ks[0])
+        p["w_dq"] = dense_init(kq[0], d_model, mla.q_lora, dtype)
+        p["q_norm"] = jnp.zeros((mla.q_lora,), dtype)
+        p["w_uq"] = dense_init(kq[1], mla.q_lora, n_heads * (mla.d_nope + mla.d_rope), dtype)
+    else:
+        p["wq"] = dense_init(ks[0], d_model, n_heads * (mla.d_nope + mla.d_rope), dtype)
+    return p
+
+
+def mla_attention(
+    p: dict,
+    x: jax.Array,           # (B, S, D)
+    positions: jax.Array,   # (S,)
+    n_heads: int,
+    mla: MLAConfig,
+    rope_theta: float,
+    window: jax.Array | int = 0,
+    cache: dict | None = None,   # {'ckv': (B,L,kv_lora), 'kr': (B,L,d_rope)}
+    cache_index: jax.Array | None = None,
+    shard_fn=None,
+):
+    """Multi-head Latent Attention.  The KV cache stores only the latent
+    ``c_kv`` (kv_lora) + the shared rotary key (d_rope) — the paper-family
+    compression that makes 32k-500k decode caches feasible."""
+    B, S, D = x.shape
+    dt = x.dtype
+    H, dn, dr, dv = n_heads, mla.d_nope, mla.d_rope, mla.d_v
+
+    if mla.q_lora:
+        cq = rms_norm(x @ p["w_dq"].astype(dt), p["q_norm"])
+        q = (cq @ p["w_uq"].astype(dt)).reshape(B, S, H, dn + dr)
+    else:
+        q = (x @ p["wq"].astype(dt)).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    c_kv = rms_norm(x @ p["w_dkv"].astype(dt), p["kv_norm"])  # (B,S,kvl)
+    k_rope = apply_rope((x @ p["w_kr"].astype(dt))[:, :, None, :], positions, rope_theta)[:, :, 0]
+
+    if cache is not None:
+        L = cache["ckv"].shape[1]
+        ckv_all = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], c_kv, cache_index, axis=1)
+        kr_all = jax.lax.dynamic_update_slice_in_dim(cache["kr"], k_rope, cache_index, axis=1)
+        kv_pos = jnp.arange(L, dtype=jnp.int32)
+        kv_last = cache_index + S - 1
+        new_cache = {"ckv": ckv_all, "kr": kr_all}
+    else:
+        ckv_all, kr_all = c_kv, k_rope
+        kv_pos = positions
+        kv_last = jnp.int32(2**30)
+        new_cache = None
+
+    # Expand latent -> per-head keys/values (decode recomputes from latent;
+    # the 'absorbed' matmul variant is a §Perf optimization).
+    L = ckv_all.shape[1]
+    k_nope = (ckv_all @ p["w_uk"].astype(dt)).reshape(B, L, H, dn)
+    v = (ckv_all @ p["w_uv"].astype(dt)).reshape(B, L, H, dv)
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(dn + dr))
+    if S * L > _FLASH_THRESHOLD:
+        # fold the shared rotary key into per-head keys; flash-blocked path
+        q_all = jnp.concatenate([q_nope, q_rope], axis=-1)[:, :, :, None, :]
+        k_eff = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_all[:, :, None, :], (B, L, H, dr))], axis=-1
+        )
+        out = _flash_sdpa(
+            q_all, k_eff, v, positions, kv_pos, kv_last, window, scale
+        ).reshape(B, S, H * dv)
+    else:
+        kv_valid = None
+        if cache is not None:
+            kv_valid = (kv_pos[None, :] <= kv_last) * jnp.ones((B, 1), bool)
+        mask = attention_mask(positions, kv_pos, kv_valid, window)
+        scores = (
+            jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
+            + jnp.einsum("bshd,btd->bhst", q_rope, kr_all)
+        ).astype(jnp.float32) * scale
+        scores = jnp.where(mask, scores, -1e30)  # (B|1,1,S,L) broadcasts
+        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+        out = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(B, S, H * dv)
+    return out @ p["wo"].astype(dt), new_cache

@@ -1,0 +1,112 @@
+"""DLRM (MLPerf config, Criteo 1TB) [arXiv:1906.00091].
+
+bottom-MLP(13 dense) -> 26 embedding-bag lookups (HyTM row engines,
+models/embedding.py) -> pairwise-dot feature interaction -> top-MLP.
+
+The embedding lookup is the hot path; tables are row-sharded across the
+mesh (dist/sharding.py) and the per-table engine choice is the HyTM cost
+model over batch index statistics.  ``retrieval_score`` covers the
+`retrieval_cand` shape cell: one query against 10^6 candidates as one
+blocked matmul (not a loop).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import mlp_apply, mlp_init
+from repro.models.embedding import embedding_bag
+
+# MLPerf DLRM vocab sizes (Criteo Terabyte, day-sampled), 26 sparse fields.
+MLPERF_VOCAB_SIZES = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36,
+)
+
+
+@dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    vocab_sizes: tuple = MLPERF_VOCAB_SIZES
+    embed_dim: int = 128
+    bot_mlp: tuple = (512, 256, 128)
+    top_mlp: tuple = (1024, 1024, 512, 256, 1)
+    multi_hot: int = 1            # lookups per field
+    interaction: str = "dot"
+    table_engine: str = "auto"
+    dtype: str = "float32"
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def n_interact_features(self) -> int:
+        f = self.n_sparse + 1
+        return f * (f - 1) // 2
+
+    def replace(self, **kw):
+        import dataclasses
+        return dataclasses.replace(self, **kw)
+
+
+def init_dlrm(key, cfg: DLRMConfig) -> dict:
+    ks = jax.random.split(key, cfg.n_sparse + 2)
+    tables = [
+        (jax.random.normal(ks[i], (v, cfg.embed_dim), jnp.float32)
+         / jnp.sqrt(jnp.float32(cfg.embed_dim)))
+        for i, v in enumerate(cfg.vocab_sizes)
+    ]
+    return {
+        "tables": tables,
+        "bot": mlp_init(ks[-2], [cfg.n_dense, *cfg.bot_mlp]),
+        "top": mlp_init(ks[-1], [cfg.embed_dim + cfg.n_interact_features, *cfg.top_mlp]),
+    }
+
+
+def abstract_dlrm_params(cfg: DLRMConfig) -> dict:
+    return jax.eval_shape(lambda: init_dlrm(jax.random.PRNGKey(0), cfg))
+
+
+def _dot_interaction(z: jax.Array) -> jax.Array:
+    """z: (B, F, D) -> upper-triangle pairwise dots (B, F*(F-1)/2)."""
+    B, F, D = z.shape
+    zz = jnp.einsum("bfd,bgd->bfg", z, z)
+    iu, ju = jnp.triu_indices(F, k=1)
+    return zz[:, iu, ju]
+
+
+def dlrm_forward(params: dict, dense: jax.Array, sparse: jax.Array, cfg: DLRMConfig) -> jax.Array:
+    """dense: (B, 13) f32; sparse: (B, 26) or (B, 26, L) int32 -> (B,) logits."""
+    if sparse.ndim == 2:
+        sparse = sparse[..., None]
+    x0 = mlp_apply(params["bot"], dense, act=jax.nn.relu, final_act=jax.nn.relu)
+    embs = [
+        embedding_bag(params["tables"][i], sparse[:, i], mode="sum", engine=cfg.table_engine)
+        for i in range(cfg.n_sparse)
+    ]
+    z = jnp.stack([x0] + embs, axis=1)  # (B, 27, D)
+    tri = _dot_interaction(z)
+    top_in = jnp.concatenate([x0, tri], axis=-1)
+    return mlp_apply(params["top"], top_in)[:, 0]
+
+
+def dlrm_loss(params, dense, sparse, labels, cfg: DLRMConfig) -> jax.Array:
+    logits = dlrm_forward(params, dense, sparse, cfg).astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0.0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def retrieval_score(params, dense_query: jax.Array, cand_embs: jax.Array, top_k: int = 100):
+    """`retrieval_cand` cell: query tower -> blocked dot against (N, D)
+    candidate embeddings -> top-k.  One matmul, N = 10^6."""
+    q = mlp_apply(params["bot"], dense_query, act=jax.nn.relu, final_act=jax.nn.relu)  # (B, D)
+    scores = q @ cand_embs.T  # (B, N)
+    return jax.lax.top_k(scores, top_k)

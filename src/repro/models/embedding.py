@@ -1,0 +1,92 @@
+"""EmbeddingBag with HyTM row engines — the DLRM hot path.
+
+JAX has no native ``nn.EmbeddingBag``; this builds it from ``jnp.take`` +
+``jax.ops.segment_sum`` (kernel_taxonomy §B.6), and maps the paper's
+transfer engines onto embedding-row movement (DESIGN.md §4):
+
+* ``gather`` (≙ ImpTM-zero-copy): direct row gather per lookup — one
+  fine-grained access per index, duplicate ids fetched repeatedly (zero-
+  copy's "no reuse" property, paper §II-C).
+* ``dedup``  (≙ ExpTM-compaction): ``jnp.unique``-compact the batch's ids
+  first, gather each hot row once, scatter back through the inverse map —
+  the compaction pass buys transfer reduction exactly when the batch has
+  many duplicate ids (hot rows == the paper's hub vertices).
+* ``onehot`` (≙ ExpTM-filter): stream the whole table through a one-hot
+  matmul — wins only when the batch covers most rows (tiny vocab fields:
+  Criteo has fields with |V| = 3..27).
+
+``select_row_engine`` is the cost model: expected transferred rows per
+engine, same tier structure as Algorithm 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def select_row_engine(vocab: int, n_lookups: int, expected_unique: float | None = None) -> str:
+    """Static cost-model choice (per table, from batch shape statistics).
+
+    rows_gather = n_lookups
+    rows_dedup  = E[unique] + compaction pass over n_lookups indices
+    rows_onehot = vocab (stream the whole table)
+    """
+    if expected_unique is None:
+        # balls-in-bins expectation: V * (1 - (1 - 1/V)^n)
+        expected_unique = vocab * (1.0 - (1.0 - 1.0 / max(vocab, 1)) ** n_lookups)
+    if vocab <= min(n_lookups, 512):
+        return "onehot"
+    if expected_unique < 0.5 * n_lookups:
+        return "dedup"
+    return "gather"
+
+
+def _bag_reduce(rows: jax.Array, bags: int, bag_size: int, mode: str) -> jax.Array:
+    rows = rows.reshape(bags, bag_size, rows.shape[-1])
+    if mode == "sum":
+        return jnp.sum(rows, axis=1)
+    if mode == "mean":
+        return jnp.mean(rows, axis=1)
+    if mode == "max":
+        return jnp.max(rows, axis=1)
+    raise ValueError(mode)
+
+
+def embedding_bag(
+    table: jax.Array,      # (V, D)
+    indices: jax.Array,    # (B, L) int32 — L-hot bags
+    mode: str = "sum",
+    engine: str = "auto",
+) -> jax.Array:
+    """(B, L) indices -> (B, D) reduced embeddings."""
+    B, L = indices.shape
+    V, D = table.shape
+    if engine == "auto":
+        engine = select_row_engine(V, B * L)
+    flat = indices.reshape(-1)
+
+    if engine == "gather":
+        rows = jnp.take(table, flat, axis=0)
+    elif engine == "dedup":
+        # compaction pass: unique ids (static-size padded), single gather of
+        # hot rows, inverse-map expansion.  size=B*L is the worst case; the
+        # win is in *transfer* (each hot row moves once), which the modeled
+        # bytes in benchmarks/table6 account for.
+        uniq, inv = jnp.unique(flat, size=B * L, fill_value=0, return_inverse=True)
+        hot = jnp.take(table, uniq, axis=0)
+        rows = jnp.take(hot, inv.reshape(-1), axis=0)
+    elif engine == "onehot":
+        onehot = jax.nn.one_hot(flat, V, dtype=table.dtype)
+        rows = onehot @ table
+    else:
+        raise ValueError(engine)
+    return _bag_reduce(rows, B, L, mode)
+
+
+def embedding_bag_grad_rows(vocab: int, indices: jax.Array) -> jax.Array:
+    """Number of distinct rows touched by the backward scatter (used by the
+    table-placement cost model in benchmarks)."""
+    flat = indices.reshape(-1)
+    marks = jnp.zeros(vocab, dtype=jnp.int32).at[flat].set(1)
+    return jnp.sum(marks)

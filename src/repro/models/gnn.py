@@ -1,0 +1,283 @@
+"""GNN architectures: GraphSAGE, PNA, GatedGCN, MeshGraphNet.
+
+Message passing is ``jax.ops.segment_sum/max/min`` over an edge-index
+(src, dst) scatter — JAX has no CSR/CSC sparse, so this IS the system's
+SpMM layer (kernel_taxonomy §B.3).  The blocked Pallas path for the same
+computation is ``kernels/segment_spmm`` (the HyTM filter engine's compute
+core); full-batch training is the all-active regime where the HyTM cost
+model always picks the filter engine, while sampled minibatches
+(GraphSAGE fanout) are the sparse-frontier regime served by the gather
+engine (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, layer_norm, mlp_apply, mlp_init
+
+
+@dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    arch: str                   # 'graphsage' | 'pna' | 'gatedgcn' | 'meshgraphnet'
+    n_layers: int
+    d_hidden: int
+    d_in: int
+    d_out: int
+    aggregator: str = "mean"
+    sample_sizes: tuple = ()    # GraphSAGE minibatch fanouts
+    mlp_layers: int = 2         # MeshGraphNet MLP depth
+    d_edge_in: int = 1          # edge feature dim (gatedgcn / meshgraphnet)
+    task: str = "node"          # 'node' | 'graph' | 'regression'
+    dtype: str = "float32"
+
+    def replace(self, **kw):
+        import dataclasses
+        return dataclasses.replace(self, **kw)
+
+
+# ------------------------------------------------------------ aggregation
+
+def aggregate(messages: jax.Array, dst: jax.Array, n: int, how: str) -> jax.Array:
+    """The message-passing primitive (scatter-combine by destination)."""
+    if how == "sum":
+        return jax.ops.segment_sum(messages, dst, num_segments=n)
+    if how == "mean":
+        s = jax.ops.segment_sum(messages, dst, num_segments=n)
+        c = jax.ops.segment_sum(jnp.ones_like(messages[:, :1]), dst, num_segments=n)
+        return s / jnp.maximum(c, 1.0)
+    if how == "max":
+        out = jax.ops.segment_max(messages, dst, num_segments=n)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    if how == "min":
+        out = jax.ops.segment_min(messages, dst, num_segments=n)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    if how == "std":
+        mean = aggregate(messages, dst, n, "mean")
+        sq = aggregate(jnp.square(messages), dst, n, "mean")
+        return jnp.sqrt(jnp.maximum(sq - jnp.square(mean), 0.0) + 1e-6)
+    raise ValueError(how)
+
+
+# -------------------------------------------------------------- GraphSAGE
+
+def init_graphsage(key, cfg: GNNConfig):
+    dims = [cfg.d_in] + [cfg.d_hidden] * cfg.n_layers
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    layers = [
+        {
+            "w_self": dense_init(jax.random.fold_in(ks[i], 0), dims[i], dims[i + 1]),
+            "w_nbr": dense_init(jax.random.fold_in(ks[i], 1), dims[i], dims[i + 1]),
+            "b": jnp.zeros((dims[i + 1],)),
+        }
+        for i in range(cfg.n_layers)
+    ]
+    return {"layers": layers, "out": dense_init(ks[-1], cfg.d_hidden, cfg.d_out)}
+
+
+def graphsage_forward(params, feats, edge_src, edge_dst, cfg: GNNConfig):
+    """Full-graph forward."""
+    h = feats
+    n = feats.shape[0]
+    for lp in params["layers"]:
+        h_n = aggregate(h[edge_src], edge_dst, n, cfg.aggregator)
+        h = jax.nn.relu(h @ lp["w_self"] + h_n @ lp["w_nbr"] + lp["b"])
+        h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+    return h @ params["out"]
+
+
+def graphsage_minibatch_forward(params, layer_feats: list[jax.Array], cfg: GNNConfig):
+    """Sampled forward: ``layer_feats[k]`` are features of hop-k vertices
+    (hop-0 = seeds), shaped (b * prod(fanouts[:k]), d_in).  Aggregation is
+    a reshape-mean over the fanout axis — the static-shape GraphSAGE
+    estimator (fine-grained gather regime of HyTM)."""
+    fan = cfg.sample_sizes
+    hs = list(layer_feats)
+    for li, lp in enumerate(params["layers"]):
+        depth = len(fan) - li  # hops available this round
+        new_hs = []
+        for k in range(depth):
+            parent = hs[k]
+            child = hs[k + 1]
+            agg = child.reshape(parent.shape[0], fan[k], child.shape[-1])
+            agg = jnp.mean(agg, axis=1) if cfg.aggregator == "mean" else jnp.max(agg, axis=1)
+            h = jax.nn.relu(parent @ lp["w_self"] + agg @ lp["w_nbr"] + lp["b"])
+            h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+            new_hs.append(h)
+        hs = new_hs
+    return hs[0] @ params["out"]
+
+
+# ------------------------------------------------------------------- PNA
+
+PNA_AGGREGATORS = ("mean", "max", "min", "std")
+
+
+def init_pna(key, cfg: GNNConfig, avg_log_deg: float = 1.0):
+    dims = [cfg.d_in] + [cfg.d_hidden] * cfg.n_layers
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    layers = []
+    for i in range(cfg.n_layers):
+        k1, k2, k3 = jax.random.split(ks[i], 3)
+        layers.append({
+            "w_msg": dense_init(k1, 2 * dims[i], dims[i]),
+            "w_upd": dense_init(k2, dims[i] + 12 * dims[i], dims[i + 1]),
+            "b_upd": jnp.zeros((dims[i + 1],)),
+        })
+    return {
+        "layers": layers,
+        "out": dense_init(ks[-1], cfg.d_hidden, cfg.d_out),
+        "avg_log_deg": jnp.float32(avg_log_deg),
+    }
+
+
+def pna_forward(params, feats, edge_src, edge_dst, cfg: GNNConfig):
+    h = feats
+    n = feats.shape[0]
+    deg = jax.ops.segment_sum(jnp.ones_like(edge_dst, dtype=jnp.float32), edge_dst, num_segments=n)
+    log_deg = jnp.log(deg + 1.0)[:, None]
+    delta = jnp.maximum(params["avg_log_deg"], 1e-3)
+    scalers = (
+        jnp.ones_like(log_deg),            # identity
+        log_deg / delta,                   # amplification
+        delta / jnp.maximum(log_deg, 1e-3),  # attenuation
+    )
+    for lp in params["layers"]:
+        msg = jax.nn.relu(
+            jnp.concatenate([h[edge_src], h[edge_dst]], axis=-1) @ lp["w_msg"]
+        )
+        aggs = [aggregate(msg, edge_dst, n, a) for a in PNA_AGGREGATORS]
+        scaled = [a * s for a in aggs for s in scalers]  # 4 x 3 = 12
+        h = jax.nn.relu(
+            jnp.concatenate([h] + scaled, axis=-1) @ lp["w_upd"] + lp["b_upd"]
+        )
+    return h @ params["out"]
+
+
+# -------------------------------------------------------------- GatedGCN
+
+def init_gatedgcn(key, cfg: GNNConfig):
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    layers = []
+    for i in range(cfg.n_layers):
+        kk = jax.random.split(ks[i], 5)
+        d = cfg.d_hidden
+        layers.append({
+            "A": dense_init(kk[0], d, d), "B": dense_init(kk[1], d, d),
+            "C": dense_init(kk[2], d, d), "U": dense_init(kk[3], d, d),
+            "V": dense_init(kk[4], d, d),
+            "ln_h": jnp.ones((d,)), "ln_h_b": jnp.zeros((d,)),
+            "ln_e": jnp.ones((d,)), "ln_e_b": jnp.zeros((d,)),
+        })
+    return {
+        "embed_h": dense_init(ks[-3], cfg.d_in, cfg.d_hidden),
+        "embed_e": dense_init(ks[-2], cfg.d_edge_in, cfg.d_hidden),
+        "layers": layers,
+        "out": dense_init(ks[-1], cfg.d_hidden, cfg.d_out),
+    }
+
+
+def gatedgcn_forward(params, feats, edge_src, edge_dst, edge_feats, cfg: GNNConfig):
+    """Bresson & Laurent residual gated graph convnets [arXiv:1711.07553]
+    (LayerNorm replaces BatchNorm — TPU-friendly, noted in DESIGN.md)."""
+    n = feats.shape[0]
+    h = feats @ params["embed_h"]
+    e = edge_feats @ params["embed_e"]
+    for lp in params["layers"]:
+        e_new = h[edge_src] @ lp["A"] + h[edge_dst] @ lp["B"] + e @ lp["C"]
+        eta = jax.nn.sigmoid(e_new)
+        num = aggregate(eta * (h[edge_src] @ lp["V"]), edge_dst, n, "sum")
+        den = aggregate(eta, edge_dst, n, "sum")
+        h_new = h @ lp["U"] + num / (den + 1e-6)
+        h = h + jax.nn.relu(layer_norm(h_new, lp["ln_h"], lp["ln_h_b"]))
+        e = e + jax.nn.relu(layer_norm(e_new, lp["ln_e"], lp["ln_e_b"]))
+    return h @ params["out"]
+
+
+# ---------------------------------------------------------- MeshGraphNet
+
+def init_meshgraphnet(key, cfg: GNNConfig):
+    d = cfg.d_hidden
+    hidden = [d] * cfg.mlp_layers
+    ks = jax.random.split(key, 2 * cfg.n_layers + 3)
+    proc = []
+    for i in range(cfg.n_layers):
+        proc.append({
+            "edge_mlp": mlp_init(ks[2 * i], [3 * d] + hidden + [d]),
+            "node_mlp": mlp_init(ks[2 * i + 1], [2 * d] + hidden + [d]),
+            "ln_e": jnp.ones((d,)), "ln_e_b": jnp.zeros((d,)),
+            "ln_h": jnp.ones((d,)), "ln_h_b": jnp.zeros((d,)),
+        })
+    return {
+        "enc_node": mlp_init(ks[-3], [cfg.d_in] + hidden + [d]),
+        "enc_edge": mlp_init(ks[-2], [cfg.d_edge_in] + hidden + [d]),
+        "processor": proc,
+        "dec": mlp_init(ks[-1], [d] + hidden + [cfg.d_out]),
+    }
+
+
+def meshgraphnet_forward(params, feats, edge_src, edge_dst, edge_feats, cfg: GNNConfig):
+    """Encode-process-decode [arXiv:2010.03409]; sum aggregator."""
+    n = feats.shape[0]
+    h = mlp_apply(params["enc_node"], feats)
+    e = mlp_apply(params["enc_edge"], edge_feats)
+    for lp in params["processor"]:
+        e_in = jnp.concatenate([e, h[edge_src], h[edge_dst]], axis=-1)
+        e = e + layer_norm(mlp_apply(lp["edge_mlp"], e_in), lp["ln_e"], lp["ln_e_b"])
+        agg = aggregate(e, edge_dst, n, "sum")
+        h_in = jnp.concatenate([h, agg], axis=-1)
+        h = h + layer_norm(mlp_apply(lp["node_mlp"], h_in), lp["ln_h"], lp["ln_h_b"])
+    return mlp_apply(params["dec"], h)
+
+
+# ------------------------------------------------------------- dispatch
+
+def init_gnn(key, cfg: GNNConfig):
+    return {
+        "graphsage": init_graphsage,
+        "pna": init_pna,
+        "gatedgcn": init_gatedgcn,
+        "meshgraphnet": init_meshgraphnet,
+    }[cfg.arch](key, cfg)
+
+
+def gnn_forward(params, cfg: GNNConfig, feats, edge_src, edge_dst, edge_feats=None):
+    if cfg.arch == "graphsage":
+        return graphsage_forward(params, feats, edge_src, edge_dst, cfg)
+    if cfg.arch == "pna":
+        return pna_forward(params, feats, edge_src, edge_dst, cfg)
+    if cfg.arch == "gatedgcn":
+        if edge_feats is None:
+            edge_feats = jnp.ones((edge_src.shape[0], cfg.d_edge_in), feats.dtype)
+        return gatedgcn_forward(params, feats, edge_src, edge_dst, edge_feats, cfg)
+    if cfg.arch == "meshgraphnet":
+        if edge_feats is None:
+            edge_feats = jnp.ones((edge_src.shape[0], cfg.d_edge_in), feats.dtype)
+        return meshgraphnet_forward(params, feats, edge_src, edge_dst, edge_feats, cfg)
+    raise ValueError(cfg.arch)
+
+
+def gnn_loss(params, cfg: GNNConfig, feats, edge_src, edge_dst, labels,
+             label_mask=None, edge_feats=None, graph_ids=None, n_graphs=0):
+    out = gnn_forward(params, cfg, feats, edge_src, edge_dst, edge_feats)
+    if cfg.task == "graph":
+        # batched-small-graph cell: mean-pool per graph then classify
+        pooled = jax.ops.segment_sum(out, graph_ids, num_segments=n_graphs)
+        counts = jax.ops.segment_sum(jnp.ones_like(out[:, :1]), graph_ids, num_segments=n_graphs)
+        logits = pooled / jnp.maximum(counts, 1.0)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+    if cfg.task == "regression":
+        err = jnp.square(out - labels)
+        if label_mask is not None:
+            return jnp.sum(err * label_mask[:, None]) / jnp.maximum(jnp.sum(label_mask), 1.0)
+        return jnp.mean(err)
+    logp = jax.nn.log_softmax(out.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    if label_mask is not None:
+        return -jnp.sum(ll * label_mask) / jnp.maximum(jnp.sum(label_mask), 1.0)
+    return -jnp.mean(ll)

@@ -1,0 +1,1 @@
+"""Training substrate: optimizers, stepping, checkpointing, fault tolerance."""

@@ -1,0 +1,81 @@
+"""Gradient compression with error feedback (distributed-optimization
+substrate for DP gradient exchange at 1000+ node scale).
+
+Two compressors:
+* ``int8`` — per-tensor symmetric quantization: 4x fewer bytes on the
+  all-reduce wire; error feedback (Seide et al. / EF-SGD) accumulates the
+  quantization residual locally so the scheme stays unbiased over time.
+* ``topk`` — magnitude sparsification to fraction ``k`` with residual
+  accumulation (Deep Gradient Compression).
+
+The compressors are pure pytree transforms usable inside jit; the train
+step applies compress -> (wire) -> decompress around the optimizer so the
+numerics of a compressed all-reduce are faithfully reproduced even though
+XLA's collective itself stays uncompressed on the CPU dry-run target.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "none"       # 'none' | 'int8' | 'topk'
+    topk_fraction: float = 0.01
+    error_feedback: bool = True
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _int8_roundtrip(g: jax.Array) -> jax.Array:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_roundtrip(g: jax.Array, frac: float) -> jax.Array:
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def compress_grads(cfg: CompressionConfig, grads, error_state):
+    """Returns (wire_grads, new_error_state).  wire_grads is what survives
+    the compressed exchange; the residual goes to error feedback."""
+    if cfg.kind == "none":
+        return grads, error_state
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + (e if cfg.error_feedback else 0.0)
+        if cfg.kind == "int8":
+            wire = _int8_roundtrip(g32)
+        elif cfg.kind == "topk":
+            wire = _topk_roundtrip(g32, cfg.topk_fraction)
+        else:
+            raise ValueError(cfg.kind)
+        new_e = g32 - wire if cfg.error_feedback else e
+        return wire.astype(g.dtype), new_e
+
+    out = jax.tree.map(one, grads, error_state)
+    isl = lambda x: isinstance(x, tuple)
+    return (
+        jax.tree.map(lambda o: o[0], out, is_leaf=isl),
+        jax.tree.map(lambda o: o[1], out, is_leaf=isl),
+    )
+
+
+def wire_bytes(cfg: CompressionConfig, grads) -> float:
+    """Modeled bytes on the all-reduce wire (for EXPERIMENTS.md §Perf)."""
+    total = sum(l.size for l in jax.tree.leaves(grads))
+    if cfg.kind == "int8":
+        return total * 1.0 + len(jax.tree.leaves(grads)) * 4.0
+    if cfg.kind == "topk":
+        return total * cfg.topk_fraction * 8.0  # value + index
+    return total * 4.0

@@ -1,0 +1,181 @@
+"""Optimizers: AdamW, Adafactor (factored second moments — required to fit
+1T-param MoE optimizer state on a 512-chip v5e slice, DESIGN.md §5), SGD.
+
+Plain pytree transforms (no optax dependency): ``init_opt_state`` /
+``apply_updates``.  Optimizer state inherits parameter sharding under
+GSPMD (fully-sharded optimizer == ZeRO-equivalent for free).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"          # 'adamw' | 'adafactor' | 'sgd'
+    learning_rate: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"     # 'cosine' | 'linear' | 'constant'
+    # adafactor
+    factored_min_dim: int = 32
+    decay_rate: float = 0.8
+
+    def replace(self, **kw):
+        import dataclasses
+        return dataclasses.replace(self, **kw)
+
+
+def learning_rate(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    if cfg.schedule == "cosine":
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - frac
+    else:
+        decay = 1.0
+    return cfg.learning_rate * warm * decay
+
+
+def _is_factored(shape, cfg: OptimizerConfig) -> bool:
+    return len(shape) >= 2 and shape[-1] >= cfg.factored_min_dim and shape[-2] >= cfg.factored_min_dim
+
+
+def init_opt_state(cfg: OptimizerConfig, params) -> dict:
+    if cfg.name == "sgd":
+        return {"momentum": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+    if cfg.name == "adamw":
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+    if cfg.name == "adafactor":
+        def fac(p):
+            if _is_factored(p.shape, cfg):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),          # row stats
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),  # col stats
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(fac, params, is_leaf=lambda x: hasattr(x, "shape"))}
+    raise ValueError(cfg.name)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+_CHUNKED_LEAF_ELEMS = 2**27  # 128M elements (~512 MB fp32 temporaries)
+
+
+def _leafwise_factored(upd):
+    """Adafactor variant: the state leaf is a dict ({vr,vc} or {v});
+    lax.map over the leading axis maps each field's leading dim too."""
+
+    def wrapped(p, g, f):
+        if p.ndim >= 3 and p.shape[0] >= 4 and p.size >= _CHUNKED_LEAF_ELEMS:
+            return jax.lax.map(lambda xs: upd(*xs), (p, g, f))
+        return upd(p, g, f)
+
+    return wrapped
+
+
+def _leafwise(upd):
+    """Apply a per-leaf update function, scanning over the leading (layer-
+    stack) axis for huge leaves so the fp32 temporaries (g32, vhat, u,
+    p32) are bounded per-layer instead of materialized for the whole
+    (L, E, D, F) stack — a 1T-param MoE would otherwise hold several
+    multi-GiB fp32 copies of each expert leaf at once."""
+
+    def wrapped(p, *rest):
+        if p.ndim >= 3 and p.shape[0] >= 4 and p.size >= _CHUNKED_LEAF_ELEMS:
+            return jax.lax.map(lambda xs: upd(*xs), (p, *rest))
+        return upd(p, *rest)
+
+    return wrapped
+
+
+def apply_updates(cfg: OptimizerConfig, params, grads, state, step: jax.Array):
+    lr = learning_rate(cfg, step)
+    count = step.astype(jnp.float32) + 1.0
+
+    if cfg.name == "sgd":
+        def upd(p, g, m):
+            m = 0.9 * m + g.astype(jnp.float32)
+            return (p - lr * m).astype(p.dtype), m
+        out = jax.tree.map(upd, params, grads, state["momentum"])
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"momentum": new_m}
+
+    if cfg.name == "adamw":
+        bc1 = 1.0 - cfg.b1 ** count
+        bc2 = 1.0 - cfg.b2 ** count
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m = cfg.b1 * m + (1 - cfg.b1) * g32
+            v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(_leafwise(upd), params, grads, state["m"], state["v"])
+        isl = lambda x: isinstance(x, tuple)
+        return (
+            jax.tree.map(lambda o: o[0], out, is_leaf=isl),
+            {
+                "m": jax.tree.map(lambda o: o[1], out, is_leaf=isl),
+                "v": jax.tree.map(lambda o: o[2], out, is_leaf=isl),
+            },
+        )
+
+    if cfg.name == "adafactor":
+        decay = 1.0 - count ** (-cfg.decay_rate)
+
+        def upd(p, g, f):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + 1e-30
+            if "vr" in f:
+                vr = decay * f["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * f["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+                vhat = vr[..., None] * vc[..., None, :] / denom[..., None]
+                newf = {"vr": vr, "vc": vc}
+            else:
+                vhat = decay * f["v"] + (1 - decay) * g2
+                newf = {"v": vhat}
+            u = g32 / jnp.sqrt(vhat + 1e-30)
+            # update clipping (Shazeer & Stern): RMS(u) capped at 1
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), newf
+
+        out = jax.tree.map(_leafwise_factored(upd), params, grads, state["f"])
+        # out mirrors params' structure with (p, f) tuples at leaves
+        isl = lambda x: isinstance(x, tuple)
+        return (
+            jax.tree.map(lambda o: o[0], out, is_leaf=isl),
+            {"f": jax.tree.map(lambda o: o[1], out, is_leaf=isl)},
+        )
+
+    raise ValueError(cfg.name)

@@ -1,0 +1,108 @@
+"""Generic train/eval stepping: loss -> (microbatched) grads -> clip ->
+(optional compression w/ error feedback) -> optimizer update.
+
+``make_train_step`` returns a pure function suitable for jit/pjit; the
+microbatch path accumulates gradients with ``lax.scan`` (gradient
+accumulation == pipeline-friendly activation memory bound).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.compression import CompressionConfig, compress_grads
+from repro.train.optimizer import OptimizerConfig, apply_updates, clip_by_global_norm
+
+
+@dataclass(frozen=True)
+class TrainState:
+    """Lightweight pytree train state (registered below)."""
+
+    params: dict
+    opt_state: dict
+    error_state: dict | None
+    step: jax.Array
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt_state, s.error_state, s.step), None),
+    lambda _, c: TrainState(*c),
+)
+
+
+def init_train_state(params, opt_cfg: OptimizerConfig, comp_cfg: CompressionConfig | None = None):
+    from repro.train.compression import init_error_state
+    from repro.train.optimizer import init_opt_state
+
+    err = None
+    if comp_cfg is not None and comp_cfg.kind != "none":
+        err = init_error_state(params)
+    return TrainState(
+        params=params,
+        opt_state=init_opt_state(opt_cfg, params),
+        error_state=err,
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_train_step(
+    loss_fn: Callable,            # loss_fn(params, batch) -> scalar
+    opt_cfg: OptimizerConfig,
+    comp_cfg: CompressionConfig | None = None,
+    microbatches: int = 1,
+    microbatch_constraint: Callable | None = None,
+    accum_dtype=jnp.float32,
+):
+    """``microbatch_constraint`` re-pins the reshaped (mb, B/mb, ...) batch
+    sharding: without it GSPMD is free to shard the *microbatch* axis over
+    the data mesh axis, which silently turns gradient accumulation back
+    into one full-batch step (observed: +13 GiB/device on train_4k)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def train_step(state: TrainState, batch):
+        if microbatches > 1:
+            # batch leading dim splits into microbatches; grads accumulate
+            # in fp32 (bounds activation memory for the huge-model cells).
+            def micro(carry, mb):
+                loss_acc, g_acc = carry
+                loss, g = grads_of(state.params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(accum_dtype), g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:]),
+                batch,
+            )
+            if microbatch_constraint is not None:
+                mbs = microbatch_constraint(mbs)
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), state.params)
+            (loss, grads), _ = jax.lax.scan(micro, (jnp.float32(0.0), zero_g), mbs)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = grads_of(state.params, batch)
+
+        grads, grad_norm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+
+        error_state = state.error_state
+        if comp_cfg is not None and comp_cfg.kind != "none":
+            grads, error_state = compress_grads(comp_cfg, grads, error_state)
+
+        params, opt_state = apply_updates(
+            opt_cfg, state.params, grads, state.opt_state, state.step
+        )
+        new_state = TrainState(
+            params=params, opt_state=opt_state,
+            error_state=error_state, step=state.step + 1,
+        )
+        metrics = {"loss": loss, "grad_norm": grad_norm}
+        return new_state, metrics
+
+    return train_step

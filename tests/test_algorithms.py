@@ -1,0 +1,96 @@
+"""Graph algorithms vs numpy references + scheduling behaviour."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.hytm import HyTMConfig, run_hytm
+from repro.graph.algorithms import (
+    BFS,
+    CC,
+    PAGERANK,
+    PHP,
+    SSSP,
+    reference_bfs,
+    reference_cc,
+    reference_pagerank,
+    reference_sssp,
+)
+from repro.graph.generators import grid_mesh_graph, rmat_graph, uniform_graph
+from repro.graph.hub_sort import hub_sort
+
+GRAPHS = [
+    ("rmat", lambda: rmat_graph(800, 6000, seed=21)),
+    ("uniform", lambda: uniform_graph(500, 3000, seed=22)),
+    ("mesh", lambda: grid_mesh_graph(16, 16, seed=23)),
+]
+
+
+@pytest.mark.parametrize("name,make", GRAPHS)
+def test_sssp(name, make):
+    g = make()
+    res = run_hytm(g, SSSP, source=0, config=HyTMConfig(n_partitions=12))
+    assert np.allclose(res.values, reference_sssp(g, 0))
+
+
+@pytest.mark.parametrize("name,make", GRAPHS)
+def test_bfs(name, make):
+    g = make()
+    res = run_hytm(g, BFS, source=0, config=HyTMConfig(n_partitions=12))
+    assert np.allclose(res.values, reference_bfs(g, 0))
+
+
+@pytest.mark.parametrize("name,make", GRAPHS)
+def test_cc(name, make):
+    g = make()
+    res = run_hytm(g.symmetrize(), CC, source=None, config=HyTMConfig(n_partitions=12))
+    assert np.allclose(res.values, reference_cc(g))
+
+
+@pytest.mark.parametrize("name,make", GRAPHS)
+def test_pagerank(name, make):
+    g = make()
+    prog = dataclasses.replace(PAGERANK, tolerance=1e-7)
+    res = run_hytm(g, prog, source=None, config=HyTMConfig(n_partitions=12))
+    ref = reference_pagerank(g)
+    assert np.max(np.abs(res.values + res.delta - ref)) < 1e-3
+
+
+def test_php_converges():
+    g = rmat_graph(300, 2000, seed=24)
+    prog = dataclasses.replace(PHP, tolerance=1e-6)
+    res = run_hytm(g, prog, source=None, config=HyTMConfig(n_partitions=8))
+    assert res.iterations < HyTMConfig().max_iters
+    assert np.all(np.isfinite(res.values))
+
+
+def test_hub_sort_run_maps_back():
+    g = rmat_graph(600, 5000, seed=25)
+    hs = hub_sort(g)
+    cfg = HyTMConfig(n_partitions=12, cds_mode="hub")
+    src_new = int(hs.perm[0])
+    res = run_hytm(hs.graph, SSSP, source=src_new, config=cfg, n_hubs=hs.n_hubs)
+    back = hs.values_to_old(res.values)
+    assert np.allclose(back, reference_sssp(g, 0))
+
+
+def test_delta_cds_reduces_iterations():
+    g = rmat_graph(2000, 16000, seed=26)
+    prog = dataclasses.replace(PAGERANK, tolerance=1e-6)
+    base = run_hytm(g, prog, source=None,
+                    config=HyTMConfig(n_partitions=16, cds_mode="none", recompute_once=False))
+    cds = run_hytm(g, prog, source=None,
+                   config=HyTMConfig(n_partitions=16, cds_mode="delta", recompute_once=True))
+    ref = reference_pagerank(g)
+    assert np.max(np.abs(cds.values + cds.delta - ref)) < 1e-2
+    assert cds.iterations <= base.iterations  # Fig-8 CDS effect
+
+
+def test_history_records_engine_mix():
+    g = rmat_graph(1000, 8000, seed=27)
+    res = run_hytm(g, SSSP, source=0, config=HyTMConfig(n_partitions=16))
+    eng = res.history["engines"]
+    assert eng.shape == (res.iterations, 16)
+    assert set(np.unique(eng)).issubset({-1, 0, 1, 2})
+    assert res.total_transfer_bytes > 0

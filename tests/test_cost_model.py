@@ -1,0 +1,128 @@
+"""HyTM cost model (Eqs. 1-3), Algorithm-1 selection, task combination."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.constants import PCIE3, TPU_V5E_HBM
+from repro.core.cost_model import (
+    COMPACT,
+    FILTER,
+    NONE,
+    ZEROCOPY,
+    PartitionStats,
+    engine_costs,
+    modeled_transfer_bytes,
+    select_engines,
+)
+from repro.core.task_generation import _merged_filter_tasks, forced_engine_plan, generate_tasks
+
+
+def _stats(E, Ea, A, req):
+    return PartitionStats(
+        active_edges=jnp.asarray(Ea, jnp.float32),
+        active_vertices=jnp.asarray(A, jnp.float32),
+        zc_requests=jnp.asarray(req, jnp.float32),
+        total_edges=jnp.asarray(E, jnp.float32),
+    )
+
+
+def test_inactive_partitions_skipped():
+    s = _stats([1000, 1000], [0, 10], [0, 5], [0, 5])
+    eng = select_engines(s, engine_costs(s, PCIE3), PCIE3)
+    assert int(eng[0]) == NONE and int(eng[1]) != NONE
+
+
+def test_high_activeness_prefers_filter():
+    # nearly all edges active: filter (paper §III-C "Prefer" curve)
+    s = _stats([100_000], [95_000], [5_000], [95_000 / 32 + 2_000])
+    eng = select_engines(s, engine_costs(s, PCIE3), PCIE3)
+    assert int(eng[0]) == FILTER
+
+
+def test_sparse_high_degree_prefers_zerocopy():
+    # few active vertices with large degree: EMOGI's regime (Table III)
+    s = _stats([1_000_000], [3200], [10], [110])
+    eng = select_engines(s, engine_costs(s, PCIE3), PCIE3)
+    assert int(eng[0]) == ZEROCOPY
+
+
+def test_sparse_low_degree_prefers_compaction():
+    # many active vertices, small average degree: compaction's regime.
+    # Each vertex needs its own (unsaturated) zc request: req ~ A.
+    s = _stats([1_000_000], [6000], [3000], [3000.0])
+    eng = select_engines(s, engine_costs(s, PCIE3), PCIE3)
+    assert int(eng[0]) == COMPACT
+
+
+def test_fig4_toy_graph_zerocopy_instability():
+    """Paper Fig. 4: same active-edge ratio, different active-vertex
+    counts => different zero-copy cost (6 requests vs 3)."""
+    # 128-edge graph, two 64-edge subsets; d1=4, m=128 -> 32 nbrs/request
+    green = _stats([128], [64], [6], [6.0])   # 6 small-degree vertices
+    gray = _stats([128], [64], [3], [3.0])    # 3 large-degree vertices
+    cg = engine_costs(green, PCIE3)
+    cy = engine_costs(gray, PCIE3)
+    assert float(cg.tiz[0]) >= float(cy.tiz[0])
+    # filter cost identical (whole-subset transfer)
+    assert float(cg.tef[0]) == float(cy.tef[0])
+
+
+@settings(deadline=None, max_examples=40)
+@given(
+    E=st.integers(1, 10**7),
+    frac=st.floats(0.0, 1.0),
+    A=st.integers(0, 10**5),
+    seed=st.integers(0, 100),
+)
+def test_cost_monotonicity_property(E, frac, A, seed):
+    Ea = int(E * frac)
+    req = max(A, Ea * 4 // 128) if Ea > 0 else 0
+    s = _stats([E], [Ea], [min(A, Ea)], [req])
+    c = engine_costs(s, PCIE3)
+    # compaction transfer never exceeds filter transfer + index overhead
+    # (+2 transaction groups of slack for fp32 ceil interplay)
+    group = PCIE3.m * PCIE3.mr
+    idx_overhead = (min(A, Ea) * PCIE3.d2 / group + 2) * PCIE3.rtt
+    assert float(c.tec[0]) <= float(c.tef[0]) + idx_overhead
+    # all costs nonnegative, zero-activeness costs zero for tec/tiz
+    assert float(c.tec[0]) >= 0 and float(c.tiz[0]) >= 0
+    if Ea == 0:
+        assert float(c.tiz[0]) == 0.0
+
+
+def test_merged_filter_tasks_k4():
+    # runs of consecutive FILTER partitions merge into ceil(len/4) tasks
+    is_f = jnp.asarray([1, 1, 1, 1, 1, 0, 1, 1, 0, 1, 1, 1, 1, 1], bool)
+    # runs: 5 -> 2 tasks; 2 -> 1; 5 -> 2  == 5 tasks
+    assert int(_merged_filter_tasks(is_f, 4)) == 5
+
+
+def test_task_combination_reduces_tasks():
+    link = PCIE3.with_(mr=4.0)  # fine groups: no rounding ties at toy scale
+    E = [1000] * 8
+    Ea = [900] * 8  # all filter
+    s = _stats(E, Ea, [100] * 8, [100] * 8)
+    with_tc = generate_tasks(s, link, enable_combination=True)
+    without = generate_tasks(s, link, enable_combination=False)
+    assert int(with_tc.n_tasks) == 2  # 8 consecutive filter / k=4
+    assert int(without.n_tasks) == 8
+
+
+def test_forced_engine_plan_matches_table6_accounting():
+    s = _stats([1000, 1000], [100, 100], [10, 10], [12, 12])
+    for eng, expected in [
+        (FILTER, 2 * 1000 * PCIE3.d1),
+        (COMPACT, 2 * (100 * PCIE3.d1 + 10 * PCIE3.d2)),
+        (ZEROCOPY, 2 * 12 * PCIE3.m),
+    ]:
+        plan = forced_engine_plan(s, PCIE3, eng)
+        assert float(jnp.sum(plan.transfer_bytes)) == pytest.approx(expected)
+
+
+def test_tpu_link_model_compaction_pass_charged():
+    s = _stats([100_000], [50_000], [1000], [2000])
+    c_tpu = engine_costs(s, TPU_V5E_HBM)
+    c_free = engine_costs(s, TPU_V5E_HBM.with_(compaction_bandwidth=0.0))
+    assert float(c_tpu.tec[0]) > float(c_free.tec[0])

@@ -1,0 +1,91 @@
+"""The three transfer engines must produce identical relax results
+(property-tested), and the full HyTM runs must be engine-invariant."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import COMPACT, FILTER, ZEROCOPY
+from repro.core.engines import EdgeBlock, relax_compact, relax_filter, relax_zerocopy
+from repro.core.hytm import HyTMConfig, run_hytm
+from repro.graph.algorithms import PAGERANK, SSSP, reference_pagerank, reference_sssp
+from repro.graph.generators import rmat_graph
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    n=st.integers(2, 64),
+    b=st.integers(1, 256),
+    seed=st.integers(0, 1000),
+    combine_min=st.booleans(),
+)
+def test_engines_identical_property(n, b, seed, combine_min):
+    rng = np.random.default_rng(seed)
+    block = EdgeBlock(
+        src=jnp.asarray(rng.integers(0, n, b), jnp.int32),
+        dst=jnp.asarray(rng.integers(0, n, b), jnp.int32),
+        weight=jnp.asarray(rng.random(b), jnp.float32),
+        active=jnp.asarray(rng.random(b) < 0.5),
+    )
+    operand = jnp.asarray(rng.random(n), jnp.float32)
+    prog = SSSP if combine_min else PAGERANK
+    outs = [
+        fn(block, operand, n, prog)
+        for fn in (relax_filter, relax_compact, relax_zerocopy)
+    ]
+    for o in outs[1:]:
+        assert jnp.allclose(outs[0].agg, o.agg, atol=1e-5, equal_nan=True)
+        assert jnp.array_equal(outs[0].touched, o.touched)
+
+
+def _converges_to_reference(g, engine):
+    cfg = HyTMConfig(n_partitions=8, forced_engine=engine)
+    res = run_hytm(g, SSSP, source=0, config=cfg)
+    ref = reference_sssp(g, 0)
+    return np.allclose(res.values, ref, equal_nan=False)
+
+
+def test_full_run_engine_invariant():
+    g = rmat_graph(500, 4000, seed=11)
+    for eng in (FILTER, COMPACT, ZEROCOPY, None):
+        cfg = HyTMConfig(n_partitions=8, forced_engine=eng)
+        res = run_hytm(g, SSSP, source=0, config=cfg)
+        ref = reference_sssp(g, 0)
+        assert np.allclose(res.values, ref), f"engine {eng} diverged"
+
+
+def test_pagerank_engine_invariant():
+    g = rmat_graph(400, 3000, seed=12)
+    prog = dataclasses.replace(PAGERANK, tolerance=1e-7)
+    ref = reference_pagerank(g)
+    for eng in (FILTER, COMPACT, ZEROCOPY, None):
+        cfg = HyTMConfig(n_partitions=8, forced_engine=eng, cds_mode="delta")
+        res = run_hytm(g, prog, source=None, config=cfg)
+        assert np.max(np.abs(res.values + res.delta - ref)) < 1e-3
+
+
+def test_transfer_bytes_ordering():
+    """Modeled transfer (Table VI): filter moves the most (whole
+    partitions); compaction the least; zero-copy sits above compaction —
+    its request-granularity rounding on low-degree vertices is the
+    paper's Fig-3(d) 'redundant ZC transfer'."""
+    g = rmat_graph(2000, 16000, seed=13)
+    bytes_by_engine = {}
+    for eng in (FILTER, COMPACT, ZEROCOPY):
+        cfg = HyTMConfig(n_partitions=16, forced_engine=eng, recompute_once=False)
+        res = run_hytm(g, SSSP, source=0, config=cfg)
+        bytes_by_engine[eng] = res.total_transfer_bytes
+    assert bytes_by_engine[FILTER] >= bytes_by_engine[COMPACT]
+    assert bytes_by_engine[ZEROCOPY] >= bytes_by_engine[COMPACT]
+
+
+def test_hybrid_never_worse_than_worst_engine():
+    g = rmat_graph(1500, 12000, seed=14)
+    times = {}
+    for eng in (FILTER, COMPACT, ZEROCOPY, None):
+        cfg = HyTMConfig(n_partitions=16, forced_engine=eng, recompute_once=False)
+        res = run_hytm(g, SSSP, source=0, config=cfg)
+        times[eng] = res.modeled_seconds
+    assert times[None] <= max(times[FILTER], times[COMPACT], times[ZEROCOPY]) + 1e-9

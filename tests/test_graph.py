@@ -1,0 +1,121 @@
+"""Graph substrate: CSR, generators, hub sort, partitioning, sampling."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import partition_graph
+from repro.graph.csr import CSRGraph, csr_from_edges, to_device_csr
+from repro.graph.generators import (
+    batched_molecule_graphs,
+    grid_mesh_graph,
+    rmat_graph,
+    uniform_graph,
+)
+from repro.graph.hub_sort import hub_scores, hub_sort
+from repro.graph.sampler import sample_neighbors
+
+
+def test_csr_from_edges_roundtrip():
+    src = np.array([0, 0, 1, 2, 2, 2])
+    dst = np.array([1, 2, 2, 0, 1, 3])
+    w = np.arange(6, dtype=np.float32)
+    g = csr_from_edges(4, src, dst, w)
+    g.validate()
+    assert g.n_nodes == 4 and g.n_edges == 6
+    assert list(g.out_degrees) == [2, 1, 3, 0]
+    assert list(g.in_degrees) == [1, 2, 2, 1]
+    # edges recovered as a set
+    got = set(zip(g.edge_sources().tolist(), g.indices.tolist(), g.weights.tolist()))
+    assert got == set(zip(src.tolist(), dst.tolist(), w.tolist()))
+
+
+def test_generators_valid():
+    for g in [
+        rmat_graph(500, 4000, seed=0),
+        uniform_graph(300, 1000, seed=1),
+        grid_mesh_graph(8, 9),
+        batched_molecule_graphs(4, n_nodes=30, n_edges=64),
+    ]:
+        g.validate()
+        assert g.n_edges > 0
+
+
+def test_rmat_power_law_skew():
+    g = rmat_graph(2048, 40000, seed=3)
+    deg = np.sort(g.out_degrees)[::-1]
+    # RMAT should concentrate mass: top 1% of vertices own >10% of edges
+    top = deg[: max(1, g.n_nodes // 100)].sum()
+    assert top > 0.1 * g.n_edges
+
+
+def test_symmetrize_is_symmetric():
+    g = rmat_graph(200, 1000, seed=4)
+    s = g.symmetrize()
+    fwd = set(zip(s.edge_sources().tolist(), s.indices.tolist()))
+    assert all((b, a) in fwd for a, b in fwd)
+
+
+def test_hub_sort_places_hubs_first():
+    g = rmat_graph(1000, 8000, seed=5)
+    res = hub_sort(g, hub_fraction=0.08)
+    res.graph.validate()
+    scores = hub_scores(g)
+    new_scores = scores[res.inv_perm]
+    # every hub (first n_hubs new ids) has score >= every non-hub
+    assert new_scores[: res.n_hubs].min() >= new_scores[res.n_hubs :].max()
+
+
+def test_hub_sort_preserves_graph_semantics():
+    g = rmat_graph(300, 2000, seed=6)
+    res = hub_sort(g)
+    h = res.graph
+    orig = set(zip(g.edge_sources().tolist(), g.indices.tolist(), g.weights.tolist()))
+    remap = set(
+        zip(
+            res.inv_perm[h.edge_sources()].tolist(),
+            res.inv_perm[h.indices].tolist(),
+            h.weights.tolist(),
+        )
+    )
+    assert orig == remap
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    n=st.integers(8, 300),
+    m=st.integers(1, 2000),
+    p=st.integers(1, 32),
+    seed=st.integers(0, 10_000),
+)
+def test_partition_edge_balance_property(n, m, p, seed):
+    g = uniform_graph(n, m, seed=seed)
+    table = partition_graph(g, n_partitions=p)
+    # partitions tile the vertex/edge space exactly
+    assert table.vertex_start[0] == 0 and table.vertex_start[-1] == n
+    assert table.edge_start[-1] == g.n_edges
+    assert np.all(np.diff(table.vertex_start) >= 0)
+    # every partition within max-degree slack of the ideal edge share
+    epp = table.edges_per_partition
+    ideal = g.n_edges / table.n_partitions
+    slack = g.out_degrees.max(initial=0) + 1
+    assert epp.max(initial=0) <= ideal + slack
+
+
+def test_device_csr_padding_safe():
+    g = rmat_graph(100, 500, seed=7)
+    d = to_device_csr(g, capacity=1024)
+    assert d.capacity == 1024
+    assert not bool(d.edge_valid[g.n_edges:].any())
+    assert bool(d.edge_valid[: g.n_edges].all())
+
+
+def test_sampler_shapes_and_fallback():
+    g = rmat_graph(200, 600, seed=8)
+    layers = sample_neighbors(g, np.arange(16), (5, 3), seed=0)
+    assert [len(l) for l in layers] == [16, 80, 240]
+    # isolated vertices sample themselves
+    iso = np.nonzero(g.out_degrees == 0)[0]
+    if len(iso):
+        ls = sample_neighbors(g, iso[:1], (4,), seed=0)
+        assert np.all(ls[1] == iso[0])

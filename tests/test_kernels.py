@@ -1,0 +1,107 @@
+"""Per-kernel allclose sweeps (shapes x dtypes) against the ref.py oracles,
+all in interpret mode (the kernel body executes in Python on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.frontier_compact.ops import frontier_compact
+from repro.kernels.frontier_compact.ref import frontier_compact_ref
+from repro.kernels.grouped_matmul.ops import grouped_matmul
+from repro.kernels.grouped_matmul.ref import grouped_matmul_ref
+from repro.kernels.hyb_gather.ops import hyb_gather
+from repro.kernels.hyb_gather.ref import hyb_gather_ref
+from repro.kernels.segment_spmm.ops import segment_spmm
+from repro.kernels.segment_spmm.ref import segment_spmm_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("m,d,n", [(100, 8, 40), (513, 1, 129), (2048, 64, 511), (1000, 200, 77)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segment_spmm_sweep(m, d, n, dtype):
+    msg = jnp.asarray(RNG.standard_normal((m, d)), dtype)
+    seg = jnp.asarray(RNG.integers(0, n, m), jnp.int32)
+    valid = jnp.asarray(RNG.random(m) < 0.8)
+    got = segment_spmm(msg, seg, n, valid)
+    want = segment_spmm_ref(msg.astype(jnp.float32), seg, n, valid).astype(dtype)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("m,c,density", [(100, 1, 0.5), (1024, 4, 0.1), (700, 2, 0.9), (512, 3, 0.0)])
+def test_frontier_compact_sweep(m, c, density):
+    vals = jnp.asarray(RNG.standard_normal((m, c)), jnp.float32)
+    mask = jnp.asarray(RNG.random(m) < density)
+    got, cnt = frontier_compact(vals, mask)
+    want, wcnt = frontier_compact_ref(vals, mask)
+    assert int(cnt) == int(wcnt)
+    k = int(cnt)
+    np.testing.assert_allclose(got[:k], want[:k])
+
+
+@pytest.mark.parametrize("m,c,a", [(300, 1, 8), (1000, 3, 33), (64, 2, 4)])
+def test_hyb_gather_sweep(m, c, a):
+    edges = jnp.asarray(RNG.standard_normal((m, c)), jnp.float32)
+    starts = jnp.asarray(RNG.integers(0, m, a), jnp.int32)
+    degs = jnp.asarray(RNG.integers(0, 120, a), jnp.int32)
+    got = hyb_gather(edges, starts, degs)
+    want = hyb_gather_ref(edges, starts, degs)
+    np.testing.assert_allclose(got, want)
+
+
+@pytest.mark.parametrize("S,L,dh,window", [(128, 128, 64, 0), (300, 300, 64, 64), (257, 257, 128, 0), (64, 512, 32, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(S, L, dh, window, dtype):
+    if S > L:
+        pytest.skip("decode-style only")
+    q = jnp.asarray(RNG.standard_normal((2, S, dh)), dtype)
+    # causal masking over the shared position space needs S == L here
+    k = jnp.asarray(RNG.standard_normal((2, L, dh)), dtype)[:, :S]
+    v = jnp.asarray(RNG.standard_normal((2, L, dh)), dtype)[:, :S]
+    got = flash_attention(q, k, v, window=window)
+    want = flash_attention_ref(q, k, v, 1.0 / dh**0.5, window=window)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("V,D,B,L", [(100, 16, 8, 1), (500, 48, 40, 4), (64, 128, 16, 8)])
+@pytest.mark.parametrize("mode", ["sum", "mean", "max"])
+def test_embedding_bag_sweep(V, D, B, L, mode):
+    t = jnp.asarray(RNG.standard_normal((V, D)), jnp.float32)
+    idx = jnp.asarray(RNG.integers(0, V, (B, L)), jnp.int32)
+    got = embedding_bag(t, idx, mode=mode)
+    want = embedding_bag_ref(t, idx, mode=mode)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("E,D,F", [(4, 32, 48), (8, 64, 128), (3, 16, 16)])
+def test_grouped_matmul_sweep(E, D, F):
+    counts = jnp.asarray(RNG.integers(0, 200, E), jnp.int32)
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(counts)[:-1]])
+    T = int(jnp.sum(counts)) + 13
+    x = jnp.asarray(RNG.standard_normal((T, D)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((E, D, F)), jnp.float32)
+    got = grouped_matmul(x, w, starts, counts)
+    want = grouped_matmul_ref(x, w, starts, counts)
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)
+
+
+def test_segment_spmm_empty_and_full_valid():
+    msg = jnp.ones((64, 4), jnp.float32)
+    seg = jnp.zeros(64, jnp.int32)
+    none = segment_spmm(msg, seg, 4, jnp.zeros(64, bool))
+    assert float(jnp.abs(none).sum()) == 0.0
+    full = segment_spmm(msg, seg, 4, jnp.ones(64, bool))
+    assert float(full[0, 0]) == 64.0

@@ -1,0 +1,179 @@
+"""Model zoo: tiny-config correctness for every family."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.attention as attention_mod
+from repro.models.attention import MLAConfig
+from repro.models.dlrm import DLRMConfig, dlrm_loss, init_dlrm, retrieval_score
+from repro.models.embedding import embedding_bag, select_row_engine
+from repro.models.gnn import (
+    GNNConfig,
+    gnn_loss,
+    graphsage_minibatch_forward,
+    init_gnn,
+)
+from repro.models.moe import MoEConfig, _moe_core, init_moe, select_dispatch_engine
+from repro.models.transformer import (
+    TransformerConfig,
+    decode_step,
+    forward,
+    init_cache,
+    init_transformer,
+    lm_loss,
+    prefill,
+)
+
+TINY = TransformerConfig(
+    name="tiny", n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+    d_ff=128, vocab=101, window_pattern=(8, 8, 0), dtype="float32",
+    param_dtype="float32",
+)
+
+TINY_MLA_MOE = TransformerConfig(
+    name="tiny-mla-moe", n_layers=3, d_model=64, n_heads=4, n_kv_heads=4,
+    d_head=16, d_ff=96, vocab=101, attention="mla",
+    mla=MLAConfig(kv_lora=32, d_nope=16, d_rope=8, d_v=16),
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff=64, n_shared=1,
+                  capacity_factor=8.0, dispatch="sorted"),
+    first_dense_layers=1, d_ff_dense=128, dtype="float32", param_dtype="float32",
+)
+
+
+@pytest.fixture(scope="module")
+def toks():
+    return jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, 101)
+
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_MLA_MOE], ids=["gqa", "mla+moe"])
+def test_lm_loss_and_grads_finite(cfg, toks):
+    p = init_transformer(jax.random.PRNGKey(0), cfg)
+    loss, g = jax.value_and_grad(lambda q: lm_loss(q, toks, cfg))(p)
+    assert bool(jnp.isfinite(loss))
+    gsum = jax.tree.reduce(lambda a, b: a + jnp.sum(jnp.abs(b)), g, 0.0)
+    assert bool(jnp.isfinite(gsum)) and float(gsum) > 0
+
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_MLA_MOE], ids=["gqa", "mla+moe"])
+def test_prefill_decode_consistency(cfg, toks):
+    p = init_transformer(jax.random.PRNGKey(0), cfg)
+    full, _, _ = forward(p, toks, cfg)
+    caches = init_cache(cfg, toks.shape[0], 32)
+    last, caches = prefill(p, toks, cfg, caches)
+    assert jnp.allclose(last, full[:, -1], atol=1e-4)
+    nxt = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+    dec, _ = decode_step(p, nxt, cfg, caches, jnp.int32(toks.shape[1]))
+    ext, _, _ = forward(p, jnp.concatenate([toks, nxt], 1), cfg)
+    assert jnp.allclose(dec, ext[:, -1], atol=1e-4)
+
+
+def test_flash_oracle_matches_dense(toks):
+    p = init_transformer(jax.random.PRNGKey(0), TINY)
+    old = attention_mod._FLASH_THRESHOLD
+    try:
+        attention_mod._FLASH_THRESHOLD = 1
+        lf, gf = jax.value_and_grad(lambda q: lm_loss(q, toks, TINY))(p)
+        attention_mod._FLASH_THRESHOLD = 10**18
+        ld, gd = jax.value_and_grad(lambda q: lm_loss(q, toks, TINY))(p)
+    finally:
+        attention_mod._FLASH_THRESHOLD = old
+    assert jnp.allclose(lf, ld, atol=1e-5)
+    md = max(jax.tree.leaves(jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), gf, gd)))
+    assert md < 1e-4
+
+
+def test_moe_engines_agree():
+    cfg = MoEConfig(n_experts=8, top_k=2, d_ff=64, capacity_factor=16.0)
+    p = init_moe(jax.random.PRNGKey(3), 64, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(4), (32, 64))
+    ys = {e: _moe_core(x, p, cfg, e)[0] for e in ("dense", "sorted", "gather")}
+    assert jnp.allclose(ys["sorted"], ys["gather"], atol=1e-5)
+    assert jnp.allclose(ys["sorted"], ys["dense"], atol=1e-5)
+
+
+def test_moe_chunking_matches_unchunked():
+    cfg = MoEConfig(n_experts=4, top_k=2, d_ff=32, capacity_factor=8.0, dispatch="sorted")
+    p = init_moe(jax.random.PRNGKey(5), 16, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(6), (48, 16))
+    full, _ = _moe_core(x, p, cfg, "sorted")
+    chunked, _ = _moe_core(x, p, cfg.replace(chunk_tokens=16), "sorted")
+    assert jnp.allclose(full, chunked, atol=1e-5)
+
+
+def test_moe_auto_engine_tiers():
+    assert select_dispatch_engine(MoEConfig(4, 2, 8), 100) == "dense"
+    assert select_dispatch_engine(MoEConfig(16, 2, 8), 100) == "gather"
+    assert select_dispatch_engine(MoEConfig(384, 8, 8), 100) == "sorted"
+
+
+@pytest.mark.parametrize(
+    "arch,kw",
+    [
+        ("graphsage", {}),
+        ("pna", {}),
+        ("gatedgcn", {"d_edge_in": 4}),
+        ("meshgraphnet", {"n_layers": 3, "d_edge_in": 4, "task": "regression"}),
+    ],
+)
+def test_gnn_archs(arch, kw):
+    from repro.graph.generators import rmat_graph
+
+    g = rmat_graph(300, 2000, seed=31)
+    src = jnp.asarray(g.edge_sources())
+    dst = jnp.asarray(g.indices)
+    feats = jax.random.normal(jax.random.PRNGKey(0), (300, 16))
+    n_layers = kw.pop("n_layers", 2)
+    cfg = GNNConfig(name=arch, arch=arch, n_layers=n_layers, d_hidden=32,
+                    d_in=16, d_out=5, **kw)
+    p = init_gnn(jax.random.PRNGKey(1), cfg)
+    if cfg.task == "regression":
+        labels = jax.random.normal(jax.random.PRNGKey(2), (300, 5))
+    else:
+        labels = jax.random.randint(jax.random.PRNGKey(2), (300,), 0, 5)
+    loss, g_ = jax.value_and_grad(lambda q: gnn_loss(q, cfg, feats, src, dst, labels))(p)
+    assert bool(jnp.isfinite(loss))
+    gsum = jax.tree.reduce(lambda a, b: a + jnp.sum(jnp.abs(b)), g_, 0.0)
+    assert bool(jnp.isfinite(gsum))
+
+
+def test_graphsage_minibatch():
+    cfg = GNNConfig(name="s", arch="graphsage", n_layers=2, d_hidden=32,
+                    d_in=16, d_out=5, sample_sizes=(5, 3))
+    p = init_gnn(jax.random.PRNGKey(0), cfg)
+    lf = [jax.random.normal(jax.random.PRNGKey(i), (s, 16)) for i, s in enumerate((8, 40, 120))]
+    out = graphsage_minibatch_forward(p, lf, cfg)
+    assert out.shape == (8, 5) and bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_embedding_engines_agree():
+    t = jax.random.normal(jax.random.PRNGKey(0), (50, 8))
+    idx = jax.random.randint(jax.random.PRNGKey(1), (16, 4), 0, 50)
+    outs = {e: embedding_bag(t, idx, engine=e) for e in ("gather", "dedup", "onehot")}
+    assert jnp.allclose(outs["gather"], outs["dedup"], atol=1e-5)
+    assert jnp.allclose(outs["gather"], outs["onehot"], atol=1e-4)
+
+
+def test_row_engine_selection():
+    assert select_row_engine(vocab=3, n_lookups=1000) == "onehot"
+    assert select_row_engine(vocab=10**7, n_lookups=1000) == "gather"
+    # hot-row regime: expected unique << lookups
+    assert select_row_engine(vocab=1000, n_lookups=100_000) == "dedup"
+
+
+def test_dlrm_loss_and_retrieval():
+    cfg = DLRMConfig(vocab_sizes=(100, 3, 50, 7), embed_dim=16,
+                     bot_mlp=(32, 16), top_mlp=(32, 1))
+    p = init_dlrm(jax.random.PRNGKey(0), cfg)
+    dense = jax.random.normal(jax.random.PRNGKey(1), (32, 13))
+    sparse = jax.random.randint(jax.random.PRNGKey(2), (32, 4), 0, 3)
+    labels = jax.random.bernoulli(jax.random.PRNGKey(3), 0.3, (32,))
+    loss, g = jax.value_and_grad(lambda q: dlrm_loss(q, dense, sparse, labels, cfg))(p)
+    assert bool(jnp.isfinite(loss))
+    cand = jax.random.normal(jax.random.PRNGKey(4), (1000, 16))
+    scores, ids = retrieval_score(p, dense[:1], cand, top_k=10)
+    assert scores.shape == (1, 10)
+    assert bool(jnp.all(scores[:, :-1] >= scores[:, 1:]))  # sorted desc
