@@ -1,8 +1,19 @@
 """Fig. 9 analogue: RMAT size ladder (CPU-scaled: 0.04M -> 2.5M edges,
 64x range like the paper's 0.1B -> 6.4B) — runtime growth of HyTM vs the
-single-engine baselines."""
+single-engine baselines.
+
+``run_devices`` adds the scale-out axis: the same workload swept over
+forced-host-platform device counts through the sharded partition sweep
+(repro.dist.graph_shard).  Each device count runs in a subprocess because
+jax locks the device count at first init.
+"""
 
 from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
 
 from benchmarks.common import emit, timed
 from repro.core.constants import PCIE3
@@ -33,5 +44,75 @@ def run():
     return growth
 
 
+_DEVICE_SWEEP_SCRIPT = """
+    import time
+    import jax
+    from repro.core.hytm import HyTMConfig, build_runtime, run_hytm
+    from repro.core.constants import PCIE3
+    from repro.graph.algorithms import SSSP
+    from repro.graph.generators import rmat_graph
+
+    n_dev = len(jax.devices())
+    g = rmat_graph({n_nodes}, {n_edges}, seed=12)
+    cfg = HyTMConfig(
+        link=PCIE3.with_(mr=4.0), n_partitions={n_partitions},
+        async_sweep=False, mesh_axis=None if n_dev == 1 else "graph",
+    )
+    # build the runtime once and reuse it: the warm-up run then leaves a
+    # compiled iteration behind for the timed run on both paths
+    if cfg.mesh_axis is None:
+        rt = build_runtime(g, cfg)
+    else:
+        from repro.dist.graph_shard import build_sharded_runtime
+        from repro.launch.mesh import make_graph_mesh
+        rt = build_sharded_runtime(g, cfg, make_graph_mesh())
+    run_hytm(g, SSSP, source=0, config=cfg, runtime=rt)   # warm / compile
+    t0 = time.monotonic()
+    res = run_hytm(g, SSSP, source=0, config=cfg, runtime=rt)
+    wall = time.monotonic() - t0
+    print(f"RESULT,{{n_dev}},{{wall * 1e6:.1f}},{{res.modeled_seconds * 1e3:.4f}},"
+          f"{{res.iterations}},{{res.total_transfer_bytes:.0f}}")
+"""
+
+
+def run_devices(device_counts=(1, 2, 4, 8), n_nodes=5_000, n_edges=160_000,
+                n_partitions=32):
+    """Scale-out sweep: one subprocess per forced-host device count, the
+    sharded sweep on >1 device (the 1-device row is the single-device
+    reference path).  Emits wall time + the modeled transfer metrics,
+    which must be device-count-invariant (the model counts bytes, not
+    devices) — a cheap end-to-end consistency check on the sharding."""
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    script = textwrap.dedent(
+        _DEVICE_SWEEP_SCRIPT.format(
+            n_nodes=n_nodes, n_edges=n_edges, n_partitions=n_partitions
+        )
+    )
+    rows = {}
+    for n_dev in device_counts:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+        # the forced count only applies to the CPU backend — pin it, or a
+        # machine with an accelerator would run every row on 1 device
+        env["JAX_PLATFORMS"] = "cpu"
+        env["PYTHONPATH"] = src
+        out = subprocess.run(
+            [sys.executable, "-c", script],
+            capture_output=True, text=True, timeout=600, env=env,
+        )
+        if out.returncode != 0:
+            emit(f"fig9/devices_{n_dev}", 0.0, f"FAILED: {out.stderr[-200:]}")
+            continue
+        line = [l for l in out.stdout.splitlines() if l.startswith("RESULT,")][0]
+        _, dev, wall_us, modeled_ms, iters, bytes_ = line.split(",")
+        rows[n_dev] = float(modeled_ms)
+        emit(
+            f"fig9/devices_{n_dev}", float(wall_us),
+            f"modeled_ms={modeled_ms} iters={iters} bytes={bytes_}",
+        )
+    return rows
+
+
 if __name__ == "__main__":
     run()
+    run_devices()

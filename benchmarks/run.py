@@ -29,6 +29,7 @@ def main() -> None:
         "fig7": lambda: fig7_execution_path.run(**kw),
         "fig8": lambda: fig8_gains.run(**kw),
         "fig9": lambda: fig9_scaling.run(),
+        "fig9-devices": lambda: fig9_scaling.run_devices(),
         "kernels": lambda: kernels.run(),
         "roofline": lambda: roofline.run(),
     }

@@ -67,6 +67,14 @@ class HyTMConfig:
     max_iters: int = 10_000
     forced_engine: int | None = None  # force a single engine (baselines)
     hub_fraction: float = 0.08
+    # Name of a 1-D mesh axis to shard the partition edge blocks over
+    # (repro.dist.graph_shard).  None = the single-device path below
+    # (note: the sync-sweep SUM consumption fix in ``_sweep`` changed
+    # async_sweep=False results relative to older revisions; the default
+    # async path is untouched).  The sharded sweep is bulk-synchronous
+    # across devices, so it reproduces the single-device
+    # ``async_sweep=False`` dataflow exactly.
+    mesh_axis: str | None = None
 
 
 @jax.tree_util.register_dataclass
@@ -184,8 +192,19 @@ def _sweep(
                 consumed = frontier & in_part & processed
             # value absorbs the consumed delta; pending delta resets, then
             # accumulates fresh contributions from this partition's edges.
-            values = values + jnp.where(consumed, delta if async_sweep else delta0, 0.0)
-            delta = jnp.where(consumed, 0.0, delta) + out.agg
+            if async_sweep:
+                values = values + jnp.where(consumed, delta, 0.0)
+                delta = jnp.where(consumed, 0.0, delta) + out.agg
+            else:
+                # synchronous dataflow: only the iteration-start delta0 is
+                # consumed, so subtract exactly that — zeroing the running
+                # delta would drop contributions already delivered by
+                # earlier partitions (order-dependent mass loss).  This
+                # makes the sync sweep partition-order invariant, which is
+                # the single-device oracle the sharded sweep
+                # (repro.dist.graph_shard) must match bit-for-bit.
+                values = values + jnp.where(consumed, delta0, 0.0)
+                delta = jnp.where(consumed, delta - delta0, delta) + out.agg
             activated = activated | out.touched
         return (values, delta, activated), None
 
@@ -232,7 +251,7 @@ def hytm_iteration(
         jnp.abs(state.delta) * frontier, parts.vertex_part_id,
         num_segments=parts.n_partitions,
     )
-    mode = config.cds_mode if program.combine == SUM or config.cds_mode != "delta" else "delta"
+    mode = config.cds_mode
     sched = make_schedule(
         plan.engines, delta_mass, n_hub_partitions, mode, config.recompute_once,
     )
@@ -297,7 +316,19 @@ def run_hytm(
     config: HyTMConfig = HyTMConfig(),
     n_hubs: int = 0,
     runtime: Runtime | None = None,
+    mesh=None,
 ) -> HyTMResult:
+    """``runtime`` lets callers amortize preprocessing across runs; with
+    ``config.mesh_axis`` set it must be a ``graph_shard.ShardedRuntime``
+    (reuse also keeps the compiled sharded sweep warm)."""
+    if config.mesh_axis is not None:
+        # late import: graph_shard depends on this module's dataclasses
+        from repro.dist.graph_shard import run_hytm_sharded
+
+        return run_hytm_sharded(
+            g, program, source=source, config=config, n_hubs=n_hubs,
+            mesh=mesh, runtime=runtime,
+        )
     rt = runtime if runtime is not None else build_runtime(
         g, config, n_hubs=n_hubs,
         weighted_norm=program.use_delta and program.weighted,

@@ -48,19 +48,31 @@ def make_schedule(
     mode: str,                 # 'hub' | 'delta' | 'none'
     recompute_once: bool,
     second_pass_fraction: float = 0.125,
+    pid_offset: jax.Array | int = 0,
+    priority_mask: jax.Array | None = None,
 ) -> Schedule:
+    """``pid_offset`` shifts local partition indices to global ids so a
+    device scheduling its shard of the partition space (graph_shard)
+    ranks hubs consistently with the single-device schedule.  The
+    delta-mode priority mask is a *global* top-fraction rank a device
+    cannot derive from its local |Δ| slice alone — the sharded path
+    precomputes it on the replicated state and passes it in via
+    ``priority_mask`` (which then overrides the locally computed one)."""
     P = engines.shape[0]
-    pid = jnp.arange(P, dtype=jnp.int32)
+    pid = pid_offset + jnp.arange(P, dtype=jnp.int32)
 
     if mode == "delta":
         score = delta_mass
-        priority_mask = _rank(-delta_mass) < max(1, int(P * second_pass_fraction))
+        if priority_mask is None:
+            priority_mask = _rank(-delta_mass) < max(1, int(P * second_pass_fraction))
     elif mode == "hub":
         score = -pid.astype(jnp.float32)  # low id == hub partitions first
-        priority_mask = pid < n_hub_partitions
+        if priority_mask is None:
+            priority_mask = pid < n_hub_partitions
     else:
         score = jnp.zeros(P, dtype=jnp.float32)
-        priority_mask = jnp.zeros(P, dtype=bool)
+        if priority_mask is None:
+            priority_mask = jnp.zeros(P, dtype=bool)
 
     # Engine tier: FILTER first (paper §VI-B), then ZC/COMPACT, skips last.
     tier = jnp.where(engines == FILTER, 0, jnp.where(engines >= 0, 1, 2))

@@ -1,0 +1,33 @@
+"""Distributed execution: sharding rule DSL + multi-device HyTM sweep.
+
+``repro.dist.sharding``    — regex/path PartitionSpec rules -> NamedSharding
+                             pytrees for the model/optimizer/cache trees.
+``repro.dist.graph_shard`` — the HyTM edge-block sweep shard_mapped over a
+                             1-D ``graph`` mesh axis (see HyTMConfig.mesh_axis).
+"""
+
+from repro.dist.sharding import (
+    batch_axes,
+    dlrm_rule,
+    fit_spec,
+    gnn_data_spec,
+    gnn_rule,
+    lm_batch_spec,
+    lm_cache_rule,
+    lm_rule,
+    spec_for,
+    tree_shardings,
+)
+
+__all__ = [
+    "batch_axes",
+    "dlrm_rule",
+    "fit_spec",
+    "gnn_data_spec",
+    "gnn_rule",
+    "lm_batch_spec",
+    "lm_cache_rule",
+    "lm_rule",
+    "spec_for",
+    "tree_shardings",
+]

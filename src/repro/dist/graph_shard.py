@@ -1,0 +1,476 @@
+"""Multi-device HyTM: the partition sweep shard_mapped over a 1-D mesh.
+
+Scale-out story (Totem / Garaph lineage): HyTGraph's unit of transfer
+management — the edge-balanced partition — is also the natural unit of
+*distribution*.  Each device owns a contiguous shard of the partition
+space as a ``(P_local, B)`` blocked edge array; vertex state (values,
+pending Δ, frontier) is replicated, the per-iteration flow is:
+
+  1. partition activity stats + Δ mass        (replicated, O(P))
+  2. per-device cost model + engine selection (Algorithm 1 on the local
+     stats shard — selection is per-partition, so the local result equals
+     the single-device one)
+  3. per-device priority schedule over its local partitions (hub ids are
+     globalized with the device's partition offset; the Δ-mode top-K
+     second-pass mask is a global rank, precomputed on replicated state)
+  4. local sweep over the local blocks, then one collective merge:
+     ``pmin`` for traversal combiners, ``psum`` for accumulative ones —
+     the frontier/Δ exchange of the two-level HyTM
+  5. recompute-once second pass over loaded priority partitions, merged
+     the same way.
+
+The cross-device sweep is **bulk-synchronous**: every device relaxes
+against the iteration-start state and updates merge once per pass.  That
+makes the sharded run reproduce the single-device ``async_sweep=False``
+dataflow exactly — bit-for-bit for min-combiners, up to float-summation
+order for sum-combiners — which is the equivalence contract
+``tests/test_distributed.py`` checks on forced-host meshes.
+
+Engine semantics are unchanged: each local partition still relaxes
+through its selected FILTER/COMPACT/ZEROCOPY engine via ``lax.switch``,
+so the cost model's per-partition decisions (and the modeled transfer
+accounting) are identical to the single-device run.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.cost_model import (
+    NONE,
+    engine_costs,
+    partition_stats,
+    select_engines,
+    zc_request_counts,
+)
+from repro.core.engines import EdgeBlock, relax_with_engine
+from repro.core.hytm import HyTMConfig, HyTMResult, HyTMState
+from repro.core.partition import (
+    DevicePartitions,
+    PartitionTable,
+    partition_graph,
+)
+from repro.core.scheduler import make_schedule
+from repro.core.task_generation import forced_engine_plan, generate_tasks
+from repro.graph.algorithms import MIN, SUM, VertexProgram
+from repro.graph.csr import CSRGraph
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class BlockedEdges:
+    """Partition-blocked COO edges, padded to a static (P, B) grid.
+
+    Row ``p`` holds partition ``p``'s edge segment; lanes past
+    ``part_edges[p]`` are padding (masked via ``in_range``).  This is the
+    array that shards over the graph mesh axis.
+    """
+
+    src: jax.Array       # (P, B) int32
+    dst: jax.Array       # (P, B) int32
+    weight: jax.Array    # (P, B) float32
+    in_range: jax.Array  # (P, B) bool
+
+
+@dataclass
+class ShardedRuntime:
+    """Device-placed inputs shared by every sharded iteration."""
+
+    mesh: jax.sharding.Mesh
+    axis: str
+    blocks: BlockedEdges       # sharded: P(axis, None)
+    parts: DevicePartitions    # replicated (vertex_part_id drives stats)
+    out_degree: jax.Array      # (n,) int32, replicated
+    zc_req: jax.Array          # (n,) float32, replicated
+    inv_deg: jax.Array         # (n,) float32, replicated
+    n_nodes: int
+    n_partitions: int          # padded: multiple of mesh.shape[axis]
+    n_hub_partitions: int
+    # (program, config) -> jitted iteration; reusing a runtime across
+    # run_hytm_sharded calls reuses the compiled sweep instead of
+    # retracing a fresh shard_map closure every run
+    iteration_cache: dict = field(default_factory=dict, repr=False)
+
+
+def _pad_table(table: PartitionTable, n_dev: int) -> PartitionTable:
+    """Append empty partitions so the partition count divides the mesh."""
+    P_real = table.n_partitions
+    P_pad = -(-P_real // n_dev) * n_dev
+    if P_pad == P_real:
+        return table
+    extra = P_pad - P_real
+    vs = np.concatenate([table.vertex_start, np.full(extra, table.vertex_start[-1])])
+    es = np.concatenate([table.edge_start, np.full(extra, table.edge_start[-1])])
+    return PartitionTable(vertex_start=vs.astype(np.int64), edge_start=es.astype(np.int64))
+
+
+def build_sharded_runtime(
+    g: CSRGraph,
+    config: HyTMConfig,
+    mesh: jax.sharding.Mesh,
+    n_hubs: int = 0,
+    weighted_norm: bool = False,
+) -> ShardedRuntime:
+    axis = config.mesh_axis
+    assert axis in mesh.axis_names, (axis, mesh.axis_names)
+    n_dev = int(mesh.shape[axis])
+
+    table = _pad_table(
+        partition_graph(
+            g, n_partitions=config.n_partitions,
+            partition_bytes=config.partition_bytes, d1=config.link.d1,
+        ),
+        n_dev,
+    )
+    P_total = table.n_partitions
+    epp = table.edges_per_partition
+    B = int(epp.max(initial=1))
+    B = max(128, -(-B // 128) * 128)
+
+    # host-side blocking: copy each partition's edge slice into its row
+    src_all = g.edge_sources()
+    dst_all = g.indices
+    w_all = g.weights if g.weights is not None else np.ones(g.n_edges, np.float32)
+    src = np.zeros((P_total, B), np.int32)
+    dst = np.zeros((P_total, B), np.int32)
+    w = np.full((P_total, B), np.float32(np.inf), np.float32)
+    in_range = np.zeros((P_total, B), bool)
+    for p in range(P_total):
+        e0, e1 = int(table.edge_start[p]), int(table.edge_start[p + 1])
+        k = e1 - e0
+        src[p, :k] = src_all[e0:e1]
+        dst[p, :k] = dst_all[e0:e1]
+        w[p, :k] = w_all[e0:e1]
+        in_range[p, :k] = True
+
+    part_id = np.repeat(
+        np.arange(P_total, dtype=np.int32), table.vertices_per_partition
+    )
+    parts = DevicePartitions(
+        vertex_start=jnp.asarray(table.vertex_start, jnp.int32),
+        edge_start=jnp.asarray(table.edge_start, jnp.int32),
+        part_edges=jnp.asarray(epp, jnp.int32),
+        vertex_part_id=jnp.asarray(part_id),
+        n_partitions=P_total,
+        block_size=B,
+    )
+
+    row = NamedSharding(mesh, P(axis, None))
+    rep = NamedSharding(mesh, P())
+    blocks = BlockedEdges(
+        src=jax.device_put(src, row),
+        dst=jax.device_put(dst, row),
+        weight=jax.device_put(w, row),
+        in_range=jax.device_put(in_range, row),
+    )
+
+    out_degree = jnp.asarray(g.out_degrees, jnp.int32)
+    seg_start = jnp.asarray(g.indptr[:-1], jnp.int32)
+    zc_req = zc_request_counts(out_degree, seg_start, config.link)
+    if weighted_norm:
+        wsum = np.zeros(g.n_nodes, np.float64)
+        np.add.at(wsum, src_all, w_all)
+        inv_deg = jnp.asarray(1.0 / np.maximum(wsum, 1e-30), jnp.float32)
+    else:
+        inv_deg = 1.0 / jnp.maximum(out_degree.astype(jnp.float32), 1.0)
+
+    n_hub_parts = int(np.searchsorted(np.asarray(table.vertex_start), n_hubs, side="left"))
+    n_hub_parts = max(n_hub_parts, 1) if n_hubs > 0 else 0
+
+    return ShardedRuntime(
+        mesh=mesh,
+        axis=axis,
+        blocks=blocks,
+        parts=parts,
+        out_degree=jax.device_put(out_degree, rep),
+        zc_req=jax.device_put(zc_req, rep),
+        inv_deg=jax.device_put(inv_deg, rep),
+        n_nodes=g.n_nodes,
+        n_partitions=P_total,
+        n_hub_partitions=n_hub_parts,
+    )
+
+
+# --------------------------------------------------------------------------
+# One sharded iteration
+# --------------------------------------------------------------------------
+
+def _local_sweep(
+    blocks: BlockedEdges,      # (P_local, B) — this device's shard
+    engines: jax.Array,        # (P_local,) — NONE entries are skipped
+    order: jax.Array,          # (P_local,) local processing order
+    frontier: jax.Array,       # (n,) replicated
+    operand: jax.Array,        # (n,) replicated message operand
+    n: int,
+    program: VertexProgram,
+    axis: str,
+):
+    """Relax this device's partitions, then merge across the mesh.
+
+    Returns the globally merged (agg, touched): ``pmin`` for traversal
+    (min) combiners, ``psum`` for accumulative (sum) combiners — one
+    collective exchange of the (n,) contribution vector per pass.
+    """
+    identity = jnp.inf if program.combine == MIN else 0.0
+
+    def body(carry, p):
+        agg, touched = carry
+        eng = engines[p]
+        src, dst = blocks.src[p], blocks.dst[p]
+        weight, in_range = blocks.weight[p], blocks.in_range[p]
+        active = frontier[src] & in_range & (eng != NONE)
+        block = EdgeBlock(src=src, dst=dst, weight=weight, active=active)
+        out = relax_with_engine(eng, block, operand, n, program)
+        if program.combine == MIN:
+            agg = jnp.minimum(agg, out.agg)
+        else:
+            agg = agg + out.agg
+        return (agg, touched | out.touched), None
+
+    init = (jnp.full(n, identity, jnp.float32), jnp.zeros(n, bool))
+    (agg, touched), _ = jax.lax.scan(body, init, order)
+    if program.combine == MIN:
+        agg = jax.lax.pmin(agg, axis)
+    else:
+        agg = jax.lax.psum(agg, axis)
+    touched = jax.lax.psum(touched.astype(jnp.int32), axis) > 0
+    return agg, touched
+
+
+def _apply_merged(
+    values: jax.Array,
+    delta: jax.Array,
+    consumed: jax.Array,   # (n,) bool — frontier vertices absorbing delta
+    agg: jax.Array,
+    touched: jax.Array,
+    program: VertexProgram,
+):
+    """Synchronous state update from a globally merged contribution vector
+    (the shard_map analogue of core.hytm._sweep's sync branch)."""
+    if program.combine == MIN:
+        improved = touched & (agg < values)
+        values = jnp.where(improved, agg, values)
+        return values, delta, improved
+    values = values + jnp.where(consumed, delta, 0.0)
+    delta = jnp.where(consumed, 0.0, delta) + agg
+    return values, delta, touched
+
+
+def make_sharded_iteration(
+    rt: ShardedRuntime, program: VertexProgram, config: HyTMConfig
+):
+    """Build the jitted per-iteration function for one runtime/program."""
+    mesh, axis = rt.mesh, rt.axis
+    n = rt.n_nodes
+    P_total = rt.n_partitions
+    n_dev = int(mesh.shape[axis])
+    P_local = P_total // n_dev
+    mode = config.cds_mode
+
+    def select_local(stats_slice):
+        """Algorithm 1 on a (P_local,) stats shard — identical result to
+        slicing the global selection (selection is per-partition)."""
+        if config.forced_engine is None:
+            costs = engine_costs(stats_slice, config.link)
+            return select_engines(stats_slice, costs, config.link)
+        return jnp.where(
+            stats_slice.active_edges > 0, config.forced_engine, NONE
+        ).astype(jnp.int32)
+
+    def sweep_pass(stats, second_mask, frontier, operand, delta_mass,
+                   pass_two: bool):
+        """One shard_mapped sweep pass; returns merged (agg, touched) plus
+        the engines each device selected (for the second pass mask)."""
+
+        def local(blocks_l, stats_l, mask_l, dmass_l, frontier_, operand_):
+            dev = jax.lax.axis_index(axis)
+            engines_l = select_local(stats_l)
+            if pass_two:
+                engines_l = jnp.where(mask_l, engines_l, NONE)
+            sched = make_schedule(
+                engines_l, dmass_l, rt.n_hub_partitions, mode,
+                config.recompute_once, pid_offset=dev * P_local,
+                priority_mask=mask_l,
+            )
+            agg, touched = _local_sweep(
+                blocks_l, engines_l, sched.order, frontier_, operand_,
+                n, program, axis,
+            )
+            return agg, touched
+
+        shard = P(axis)
+        rep = P()
+        fn = shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(
+                BlockedEdges(src=P(axis, None), dst=P(axis, None),
+                             weight=P(axis, None), in_range=P(axis, None)),
+                jax.tree.map(lambda _: shard, stats),
+                shard, shard, rep, rep,
+            ),
+            out_specs=(rep, rep),
+            check_rep=False,
+        )
+        return fn(rt.blocks, stats, second_mask, delta_mass, frontier, operand)
+
+    @jax.jit
+    def iteration(state: HyTMState):
+        frontier = state.frontier
+        values, delta = state.values, state.delta
+
+        # (1) global stats + Δ mass on the replicated vertex state
+        stats = partition_stats(frontier, rt.out_degree, rt.zc_req, rt.parts)
+        delta_mass = jax.ops.segment_sum(
+            jnp.abs(delta) * frontier, rt.parts.vertex_part_id,
+            num_segments=P_total,
+        )
+
+        # (2) global plan for the transfer accounting (identical to the
+        # per-device selections — selection is per-partition)
+        if config.forced_engine is None:
+            plan = generate_tasks(
+                stats, config.link, combine_k=config.combine_k,
+                enable_combination=config.enable_task_combination,
+            )
+        else:
+            plan = forced_engine_plan(
+                stats, config.link, config.forced_engine,
+                enable_combination=config.enable_task_combination,
+                combine_k=config.combine_k,
+            )
+
+        # (3) global second-pass mask (Δ-mode top-K is a global rank)
+        sched_global = make_schedule(
+            plan.engines, delta_mass, rt.n_hub_partitions, mode,
+            config.recompute_once,
+        )
+        second_mask = sched_global.second_pass
+
+        # (4) pass 1: every active partition, synchronous merge
+        if program.combine == SUM:
+            operand = program.damping * delta * rt.inv_deg
+        else:
+            operand = values
+        agg, touched = sweep_pass(
+            stats, second_mask, frontier, operand, delta_mass, pass_two=False,
+        )
+        values1, delta1, activated = _apply_merged(
+            values, delta, frontier, agg, touched, program,
+        )
+
+        # (5) pass 2: recompute-once over loaded priority partitions
+        if program.combine == MIN:
+            frontier2 = frontier | activated
+        else:
+            frontier2 = delta1 > program.tolerance
+        if program.combine == SUM:
+            operand2 = program.damping * delta1 * rt.inv_deg
+        else:
+            operand2 = values1
+        agg2, touched2 = sweep_pass(
+            stats, second_mask, frontier2, operand2, delta_mass, pass_two=True,
+        )
+        # pass-2 consumption only touches re-processed partitions
+        processed2 = second_mask[rt.parts.vertex_part_id] & (
+            plan.engines[rt.parts.vertex_part_id] != NONE
+        )
+        values2, delta2, activated2 = _apply_merged(
+            values1, delta1, frontier2 & processed2, agg2, touched2, program,
+        )
+        activated = activated | activated2
+
+        if program.combine == MIN:
+            next_frontier = activated
+        else:
+            next_frontier = delta2 > program.tolerance
+
+        new_state = HyTMState(values=values2, delta=delta2, frontier=next_frontier)
+        info = {
+            "engines": plan.engines,
+            "transfer_bytes": plan.transfer_bytes,
+            "transfer_time": jnp.sum(plan.transfer_time)
+            + plan.n_tasks.astype(jnp.float32) * config.link.launch_overhead_s,
+            "n_tasks": plan.n_tasks,
+            "active_vertices": jnp.sum(frontier.astype(jnp.int32)),
+            "active_edges": jnp.sum(stats.active_edges),
+            "next_active": jnp.sum(next_frontier.astype(jnp.int32)),
+        }
+        return new_state, info
+
+    return iteration
+
+
+# --------------------------------------------------------------------------
+# Convergence loop
+# --------------------------------------------------------------------------
+
+def run_hytm_sharded(
+    g: CSRGraph,
+    program: VertexProgram,
+    source: int | None = 0,
+    config: HyTMConfig = HyTMConfig(mesh_axis="graph"),
+    n_hubs: int = 0,
+    mesh: jax.sharding.Mesh | None = None,
+    runtime: ShardedRuntime | None = None,
+) -> HyTMResult:
+    """Drop-in ``run_hytm`` over a 1-D device mesh.
+
+    Equivalence contract: identical per-partition engine selections and
+    modeled transfer accounting as single-device, and state trajectories
+    matching the single-device ``async_sweep=False`` run (exact for
+    min-combine programs; up to FP summation order for sum-combine).
+    """
+    if mesh is None:
+        from repro.launch.mesh import make_graph_mesh
+
+        mesh = make_graph_mesh(axis=config.mesh_axis)
+    rt = runtime if runtime is not None else build_sharded_runtime(
+        g, config, mesh, n_hubs=n_hubs,
+        weighted_norm=program.use_delta and program.weighted,
+    )
+    cache_key = (program, config)
+    iteration = rt.iteration_cache.get(cache_key)
+    if iteration is None:
+        iteration = make_sharded_iteration(rt, program, config)
+        rt.iteration_cache[cache_key] = iteration
+
+    values, delta, frontier = program.init_state(g.n_nodes, source)
+    state = HyTMState(values=values, delta=delta, frontier=frontier)
+
+    hist: dict[str, list] = {
+        "engines": [], "transfer_bytes": [], "transfer_time": [],
+        "active_vertices": [], "active_edges": [], "n_tasks": [],
+    }
+    t0 = time.monotonic()
+    iters = 0
+    for _ in range(config.max_iters):
+        state, info = iteration(state)
+        iters += 1
+        for k in hist:
+            hist[k].append(np.asarray(info[k]))
+        if int(info["next_active"]) == 0:
+            break
+    jax.block_until_ready(state.values)
+    wall = time.monotonic() - t0
+
+    history = {
+        k: np.stack(v) if np.ndim(v[0]) else np.asarray(v) for k, v in hist.items()
+    }
+    return HyTMResult(
+        values=np.asarray(state.values),
+        delta=np.asarray(state.delta),
+        iterations=iters,
+        wall_seconds=wall,
+        modeled_seconds=float(np.sum(history["transfer_time"])),
+        total_transfer_bytes=float(np.sum(history["transfer_bytes"])),
+        history=history,
+    )

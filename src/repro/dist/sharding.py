@@ -1,0 +1,213 @@
+"""Path-rule sharding DSL: regex rules over pytree paths -> NamedShardings.
+
+The dry-run/serving cells (configs/common.py) describe *what* to shard
+with small per-family rule lists; this module turns a rule list into a
+``NamedSharding`` pytree for any parameter/optimizer/cache tree:
+
+  rule      = [(path_regex, PartitionSpec), ...]   # first match wins
+  shardings = tree_shardings(tree, mesh, rule)
+
+Matching conventions that keep the rules tiny:
+
+* A leaf's path is the "/"-joined key path (dict keys, list indices,
+  registered-dataclass fields, or flat indices for opaque pytree nodes
+  like ``TrainState``).  Rules use ``re.search``, so a rule written for
+  ``.../attn/wq`` also matches the mirrored AdamW moment trees
+  (``.../m/layers/attn/wq``) for free.
+* Specs are **right-aligned** onto the leaf's trailing dims: stacked
+  scan-layer params carry a leading ``(n_layers, ...)`` axis and inherit
+  the same rule as their unstacked ``prefix`` twins.
+* Every spec entry is validated against the mesh: a dim whose size does
+  not divide the product of its assigned mesh axes falls back to
+  replicated (``None``) for that dim — tiny smoke configs and debug
+  meshes degrade gracefully instead of erroring.
+* Unmatched leaves replicate (``P()``).
+
+``batch_axes`` names the mesh axes batch dims shard over (``('pod',
+'data')`` on multi-pod meshes), and the ``*_spec`` helpers give the
+input-batch PartitionSpecs the cells place on tokens / graph data.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Sequence
+
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import (
+    DictKey,
+    FlattenedIndexKey,
+    GetAttrKey,
+    SequenceKey,
+    tree_flatten_with_path,
+    tree_unflatten,
+)
+
+Rule = Sequence[tuple[str, P]]
+
+# Mesh axes a batch dimension may shard over, outermost first.
+_BATCH_AXIS_ORDER = ("pod", "data")
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes the batch dimension shards over (present-axis subset of
+    ('pod', 'data'), outermost first).  Empty tuple == replicated batch."""
+    return tuple(a for a in _BATCH_AXIS_ORDER if a in mesh.axis_names)
+
+
+def _key_name(k) -> str:
+    if isinstance(k, DictKey):
+        return str(k.key)
+    if isinstance(k, SequenceKey):
+        return str(k.idx)
+    if isinstance(k, GetAttrKey):
+        return str(k.name)
+    if isinstance(k, FlattenedIndexKey):
+        return str(k.key)
+    return str(k)
+
+
+def path_str(path) -> str:
+    """'/'-joined readable key path for one tree_flatten_with_path entry."""
+    return "/".join(_key_name(k) for k in path)
+
+
+def _axes_size(mesh, entry) -> int:
+    names = entry if isinstance(entry, tuple) else (entry,)
+    size = 1
+    for a in names:
+        size *= int(mesh.shape[a])
+    return size
+
+
+def fit_spec(spec: P, shape: tuple[int, ...], mesh) -> P:
+    """Right-align ``spec`` onto ``shape`` and drop non-dividing entries.
+
+    Leading spec entries are discarded when the spec is longer than the
+    leaf rank (a rank-2 rule hitting a bias vector keeps only its last
+    entry); leading dims beyond the spec replicate.
+    """
+    entries = list(spec)
+    if len(entries) > len(shape):
+        entries = entries[len(entries) - len(shape):]
+    pad = len(shape) - len(entries)
+    entries = [None] * pad + entries
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None or entry == ():
+            out.append(None)
+            continue
+        size = _axes_size(mesh, entry)
+        out.append(entry if size > 0 and dim % size == 0 else None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def spec_for(path: str, shape: tuple[int, ...], mesh, rule: Rule) -> P:
+    """Resolve the PartitionSpec for one leaf (first matching rule wins)."""
+    for pattern, spec in rule:
+        if re.search(pattern, path):
+            return fit_spec(spec, shape, mesh)
+    return P()
+
+
+def tree_shardings(tree: Any, mesh, rule: Rule):
+    """Map a rule list over a pytree -> same-structure NamedSharding tree."""
+    flat, treedef = tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        shape = tuple(getattr(leaf, "shape", ()) or ())
+        spec = spec_for(path_str(path), shape, mesh, rule)
+        out.append(NamedSharding(mesh, spec))
+    return tree_unflatten(treedef, out)
+
+
+# ------------------------------------------------------------------- LM
+
+def lm_rule(mesh) -> Rule:
+    """Megatron-style tensor parallelism over the ``model`` axis.
+
+    Column-parallel into attention/FFN (shard the output-feature dim),
+    row-parallel out of them (shard the input-feature dim); embeddings
+    shard the vocab dim.  MoE expert banks additionally shard the expert
+    axis over the batch axes (EP width == DP width — matches the
+    ``moe_ffn`` shard_map specs so no resharding happens at dispatch).
+    """
+    ba = batch_axes(mesh)
+    expert = ba if len(ba) > 1 else (ba[0] if ba else None)
+    return [
+        (r"(^|/)(embed|unembed)$", P("model", None)),
+        (r"/attn/(wq|wk|wv|w_uq|w_uk|w_uv|w_dq|w_dkv|w_kr)$", P(None, "model")),
+        (r"/attn/wo$", P("model", None)),
+        (r"/moe/router$", P()),
+        (r"/moe/(w_gate|w_up)$", P(expert, None, "model")),
+        (r"/moe/w_down$", P(expert, "model", None)),
+        (r"/moe/(shared_gate|shared_up)$", P(None, "model")),
+        (r"/moe/shared_down$", P("model", None)),
+        (r"/ffn/(w_gate|w_up|w_in)$", P(None, "model")),
+        (r"/ffn/w_down$", P("model", None)),
+    ]
+
+
+def lm_cache_rule(mesh, n_kv_heads: int) -> Rule:
+    """KV-cache shardings for serving cells.
+
+    When the KV-head count divides the ``model`` axis the heads shard
+    over it (standard TP serving); otherwise (MQA's kv=1, MLA's headless
+    latent cache) the *sequence* dim shards instead — that is what makes
+    the 500k-token single-sequence decode cell fit (batch replicates, the
+    cache length spreads across the model axis).
+    """
+    ba = batch_axes(mesh)
+    n_model = int(mesh.shape["model"]) if "model" in mesh.axis_names else 1
+    if n_model > 1 and n_kv_heads % n_model == 0:
+        kv = P(ba, None, "model", None)
+    else:
+        kv = P(ba, "model", None, None)
+    return [
+        (r"(^|/)[kv]$", kv),
+        (r"(^|/)(ckv|kr)$", P(ba, "model", None)),
+    ]
+
+
+def lm_batch_spec(mesh) -> P:
+    """(B, S) token batches: batch dim over the batch axes."""
+    return P(batch_axes(mesh), None)
+
+
+# ------------------------------------------------------------------ GNN
+
+def gnn_rule(mesh) -> Rule:
+    """GNN training is data-parallel over nodes/edges; dense kernels
+    column-shard their output features over ``model`` (they are small —
+    the divisibility guard replicates the ones that do not divide)."""
+    return [
+        (r"(^|/)(w_self|w_nbr|w_msg|w_upd|A|B|C|U|V|out|embed_h|embed_e)$",
+         P(None, "model")),
+        (r"/(edge_mlp|node_mlp|enc_node|enc_edge|dec)/w/\d+$", P(None, "model")),
+    ]
+
+
+def gnn_data_spec(mesh, kind: str) -> P:
+    """Graph-data batch specs: 1-D per-node/per-edge arrays ('vector') and
+    2-D feature matrices ('matrix') shard their leading dim over the
+    batch axes."""
+    ba = batch_axes(mesh)
+    if kind == "vector":
+        return P(ba)
+    if kind == "matrix":
+        return P(ba, None)
+    raise ValueError(f"unknown gnn data kind: {kind!r}")
+
+
+# ----------------------------------------------------------------- DLRM
+
+def dlrm_rule(mesh) -> Rule:
+    """Row-shard the embedding tables over ``model`` (the tables dominate
+    DLRM bytes); MLP towers column-shard like the LM FFN."""
+    return [
+        (r"(^|/)tables/\d+$", P("model", None)),
+        (r"/(bot|top)/w/\d+$", P(None, "model")),
+    ]

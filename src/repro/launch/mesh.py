@@ -3,6 +3,11 @@
 A function (not a module-level constant) so importing this module never
 touches jax device state — required because the dry-run must set
 XLA_FLAGS before any jax initialization.
+
+``_mesh`` papers over the jax API skew around mesh axis types:
+``jax.make_mesh(..., axis_types=...)`` (and ``jax.sharding.AxisType``)
+only exist on newer jax releases; on older ones the plain call is the
+same Auto-typed mesh.
 """
 
 from __future__ import annotations
@@ -10,13 +15,20 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape, axes):
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(axis_type.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 2, pods: int = 0):
@@ -26,6 +38,13 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2, pods: int = 0):
         shape, axes = (pods, n_data, n_model), ("pod", "data", "model")
     else:
         shape, axes = (n_data, n_model), ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _mesh(shape, axes)
+
+
+def make_graph_mesh(n_devices: int | None = None, axis: str = "graph"):
+    """1-D mesh for the sharded HyTM sweep (repro.dist.graph_shard): the
+    partition edge blocks shard over ``axis``.  Defaults to every visible
+    device (forced-host devices included)."""
+    if n_devices is None:
+        n_devices = len(jax.devices())
+    return _mesh((n_devices,), (axis,))

@@ -211,7 +211,6 @@ def _moe_core(
         )
 
         if data_axis is not None:
-            n_data = jax.lax.axis_size(data_axis)
             # (E, C, D) -> each device keeps its E/n experts, gathering the
             # slices every peer built for them (compacted frontier exchange).
             buf = jax.lax.all_to_all(buf, data_axis, split_axis=0, concat_axis=1, tiled=True)

@@ -1,0 +1,123 @@
+"""Deterministic stand-in for the `hypothesis` API surface this suite uses.
+
+The property-based tests only need ``given`` / ``settings`` and the
+``integers`` / ``floats`` / ``booleans`` strategies.  When the real
+hypothesis package is unavailable (hermetic containers), ``conftest.py``
+installs this module as ``sys.modules['hypothesis']`` so the property
+tests still *run* — each ``@given`` test executes ``max_examples``
+fixed-seed samples drawn uniformly from the declared strategies — instead
+of the whole module failing at collection.
+
+This is NOT a hypothesis replacement: no shrinking, no example database,
+no adaptive generation.  Install the real package (``pip install -e
+.[test]``) for proper property testing; CI does.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+import sys
+import types
+import zlib
+
+
+class _Strategy:
+    def example(self, rng: random.Random):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value, max_value):
+        self.min_value, self.max_value = min_value, max_value
+
+    def example(self, rng):
+        return rng.randint(self.min_value, self.max_value)
+
+
+class _Floats(_Strategy):
+    def __init__(self, min_value=0.0, max_value=1.0, **_):
+        self.min_value, self.max_value = min_value, max_value
+
+    def example(self, rng):
+        return rng.uniform(self.min_value, self.max_value)
+
+
+class _Booleans(_Strategy):
+    def example(self, rng):
+        return rng.random() < 0.5
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def example(self, rng):
+        return rng.choice(self.elements)
+
+
+def integers(min_value, max_value):
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value=0.0, max_value=1.0, **kw):
+    return _Floats(min_value, max_value, **kw)
+
+
+def booleans():
+    return _Booleans()
+
+
+def sampled_from(elements):
+    return _SampledFrom(elements)
+
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def given(**strategies):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for _ in range(n):
+                kwargs = {k: s.example(rng) for k, s in strategies.items()}
+                try:
+                    fn(**kwargs)
+                except Exception as e:  # pragma: no cover - failure reporting
+                    raise AssertionError(
+                        f"fallback property test failed with example {kwargs!r}"
+                    ) from e
+
+        # pytest resolves fixture params through __wrapped__; the sampled
+        # strategy args must not look like fixtures, so hide the original.
+        del wrapper.__wrapped__
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_):
+    def decorate(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (+ ``.strategies``)."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.__doc__ = __doc__
+    hyp.given = given
+    hyp.settings = settings
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from"):
+        setattr(st, name, globals()[name])
+    hyp.strategies = st
+    hyp.HealthCheck = types.SimpleNamespace(all=staticmethod(lambda: []))
+    hyp.__fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

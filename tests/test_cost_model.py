@@ -121,6 +121,73 @@ def test_forced_engine_plan_matches_table6_accounting():
         assert float(jnp.sum(plan.transfer_bytes)) == pytest.approx(expected)
 
 
+def test_dense_partitions_never_zerocopy():
+    """Regression (Eqs. 1 vs 3 at full activeness): with every vertex
+    active, the per-vertex request rounding + misalignment terms make
+    REQ_i * rtt_zc strictly exceed the dense stream, so ``generate_tasks``
+    must never select ZEROCOPY for any partition of a real graph.
+
+    Uses fine transaction groups (mr=4, as the CPU-scale benchmarks do):
+    the paper-scale mr=256 rounds toy partitions to a single group for
+    every engine, and at an exact Tef == Tiz tie Algorithm 1 legitimately
+    returns ZC."""
+    from repro.core.cost_model import partition_stats, zc_request_counts
+    from repro.core.partition import partition_graph, to_device_partitions
+    from repro.graph.csr import to_device_csr
+    from repro.graph.generators import rmat_graph
+
+    link = PCIE3.with_(mr=4.0)
+    for seed in (3, 17, 99):
+        g = rmat_graph(1200, 9000, seed=seed)
+        table = partition_graph(g, n_partitions=12)
+        csr = to_device_csr(g)
+        parts = to_device_partitions(table, g.n_nodes, csr.capacity)
+        zc_req = zc_request_counts(csr.out_degree, csr.seg_start, link)
+        frontier = jnp.ones(g.n_nodes, bool)  # all vertices active
+        stats = partition_stats(frontier, csr.out_degree, zc_req, parts)
+        plan = generate_tasks(stats, link)
+        engines = np.asarray(plan.engines)
+        assert not np.any(engines == ZEROCOPY), engines
+        # every non-empty partition is processed
+        assert np.all((engines != NONE) == (np.asarray(stats.active_edges) > 0))
+
+
+def test_sparse_never_filter_when_zc_models_cheaper():
+    """Algorithm-1 regression at the Tef/Tiz decision boundary: whenever
+    the modeled zero-copy time is at or below the modeled filter time the
+    selection must not be FILTER (it picks ZEROCOPY, or COMPACT when the
+    compaction thresholds fire)."""
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        E = int(rng.integers(1_000, 5_000_000))
+        Ea = int(rng.integers(1, E + 1))
+        A = int(rng.integers(1, Ea + 1))
+        req = float(rng.integers(1, max(2, Ea // 8)))
+        s = _stats([E], [Ea], [A], [req])
+        c = engine_costs(s, PCIE3)
+        eng = int(select_engines(s, c, PCIE3)[0])
+        if float(c.tiz[0]) <= float(c.tef[0]):
+            assert eng != FILTER, (E, Ea, A, req, c)
+
+
+def test_selection_monotone_in_zc_requests():
+    """Sweeping REQ_i upward through the boundary (all else fixed) the
+    selection flips ZEROCOPY -> FILTER exactly once — Eq. 3 is monotone
+    in the request count, so there is a single crossing.  Ea is kept close
+    to E so the compaction bytes track the filter bytes and Algorithm 1's
+    COMPACT thresholds stay out of the picture."""
+    E, Ea, A = 200_000, 190_000, 50_000
+    picked = []
+    for req in np.linspace(1, 4 * E * PCIE3.d1 / PCIE3.m, 80):
+        s = _stats([E], [Ea], [A], [float(req)])
+        eng = int(select_engines(s, engine_costs(s, PCIE3), PCIE3)[0])
+        picked.append(eng)
+    assert picked[0] == ZEROCOPY and picked[-1] == FILTER
+    assert COMPACT not in picked
+    flips = sum(1 for a, b in zip(picked, picked[1:]) if a != b)
+    assert flips == 1, picked
+
+
 def test_tpu_link_model_compaction_pass_charged():
     s = _stats([100_000], [50_000], [1000], [2000])
     c_tpu = engine_costs(s, TPU_V5E_HBM)

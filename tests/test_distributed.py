@@ -114,6 +114,119 @@ def test_sharded_ce_matches_unsharded():
     """)
 
 
+_SHARDED_HYTM_SCRIPT = """
+    import dataclasses
+    import numpy as np
+    import jax
+    assert len(jax.devices()) == {devices}
+    from repro.core.hytm import HyTMConfig, run_hytm
+    from repro.graph.algorithms import (
+        BFS, PAGERANK, SSSP, reference_bfs, reference_pagerank, reference_sssp,
+    )
+    from repro.graph.generators import rmat_graph
+
+    g = rmat_graph(600, 5000, seed=7)
+    # tolerance tightened so the converged Δ residual is small enough for
+    # the numpy-reference comparison (the equivalence checks don't care)
+    pr = dataclasses.replace(PAGERANK, tolerance=1e-6)
+    for prog, src, name in ((BFS, 0, "bfs"), (SSSP, 0, "sssp"),
+                            (pr, None, "pagerank")):
+        cfg = HyTMConfig(
+            n_partitions=16, async_sweep=False, mesh_axis="graph",
+            cds_mode="delta" if prog.combine else "hub",
+        )
+        sharded = run_hytm(g, prog, source=src, config=cfg)
+        oracle = run_hytm(
+            g, prog, source=src, config=dataclasses.replace(cfg, mesh_axis=None)
+        )
+        # the acceptance triple: values, iteration count, transfer bytes
+        assert sharded.iterations == oracle.iterations, name
+        if prog.combine == 0:  # min-combine: bit-exact
+            np.testing.assert_array_equal(sharded.values, oracle.values)
+            assert sharded.total_transfer_bytes == oracle.total_transfer_bytes
+        else:  # sum-combine: exact up to FP summation order of the psum
+            np.testing.assert_allclose(
+                sharded.values, oracle.values, rtol=0, atol=1e-5)
+            np.testing.assert_allclose(
+                sharded.total_transfer_bytes, oracle.total_transfer_bytes,
+                rtol=1e-6)
+        np.testing.assert_array_equal(
+            sharded.history["engines"], oracle.history["engines"])
+        # ...and against the numpy references
+        finite = lambda x: np.where(np.isfinite(x), x, -1.0)
+        if name == "bfs":
+            np.testing.assert_array_equal(
+                finite(sharded.values), finite(reference_bfs(g, 0)))
+        elif name == "sssp":
+            assert np.allclose(
+                finite(sharded.values), finite(reference_sssp(g, 0)))
+        else:
+            ref = reference_pagerank(g)
+            assert np.max(np.abs(sharded.values + sharded.delta - ref)) < 1e-2
+        print("OK", name, sharded.iterations)
+"""
+
+
+@pytest.mark.parametrize("devices", [4, 8])
+def test_sharded_hytm_matches_single_device_oracle(devices):
+    """BFS/SSSP/PageRank through the shard_mapped sweep on forced-host
+    meshes must reproduce the single-device run: same values, same
+    iteration count, same modeled transfer bytes, same engine picks."""
+    _run(_SHARDED_HYTM_SCRIPT.format(devices=devices), devices=devices)
+
+
+def test_sharded_hytm_padding_and_forced_engines():
+    """Partition counts that do not divide the device count pad with
+    empty partitions; forced single-engine baselines stay correct."""
+    _run("""
+        import dataclasses
+        import numpy as np
+        from repro.core.cost_model import COMPACT, FILTER, ZEROCOPY
+        from repro.core.hytm import HyTMConfig, run_hytm
+        from repro.graph.algorithms import SSSP, reference_sssp
+        from repro.graph.generators import rmat_graph
+
+        g = rmat_graph(500, 4000, seed=11)
+        ref = reference_sssp(g, 0)
+        for eng in (FILTER, COMPACT, ZEROCOPY, None):
+            cfg = HyTMConfig(n_partitions=10, async_sweep=False,
+                             mesh_axis="graph", forced_engine=eng)
+            sharded = run_hytm(g, SSSP, source=0, config=cfg)
+            oracle = run_hytm(g, SSSP, source=0,
+                              config=dataclasses.replace(cfg, mesh_axis=None))
+            np.testing.assert_array_equal(sharded.values, oracle.values)
+            assert sharded.iterations == oracle.iterations
+            assert np.allclose(sharded.values, ref), f"engine {eng}"
+        print("OK padded+forced")
+    """, devices=8)
+
+
+def test_sharded_hytm_recompute_once_and_hubs():
+    """The recompute-once second pass (global priority mask) agrees with
+    the single-device schedule when hub partitions are designated."""
+    _run("""
+        import dataclasses
+        import numpy as np
+        from repro.core.hytm import HyTMConfig, run_hytm
+        from repro.graph.algorithms import SSSP
+        from repro.graph.generators import rmat_graph
+        from repro.graph.hub_sort import hub_sort
+
+        g = rmat_graph(800, 7000, seed=5)
+        hs = hub_sort(g, hub_fraction=0.1)
+        g2, n_hubs = hs.graph, hs.n_hubs
+        cfg = HyTMConfig(n_partitions=16, async_sweep=False,
+                         mesh_axis="graph", cds_mode="hub", recompute_once=True)
+        sharded = run_hytm(g2, SSSP, source=0, config=cfg, n_hubs=n_hubs)
+        oracle = run_hytm(g2, SSSP, source=0, n_hubs=n_hubs,
+                          config=dataclasses.replace(cfg, mesh_axis=None))
+        np.testing.assert_array_equal(sharded.values, oracle.values)
+        assert sharded.iterations == oracle.iterations
+        assert sharded.total_transfer_bytes == oracle.total_transfer_bytes
+        print("OK hubs", sharded.iterations)
+    """, devices=4)
+
+
 def test_checkpoint_elastic_reshard():
     """Save on a (2,4) mesh, restore onto (4,2) — topology-elastic."""
     _run("""

@@ -3,12 +3,20 @@
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cost_model import COMPACT, FILTER, ZEROCOPY
-from repro.core.engines import EdgeBlock, relax_compact, relax_filter, relax_zerocopy
+from repro.core.engines import (
+    ENGINE_FNS,
+    EdgeBlock,
+    relax_compact,
+    relax_filter,
+    relax_with_engine,
+    relax_zerocopy,
+)
 from repro.core.hytm import HyTMConfig, run_hytm
 from repro.graph.algorithms import PAGERANK, SSSP, reference_pagerank, reference_sssp
 from repro.graph.generators import rmat_graph
@@ -38,6 +46,34 @@ def test_engines_identical_property(n, b, seed, combine_min):
     for o in outs[1:]:
         assert jnp.allclose(outs[0].agg, o.agg, atol=1e-5, equal_nan=True)
         assert jnp.array_equal(outs[0].touched, o.touched)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    n=st.integers(2, 48),
+    b=st.integers(1, 128),
+    seed=st.integers(0, 1000),
+    combine_min=st.booleans(),
+)
+def test_lax_switch_dispatch_matches_direct(n, b, seed, combine_min):
+    """``relax_with_engine`` (the traced lax.switch used inside the jitted
+    sweep) must route each engine id to exactly the direct function."""
+    rng = np.random.default_rng(seed)
+    block = EdgeBlock(
+        src=jnp.asarray(rng.integers(0, n, b), jnp.int32),
+        dst=jnp.asarray(rng.integers(0, n, b), jnp.int32),
+        weight=jnp.asarray(rng.random(b), jnp.float32),
+        active=jnp.asarray(rng.random(b) < 0.5),
+    )
+    operand = jnp.asarray(rng.random(n), jnp.float32)
+    prog = SSSP if combine_min else PAGERANK
+    for eng in (FILTER, COMPACT, ZEROCOPY):
+        switched = jax.jit(
+            lambda e: relax_with_engine(e, block, operand, n, prog)
+        )(jnp.int32(eng))
+        direct = ENGINE_FNS[eng](block, operand, n, prog)
+        assert jnp.allclose(switched.agg, direct.agg, atol=1e-6, equal_nan=True)
+        assert jnp.array_equal(switched.touched, direct.touched)
 
 
 def _converges_to_reference(g, engine):
