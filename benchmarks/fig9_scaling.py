@@ -71,7 +71,8 @@ _DEVICE_SWEEP_SCRIPT = """
     res = run_hytm(g, SSSP, source=0, config=cfg, runtime=rt)
     wall = time.monotonic() - t0
     print(f"RESULT,{{n_dev}},{{wall * 1e6:.1f}},{{res.modeled_seconds * 1e3:.4f}},"
-          f"{{res.iterations}},{{res.total_transfer_bytes:.0f}}")
+          f"{{res.iterations}},{{res.total_transfer_bytes:.0f}},"
+          f"{{res.modeled_ici_seconds * 1e3:.4f}},{{res.total_ici_bytes:.0f}}")
 """
 
 
@@ -104,11 +105,15 @@ def run_devices(device_counts=(1, 2, 4, 8), n_nodes=5_000, n_edges=160_000,
             emit(f"fig9/devices_{n_dev}", 0.0, f"FAILED: {out.stderr[-200:]}")
             continue
         line = [l for l in out.stdout.splitlines() if l.startswith("RESULT,")][0]
-        _, dev, wall_us, modeled_ms, iters, bytes_ = line.split(",")
+        _, dev, wall_us, modeled_ms, iters, bytes_, ici_ms, ici_bytes = line.split(",")
         rows[n_dev] = float(modeled_ms)
+        # two-level transfer management: the PCIe/HBM level (modeled_ms,
+        # device-count-invariant) + the cross-device merge charged over
+        # the ICI link (grows with the device count)
         emit(
             f"fig9/devices_{n_dev}", float(wall_us),
-            f"modeled_ms={modeled_ms} iters={iters} bytes={bytes_}",
+            f"modeled_ms={modeled_ms} iters={iters} bytes={bytes_} "
+            f"ici_ms={ici_ms} ici_bytes={ici_bytes}",
         )
     return rows
 

@@ -17,6 +17,7 @@ def main() -> None:
         fig9_scaling,
         kernels,
         roofline,
+        stream_bench,
         table5_runtime,
         table6_transfer,
     )
@@ -32,6 +33,7 @@ def main() -> None:
         "fig9-devices": lambda: fig9_scaling.run_devices(),
         "kernels": lambda: kernels.run(),
         "roofline": lambda: roofline.run(),
+        "stream": lambda: stream_bench.run(smoke=args.fast),
     }
     print("name,us_per_call,derived")
     for name, fn in mods.items():

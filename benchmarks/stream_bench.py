@@ -1,0 +1,136 @@
+"""Streaming benchmark: update-throughput and query-throughput of the
+repro.stream serving stack against the full-recompute baseline.
+
+Three measurements per run:
+
+* ``update``  — edges/s applied through ``DeltaCSR.apply`` (device
+  patches, no rebuild);
+* ``inc-vs-full`` — per update batch, incremental warm-start
+  recomputation vs from-scratch ``run_hytm`` on the post-update graph
+  (wall time + sweep-iteration savings);
+* ``query``   — lane-batched query service throughput vs sequential
+  single-source runs, plus the cache-hit path.
+
+``--smoke`` (also ``run(smoke=True)``) shrinks everything to finish in
+well under 30 s on CPU — the CI configuration.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.hytm import HyTMConfig, run_hytm
+from repro.graph.algorithms import SSSP
+from repro.graph.generators import rmat_graph
+from repro.stream import GraphService, random_batch, run_incremental
+
+
+def run(smoke: bool = False, n_nodes: int | None = None,
+        n_edges: int | None = None, n_partitions: int | None = None,
+        n_batches: int | None = None, batch_edges: int | None = None,
+        n_queries: int | None = None, lanes: int = 4):
+    if smoke:
+        n_nodes, n_edges, n_partitions = 1000, 8_000, 8
+        n_batches, batch_edges, n_queries = 2, 48, 4
+    else:
+        n_nodes = n_nodes or 8000
+        n_edges = n_edges or 128_000
+        n_partitions = n_partitions or 32
+        n_batches = n_batches or 6
+        batch_edges = batch_edges or 256
+        n_queries = n_queries or 16
+
+    g = rmat_graph(n_nodes, n_edges, seed=21)
+    cfg = HyTMConfig(n_partitions=n_partitions)
+    svc = GraphService(g, cfg, max_lanes=lanes)
+    rng = np.random.default_rng(21)
+
+    # --- query throughput: lane-batched vs sequential ---------------------
+    # vertex 0 (the RMAT hub) leads: it is also the warm-recompute probe,
+    # and a hub source gives the convergence loop real depth
+    sources = [0] + rng.integers(0, n_nodes, size=n_queries - 1).tolist()
+    t0 = time.monotonic()
+    batched = svc.query(SSSP, sources)
+    t_batched = time.monotonic() - t0
+    emit("stream/query_batched", t_batched * 1e6 / max(n_queries, 1),
+         f"q_per_s={n_queries / max(t_batched, 1e-9):.1f} lanes={lanes}")
+
+    rt = svc.dcsr.runtime_for(SSSP)
+    t0 = time.monotonic()
+    for s in sources:
+        run_hytm(None, SSSP, source=s, config=cfg, runtime=rt)
+    t_seq = time.monotonic() - t0
+    emit("stream/query_sequential", t_seq * 1e6 / max(n_queries, 1),
+         f"q_per_s={n_queries / max(t_seq, 1e-9):.1f} "
+         f"speedup={t_seq / max(t_batched, 1e-9):.2f}x")
+
+    t0 = time.monotonic()
+    cached = svc.query(SSSP, sources)
+    t_cache = time.monotonic() - t0
+    assert all(r.cache_hit for r in cached)
+    emit("stream/query_cached", t_cache * 1e6 / max(n_queries, 1),
+         f"q_per_s={n_queries / max(t_cache, 1e-9):.0f} sweeps=0")
+
+    # --- update throughput + incremental vs full recompute ----------------
+    probe = sources[0]
+    warm_vals = batched[0].values
+    warm_delta = np.zeros(n_nodes, np.float32)
+    t_apply = t_inc = t_full = 0.0
+    iters_inc = iters_full = 0
+    edges_applied = 0
+    reports = []
+    for _ in range(n_batches):
+        b = random_batch(svc.dcsr, rng, n_insert=batch_edges // 2,
+                         n_delete=batch_edges // 2)
+        t0 = time.monotonic()
+        rep = svc.update(b)
+        t_apply += time.monotonic() - t0
+        edges_applied += len(b)
+        reports.append(rep)
+
+        t0 = time.monotonic()
+        inc = run_incremental(svc.dcsr, SSSP, reports, warm_vals, warm_delta,
+                              source=probe, config=cfg)
+        t_inc += time.monotonic() - t0
+        iters_inc += inc.iterations
+
+        t0 = time.monotonic()
+        full = run_hytm(svc.dcsr.to_host_graph(), SSSP, source=probe, config=cfg)
+        t_full += time.monotonic() - t0
+        iters_full += full.iterations
+
+        np.testing.assert_array_equal(inc.values, full.values)
+        warm_vals, warm_delta = inc.values, inc.delta
+        reports = []
+
+    emit("stream/update_apply", t_apply * 1e6 / max(n_batches, 1),
+         f"edges_per_s={edges_applied / max(t_apply, 1e-9):.0f}")
+    emit("stream/recompute_incremental", t_inc * 1e6 / max(n_batches, 1),
+         f"iters={iters_inc}")
+    emit("stream/recompute_full", t_full * 1e6 / max(n_batches, 1),
+         f"iters={iters_full} iter_savings="
+         f"{(1 - iters_inc / max(iters_full, 1)) * 100:.0f}%")
+    return {
+        "batched_s": t_batched, "sequential_s": t_seq,
+        "iters_inc": iters_inc, "iters_full": iters_full,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configuration (<30 s on CPU; CI mode)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    t0 = time.monotonic()
+    out = run(smoke=args.smoke)
+    emit("stream/total_wall", (time.monotonic() - t0) * 1e6,
+         f"iters_inc={out['iters_inc']} iters_full={out['iters_full']}")
+
+
+if __name__ == "__main__":
+    main()

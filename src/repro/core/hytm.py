@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.constants import PCIE3, LinkModel
+from repro.core.constants import PCIE3, TPU_V5E_ICI, LinkModel
 from repro.core.cost_model import (
     COMPACT,
     FILTER,
@@ -67,6 +67,10 @@ class HyTMConfig:
     max_iters: int = 10_000
     forced_engine: int | None = None  # force a single engine (baselines)
     hub_fraction: float = 0.08
+    # Second transfer-management level (DESIGN.md §2): the link model used
+    # to charge the cross-device merge of the sharded sweep.  Only read on
+    # the mesh_axis path; the single-device run reports zero ICI traffic.
+    ici_link: LinkModel = TPU_V5E_ICI
     # Name of a 1-D mesh axis to shard the partition edge blocks over
     # (repro.dist.graph_shard).  None = the single-device path below
     # (note: the sync-sweep SUM consumption fix in ``_sweep`` changed
@@ -267,7 +271,10 @@ def hytm_iteration(
     if program.combine == MIN:
         frontier2 = frontier | activated
     else:
-        frontier2 = state1.delta > program.tolerance
+        # |Δ|: pending deltas are non-negative on a cold start, but the
+        # incremental path (repro.stream) injects *signed* correction
+        # deltas after edge deletions — negative mass must propagate too.
+        frontier2 = jnp.abs(state1.delta) > program.tolerance
     state2, activated2 = _sweep(
         state1, rt, program, engines2, sched.order, frontier2,
         config.async_sweep, consume="processed",
@@ -278,7 +285,7 @@ def hytm_iteration(
     if program.combine == MIN:
         next_frontier = activated
     else:
-        next_frontier = state2.delta > program.tolerance
+        next_frontier = jnp.abs(state2.delta) > program.tolerance
     new_state = HyTMState(values=state2.values, delta=state2.delta, frontier=next_frontier)
 
     info = {
@@ -307,6 +314,11 @@ class HyTMResult:
     modeled_seconds: float
     total_transfer_bytes: float
     history: dict[str, np.ndarray]  # per-iteration arrays
+    # second transfer-management level (sharded sweep only): modeled
+    # cross-device merge traffic over config.ici_link.  Zero on the
+    # single-device path.
+    total_ici_bytes: float = 0.0
+    modeled_ici_seconds: float = 0.0
 
 
 def run_hytm(
@@ -317,11 +329,19 @@ def run_hytm(
     n_hubs: int = 0,
     runtime: Runtime | None = None,
     mesh=None,
+    initial_state: HyTMState | None = None,
 ) -> HyTMResult:
     """``runtime`` lets callers amortize preprocessing across runs; with
     ``config.mesh_axis`` set it must be a ``graph_shard.ShardedRuntime``
-    (reuse also keeps the compiled sharded sweep warm)."""
+    (reuse also keeps the compiled sharded sweep warm).
+
+    ``initial_state`` warm-starts the convergence loop from an arbitrary
+    (values, Δ, frontier) triple instead of ``program.init_state`` — the
+    entry point of the incremental path (repro.stream.incremental).  With
+    both ``runtime`` and ``initial_state`` given, ``g`` may be ``None``.
+    """
     if config.mesh_axis is not None:
+        assert initial_state is None, "sharded path has no warm-start yet"
         # late import: graph_shard depends on this module's dataclasses
         from repro.dist.graph_shard import run_hytm_sharded
 
@@ -333,8 +353,11 @@ def run_hytm(
         g, config, n_hubs=n_hubs,
         weighted_norm=program.use_delta and program.weighted,
     )
-    values, delta, frontier = program.init_state(g.n_nodes, source)
-    state = HyTMState(values=values, delta=delta, frontier=frontier)
+    if initial_state is None:
+        values, delta, frontier = program.init_state(rt.csr.n_nodes, source)
+        state = HyTMState(values=values, delta=delta, frontier=frontier)
+    else:
+        state = initial_state
 
     hist: dict[str, list] = {
         "engines": [], "transfer_bytes": [], "transfer_time": [],

@@ -371,7 +371,9 @@ def make_sharded_iteration(
         if program.combine == MIN:
             frontier2 = frontier | activated
         else:
-            frontier2 = delta1 > program.tolerance
+            # |Δ| matches core.hytm: signed correction deltas (the
+            # incremental repro.stream path) must keep propagating.
+            frontier2 = jnp.abs(delta1) > program.tolerance
         if program.combine == SUM:
             operand2 = program.damping * delta1 * rt.inv_deg
         else:
@@ -391,7 +393,7 @@ def make_sharded_iteration(
         if program.combine == MIN:
             next_frontier = activated
         else:
-            next_frontier = delta2 > program.tolerance
+            next_frontier = jnp.abs(delta2) > program.tolerance
 
         new_state = HyTMState(values=values2, delta=delta2, frontier=next_frontier)
         info = {
@@ -407,6 +409,33 @@ def make_sharded_iteration(
         return new_state, info
 
     return iteration
+
+
+# --------------------------------------------------------------------------
+# Second transfer-management level: the cross-device merge
+# --------------------------------------------------------------------------
+
+def ici_merge_cost(
+    n_nodes: int, n_devices: int, link, n_collectives: int = 4
+) -> tuple[float, float]:
+    """Modeled (bytes, seconds) of one iteration's cross-device merges.
+
+    Each sweep pass all-reduces two dense (n,) vectors — the contribution
+    aggregate (f32) and the touched mask (i32) — and an iteration runs two
+    passes, so ``n_collectives`` = 4.  A ring all-reduce moves
+    ``2*(D-1)/D * n * 4`` bytes per device per collective; bytes are the
+    all-device total (what the fabric carries), time is the per-device
+    critical path through the same transaction-group model as Eqs. 1-3
+    (DESIGN.md §2: all-gather of whole value arrays == the filter engine
+    of the ICI level).
+    """
+    if n_devices <= 1:
+        return 0.0, 0.0
+    per_dev = 2.0 * (n_devices - 1) / n_devices * n_nodes * 4.0
+    total_bytes = per_dev * n_devices * n_collectives
+    group = link.m * link.mr
+    per_collective = float(np.ceil(per_dev / group)) * link.rtt + link.launch_overhead_s
+    return total_bytes, n_collectives * per_collective
 
 
 # --------------------------------------------------------------------------
@@ -446,6 +475,13 @@ def run_hytm_sharded(
     values, delta, frontier = program.init_state(g.n_nodes, source)
     state = HyTMState(values=values, delta=delta, frontier=frontier)
 
+    # second-level accounting: the merge exchanges dense (n,) vectors, so
+    # its cost is iteration-invariant — charge it once per iteration.
+    n_dev = int(mesh.shape[config.mesh_axis])
+    ici_bytes_iter, ici_time_iter = ici_merge_cost(
+        g.n_nodes, n_dev, config.ici_link
+    )
+
     hist: dict[str, list] = {
         "engines": [], "transfer_bytes": [], "transfer_time": [],
         "active_vertices": [], "active_edges": [], "n_tasks": [],
@@ -465,6 +501,8 @@ def run_hytm_sharded(
     history = {
         k: np.stack(v) if np.ndim(v[0]) else np.asarray(v) for k, v in hist.items()
     }
+    history["ici_bytes"] = np.full(iters, ici_bytes_iter)
+    history["ici_time"] = np.full(iters, ici_time_iter)
     return HyTMResult(
         values=np.asarray(state.values),
         delta=np.asarray(state.delta),
@@ -473,4 +511,6 @@ def run_hytm_sharded(
         modeled_seconds=float(np.sum(history["transfer_time"])),
         total_transfer_bytes=float(np.sum(history["transfer_bytes"])),
         history=history,
+        total_ici_bytes=float(iters * ici_bytes_iter),
+        modeled_ici_seconds=float(iters * ici_time_iter),
     )

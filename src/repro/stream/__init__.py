@@ -1,0 +1,30 @@
+"""repro.stream — dynamic-graph updates, incremental HyTM recomputation,
+and a batched graph-query serving front-end.
+
+Layers:
+  delta_csr   — versioned graph container: per-partition edge log,
+                device-buffer patching, merge-compaction, dirty tracking
+  incremental — warm-start recomputation seeded from update-affected
+                vertices (routed-through invalidation / correction Δs)
+  service     — source-lane-batched query serving with a
+                (graph_version, program, source)-keyed result cache
+"""
+
+from repro.stream.delta_csr import (
+    OP_DELETE,
+    OP_INSERT,
+    OP_REWEIGHT,
+    DeltaCSR,
+    EdgeBatch,
+    UpdateReport,
+    random_batch,
+)
+from repro.stream.incremental import incremental_state, run_incremental
+from repro.stream.service import GraphService, QueryResult
+
+__all__ = [
+    "OP_DELETE", "OP_INSERT", "OP_REWEIGHT",
+    "DeltaCSR", "EdgeBatch", "UpdateReport", "random_batch",
+    "incremental_state", "run_incremental",
+    "GraphService", "QueryResult",
+]

@@ -1,0 +1,472 @@
+"""Versioned dynamic-graph container over ``CSRGraph``/``DeviceCSR``.
+
+Streaming workloads mutate the edge set in small batches; rebuilding the
+CSR + partition layout + device buffers per batch would cost more than
+the recomputation it unlocks.  ``DeltaCSR`` instead keeps the partition
+edge-block layout (core/partition.py) *fixed between merges* and treats
+each partition's edge range as a log-structured segment:
+
+* every partition gets ``slack`` spare lanes at build time — its live
+  edges occupy a dense prefix of a fixed-capacity block (the per-partition
+  edge log);
+* **insert** appends into the partition of the edge's source vertex
+  (partition boundaries are vertex-aligned, so the source's partition is
+  the only legal home);
+* **delete** swap-removes within the block (combiners are commutative, so
+  intra-partition edge order is free) — the live prefix stays dense and
+  the sweep's ``local < part_edges[p]`` masking needs no tombstones;
+* **reweight** patches the weight lane in place.
+
+Device buffers are *patched* (one scatter over the touched lanes + the
+(P,) live-count and (n,) degree vectors), never rebuilt — shapes are
+static between merges so ``hytm_iteration`` keeps its compiled sweep.
+When a partition's block overflows, a **merge-compaction** folds the log
+into a fresh CSR, re-partitions, and re-uploads (``layout_version`` bump).
+
+Versioning contract (consumed by repro.stream.service's result cache):
+``version`` bumps once per applied batch; a result computed at version v
+is valid iff the container is still at v.  ``dirty_partitions`` in each
+``UpdateReport`` names the blocks a batch touched — the granularity at
+which Totem-style hybrid systems track what an update dirties.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost_model import zc_request_counts
+from repro.core.hytm import HyTMConfig, Runtime
+from repro.core.partition import DevicePartitions, PartitionTable, partition_graph
+from repro.graph.algorithms import VertexProgram
+from repro.graph.csr import CSRGraph, DeviceCSR, csr_from_edges
+
+OP_INSERT, OP_DELETE, OP_REWEIGHT = 0, 1, 2
+
+
+@dataclass
+class EdgeBatch:
+    """One update batch: parallel arrays of (op, src, dst, weight).
+
+    ``weight`` is the new weight for INSERT/REWEIGHT and ignored for
+    DELETE.  Ops apply in order (multigraph semantics: INSERT always adds
+    a parallel edge; DELETE/REWEIGHT match the first live (src, dst))."""
+
+    op: np.ndarray
+    src: np.ndarray
+    dst: np.ndarray
+    weight: np.ndarray
+
+    def __post_init__(self):
+        self.op = np.asarray(self.op, dtype=np.int32)
+        self.src = np.asarray(self.src, dtype=np.int64)
+        self.dst = np.asarray(self.dst, dtype=np.int64)
+        self.weight = np.asarray(self.weight, dtype=np.float32)
+        assert self.op.shape == self.src.shape == self.dst.shape == self.weight.shape
+
+    def __len__(self) -> int:
+        return len(self.op)
+
+    @classmethod
+    def inserts(cls, src, dst, weight) -> "EdgeBatch":
+        src = np.asarray(src)
+        return cls(np.full(len(src), OP_INSERT), src, dst, weight)
+
+    @classmethod
+    def deletes(cls, src, dst) -> "EdgeBatch":
+        src = np.asarray(src)
+        return cls(
+            np.full(len(src), OP_DELETE), src, dst, np.zeros(len(src), np.float32)
+        )
+
+
+@dataclass
+class UpdateReport:
+    """What one ``apply`` did — everything the incremental layer needs.
+
+    REWEIGHT is reported as delete(old weight) + insert(new weight) so the
+    seeding rules (repro.stream.incremental) see one uniform op algebra.
+    ``pre_adj``/``post_adj`` snapshot the out-adjacency (dsts, weights) of
+    every affected source vertex before/after the batch — the SUM-program
+    correction deltas are computed from exactly these."""
+
+    version: int
+    dirty_partitions: np.ndarray
+    merged: bool
+    ins_src: np.ndarray
+    ins_dst: np.ndarray
+    ins_w: np.ndarray
+    del_src: np.ndarray
+    del_dst: np.ndarray
+    del_w: np.ndarray
+    pre_adj: dict[int, tuple[np.ndarray, np.ndarray]] = field(default_factory=dict)
+    post_adj: dict[int, tuple[np.ndarray, np.ndarray]] = field(default_factory=dict)
+
+    @property
+    def affected_vertices(self) -> np.ndarray:
+        """Sources/destinations of changed edges (frontier seed set)."""
+        return np.unique(
+            np.concatenate([self.ins_src, self.ins_dst, self.del_src, self.del_dst])
+        )
+
+
+class DeltaCSR:
+    """Mutable, versioned graph with a ``hytm_iteration``-compatible runtime.
+
+    The vertex set is fixed at construction (updates are edge-only).
+    Invariants between merge-compactions:
+
+      * partition p's live edges are ``_src/_dst/_w[p*B : p*B + counts[p]]``
+        (B = ``block_size``, uniform block capacity);
+      * device arrays mirror the host log exactly (patched per batch);
+      * ``seg_start`` (per-vertex segment starts, feeding the zero-copy
+        alignment term of Eq. 3) is frozen at the last merge — inserted
+        edges live at the partition tail, so the ZC *alignment* flag is an
+        approximation until the next merge (the request-count base uses
+        the live out-degrees and stays exact).
+    """
+
+    def __init__(self, g: CSRGraph, config: HyTMConfig | None = None,
+                 slack: float = 0.5, min_slack: int = 128):
+        self.config = config if config is not None else HyTMConfig()
+        self.n_nodes = g.n_nodes
+        self.slack = slack
+        self.min_slack = min_slack
+        self.version = 0
+        self.layout_version = 0
+        self.dirty: set[int] = set()  # dirty partitions since last merge
+        self._inv_deg_cache: dict[bool, jnp.ndarray] = {}
+        self._build_layout(g)
+
+    # ------------------------------------------------------------ construction
+    @classmethod
+    def from_graph(cls, g: CSRGraph, config: HyTMConfig | None = None,
+                   **kw) -> "DeltaCSR":
+        return cls(g, config, **kw)
+
+    def _build_layout(self, g: CSRGraph) -> None:
+        cfg = self.config
+        table: PartitionTable = partition_graph(
+            g, n_partitions=cfg.n_partitions,
+            partition_bytes=cfg.partition_bytes, d1=cfg.link.d1,
+        )
+        P = table.n_partitions
+        epp = table.edges_per_partition
+        max_epp = int(epp.max(initial=1))
+        B = max_epp + max(self.min_slack, int(np.ceil(max_epp * self.slack)))
+        B = max(128, -(-B // 128) * 128)
+        cap = P * B
+
+        src = np.zeros(cap, np.int32)
+        dst = np.zeros(cap, np.int32)
+        w = np.full(cap, np.float32(np.inf), np.float32)
+        valid = np.zeros(cap, bool)
+        src_all = g.edge_sources()
+        dst_all = g.indices
+        w_all = g.weights if g.weights is not None else np.ones(g.n_edges, np.float32)
+        counts = epp.astype(np.int64)
+        for p in range(P):
+            e0, e1 = int(table.edge_start[p]), int(table.edge_start[p + 1])
+            k = e1 - e0
+            src[p * B:p * B + k] = src_all[e0:e1]
+            dst[p * B:p * B + k] = dst_all[e0:e1]
+            w[p * B:p * B + k] = w_all[e0:e1]
+            valid[p * B:p * B + k] = True
+
+        part_id = np.repeat(
+            np.arange(P, dtype=np.int32), table.vertices_per_partition
+        )
+        # per-vertex segment start relocated into the blocked layout
+        seg_start = (
+            part_id.astype(np.int64) * B
+            + g.indptr[:-1] - table.edge_start[part_id]
+        )
+
+        self._src, self._dst, self._w, self._valid = src, dst, w, valid
+        self.counts = counts
+        self.block_size = B
+        self.n_partitions = P
+        self.vertex_start = table.vertex_start
+        self.vertex_part = part_id
+        self.out_deg = g.out_degrees.copy()
+        self._seg_start_host = seg_start
+
+        cap_start = np.arange(P + 1, dtype=np.int64) * B
+        self.parts = DevicePartitions(
+            vertex_start=jnp.asarray(table.vertex_start, jnp.int32),
+            edge_start=jnp.asarray(cap_start, jnp.int32),
+            part_edges=jnp.asarray(counts, jnp.int32),
+            vertex_part_id=jnp.asarray(part_id),
+            n_partitions=P,
+            block_size=B,
+        )
+        self.csr = DeviceCSR(
+            edge_src=jnp.asarray(src),
+            edge_dst=jnp.asarray(dst),
+            edge_weight=jnp.asarray(w),
+            edge_valid=jnp.asarray(valid),
+            out_degree=jnp.asarray(self.out_deg, jnp.int32),
+            seg_start=jnp.asarray(seg_start, jnp.int32),
+            n_nodes=self.n_nodes,
+            n_edges=int(counts.sum()),  # live count at last merge
+        )
+        self.zc_req = zc_request_counts(
+            self.csr.out_degree, self.csr.seg_start, self.config.link
+        )
+        self._inv_deg_cache.clear()
+
+    # ------------------------------------------------------------- inspection
+    @property
+    def n_edges(self) -> int:
+        return int(self.counts.sum())
+
+    def live_edges(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(src, dst, weight) of the current edge multiset (host views)."""
+        mask = self._valid
+        return self._src[mask], self._dst[mask], self._w[mask]
+
+    def to_host_graph(self) -> CSRGraph:
+        """Materialize the current edge set as a fresh ``CSRGraph`` (the
+        from-scratch oracle the equivalence tests recompute on)."""
+        s, d, w = self.live_edges()
+        return csr_from_edges(self.n_nodes, s.astype(np.int64),
+                              d.astype(np.int64), w)
+
+    def _out_edges(self, u: int, extra=None) -> tuple[np.ndarray, np.ndarray]:
+        p = int(self.vertex_part[u])
+        lo = p * self.block_size
+        hi = lo + int(self.counts[p])
+        m = self._src[lo:hi] == u
+        dsts, ws = self._dst[lo:hi][m].copy(), self._w[lo:hi][m].copy()
+        if extra and extra.get(p):
+            ex = [(v, ew) for (eu, v, ew) in extra[p] if eu == u]
+            if ex:
+                dsts = np.concatenate([dsts, np.array([v for v, _ in ex], dsts.dtype)])
+                ws = np.concatenate([ws, np.array([ew for _, ew in ex], np.float32)])
+        return dsts, ws
+
+    # ---------------------------------------------------------------- updates
+    def apply(self, batch: EdgeBatch) -> UpdateReport:
+        """Apply one batch; patch device buffers (or merge-compact on
+        overflow); bump ``version``; return the report."""
+        n = self.n_nodes
+        if len(batch) and (
+            batch.src.min() < 0 or batch.src.max() >= n
+            or batch.dst.min() < 0 or batch.dst.max() >= n
+        ):
+            raise ValueError("edge endpoints out of range (vertex set is fixed)")
+
+        affected = np.unique(batch.src)
+        pre_adj = {int(u): self._out_edges(int(u)) for u in affected}
+
+        touched: set[int] = set()
+        dirty: set[int] = set()
+        extra: dict[int, list] = defaultdict(list)
+        ins_rec: list[tuple] = []
+        del_rec: list[tuple] = []
+
+        for i in range(len(batch)):
+            o = int(batch.op[i])
+            u, v = int(batch.src[i]), int(batch.dst[i])
+            wt = float(batch.weight[i])
+            p = int(self.vertex_part[u])
+            dirty.add(p)
+            if o == OP_INSERT:
+                self._insert(u, v, wt, p, touched, extra)
+                ins_rec.append((u, v, wt))
+            elif o == OP_DELETE:
+                old = self._delete(u, v, p, touched, extra)
+                if old is not None:
+                    del_rec.append((u, v, old))
+            elif o == OP_REWEIGHT:
+                old = self._reweight(u, v, wt, p, touched, extra)
+                if old is None:  # absent edge: reweight degenerates to insert
+                    self._insert(u, v, wt, p, touched, extra)
+                else:
+                    del_rec.append((u, v, old))
+                ins_rec.append((u, v, wt))
+            else:
+                raise ValueError(f"unknown op {o}")
+
+        post_adj = {int(u): self._out_edges(int(u), extra) for u in affected}
+
+        merged = any(extra.values())
+        if merged:
+            s, d, w = self.live_edges()
+            for p, lst in extra.items():
+                if not lst:
+                    continue
+                es = np.array([e[0] for e in lst], np.int64)
+                ed = np.array([e[1] for e in lst], np.int64)
+                ew = np.array([e[2] for e in lst], np.float32)
+                s = np.concatenate([s.astype(np.int64), es])
+                d = np.concatenate([d.astype(np.int64), ed])
+                w = np.concatenate([w, ew])
+            self._build_layout(csr_from_edges(self.n_nodes, s, d, w))
+            self.layout_version += 1
+            self.dirty = set()
+            dirty = set(range(self.n_partitions))
+        else:
+            self._patch_device(touched)
+            self.dirty |= dirty
+
+        self.version += 1
+
+        def _cols(rec, j, dt):
+            return np.array([r[j] for r in rec], dtype=dt)
+
+        return UpdateReport(
+            version=self.version,
+            dirty_partitions=np.array(sorted(dirty), np.int64),
+            merged=merged,
+            ins_src=_cols(ins_rec, 0, np.int64),
+            ins_dst=_cols(ins_rec, 1, np.int64),
+            ins_w=_cols(ins_rec, 2, np.float32),
+            del_src=_cols(del_rec, 0, np.int64),
+            del_dst=_cols(del_rec, 1, np.int64),
+            del_w=_cols(del_rec, 2, np.float32),
+            pre_adj=pre_adj,
+            post_adj=post_adj,
+        )
+
+    def _insert(self, u, v, wt, p, touched, extra):
+        B = self.block_size
+        if int(self.counts[p]) < B and not extra.get(p):
+            slot = p * B + int(self.counts[p])
+            self._src[slot], self._dst[slot] = u, v
+            self._w[slot], self._valid[slot] = wt, True
+            self.counts[p] += 1
+            touched.add(slot)
+        else:
+            # block full (or already spilling): spill to the merge log
+            extra[p].append((u, v, wt))
+        self.out_deg[u] += 1
+
+    def _find_slot(self, u, v, p) -> int | None:
+        lo = p * self.block_size
+        hi = lo + int(self.counts[p])
+        hits = np.nonzero((self._src[lo:hi] == u) & (self._dst[lo:hi] == v))[0]
+        return int(lo + hits[0]) if len(hits) else None
+
+    def _delete(self, u, v, p, touched, extra) -> float | None:
+        slot = self._find_slot(u, v, p)
+        if slot is None:
+            for j, (eu, ev, ew) in enumerate(extra.get(p, ())):
+                if eu == u and ev == v:
+                    extra[p].pop(j)
+                    self.out_deg[u] -= 1
+                    return float(ew)
+            return None  # deleting a non-existent edge is a no-op
+        old = float(self._w[slot])
+        last = p * self.block_size + int(self.counts[p]) - 1
+        # swap-remove keeps the live prefix dense (edge order is free)
+        self._src[slot], self._dst[slot] = self._src[last], self._dst[last]
+        self._w[slot] = self._w[last]
+        self._src[last], self._dst[last] = 0, 0
+        self._w[last], self._valid[last] = np.float32(np.inf), False
+        self.counts[p] -= 1
+        touched.add(slot)
+        touched.add(last)
+        self.out_deg[u] -= 1
+        return old
+
+    def _reweight(self, u, v, wt, p, touched, extra) -> float | None:
+        slot = self._find_slot(u, v, p)
+        if slot is None:
+            for j, (eu, ev, ew) in enumerate(extra.get(p, ())):
+                if eu == u and ev == v:
+                    extra[p][j] = (u, v, wt)
+                    return float(ew)
+            return None
+        old = float(self._w[slot])
+        self._w[slot] = wt
+        touched.add(slot)
+        return old
+
+    def _patch_device(self, touched: set[int]) -> None:
+        """Scatter the touched lanes + refresh the (P,)/(n,) vectors —
+        the 'patched, not rebuilt' contract (shapes never change here)."""
+        if touched:
+            idx = np.fromiter(sorted(touched), np.int64, len(touched))
+            # pad the scatter index to a power-of-two bucket (repeating the
+            # last lane — idempotent for .set) so successive batches of
+            # similar size reuse one compiled scatter instead of retracing
+            bucket = 1 << int(np.ceil(np.log2(len(idx))))
+            idx = np.pad(idx, (0, bucket - len(idx)), mode="edge")
+            self.csr = dataclasses.replace(
+                self.csr,
+                edge_src=self.csr.edge_src.at[idx].set(self._src[idx]),
+                edge_dst=self.csr.edge_dst.at[idx].set(self._dst[idx]),
+                edge_weight=self.csr.edge_weight.at[idx].set(self._w[idx]),
+                edge_valid=self.csr.edge_valid.at[idx].set(self._valid[idx]),
+                out_degree=jnp.asarray(self.out_deg, jnp.int32),
+            )
+        else:
+            self.csr = dataclasses.replace(
+                self.csr, out_degree=jnp.asarray(self.out_deg, jnp.int32)
+            )
+        self.parts = dataclasses.replace(
+            self.parts, part_edges=jnp.asarray(self.counts, jnp.int32)
+        )
+        # request-count base tracks the live degrees; the alignment term
+        # keeps the last-merge seg_start (documented approximation)
+        self.zc_req = zc_request_counts(
+            self.csr.out_degree, self.csr.seg_start, self.config.link
+        )
+        self._inv_deg_cache.clear()
+
+    # ---------------------------------------------------------------- runtime
+    def runtime_for(self, program: VertexProgram) -> Runtime:
+        """A ``core.hytm.Runtime`` view of the current version (shared
+        device buffers — do not mutate between ``apply`` calls)."""
+        weighted = bool(program.use_delta and program.weighted)
+        inv = self._inv_deg_cache.get(weighted)
+        if inv is None:
+            if weighted:
+                wsum = np.zeros(self.n_nodes, np.float64)
+                s, _, w = self.live_edges()
+                np.add.at(wsum, s, w.astype(np.float64))
+                inv = jnp.asarray(1.0 / np.maximum(wsum, 1e-30), jnp.float32)
+            else:
+                inv = 1.0 / jnp.maximum(
+                    self.csr.out_degree.astype(jnp.float32), 1.0
+                )
+            self._inv_deg_cache[weighted] = inv
+        return Runtime(
+            csr=self.csr, parts=self.parts, zc_req=self.zc_req,
+            inv_deg=inv, n_hub_partitions=0,
+        )
+
+
+def random_batch(
+    dcsr: DeltaCSR,
+    rng: np.random.Generator,
+    n_insert: int = 0,
+    n_delete: int = 0,
+    n_reweight: int = 0,
+    max_weight: float = 64.0,
+) -> EdgeBatch:
+    """Sample a plausible batch against the current edge set: deletions and
+    reweights pick live edges, insertions pick uniform endpoints."""
+    ls, ld, _ = dcsr.live_edges()
+    ops, src, dst, w = [], [], [], []
+    if n_delete or n_reweight:
+        k = min(n_delete + n_reweight, len(ls))
+        pick = rng.choice(len(ls), size=k, replace=False) if k else []
+        for j, e in enumerate(pick):
+            is_del = j < min(n_delete, k)
+            ops.append(OP_DELETE if is_del else OP_REWEIGHT)
+            src.append(int(ls[e]))
+            dst.append(int(ld[e]))
+            w.append(float(rng.integers(1, max_weight)))
+    for _ in range(n_insert):
+        ops.append(OP_INSERT)
+        src.append(int(rng.integers(0, dcsr.n_nodes)))
+        dst.append(int(rng.integers(0, dcsr.n_nodes)))
+        w.append(float(rng.integers(1, max_weight)))
+    return EdgeBatch(np.array(ops), np.array(src), np.array(dst),
+                     np.array(w, np.float32))

@@ -1,0 +1,234 @@
+"""Batched graph-query serving over a live ``DeltaCSR``.
+
+``GraphService`` multiplexes concurrent vertex queries (SSSP / BFS / CC /
+Δ-PR) over one graph container:
+
+* **source-lane batching** — up to ``max_lanes`` pending single-source
+  queries stack into a (Q, n) state and run through ``hytm_iteration``
+  under ``jax.vmap``: each lane carries its own frontier, so the cost
+  model, engine selection, and priority schedule are evaluated *per
+  lane*, making every lane's dataflow identical to its standalone run
+  (bit-exact for MIN programs — converged lanes are no-ops while the
+  stragglers finish);
+* **result cache** — converged (values, Δ) keyed by
+  ``(graph_version, program, source)``.  A repeat query at the same
+  version is a pure cache hit: zero sweep iterations.  An update batch
+  invalidates direct hits (the version key moves on) but the stale entry
+  is retained as the *warm state* for incremental recomputation
+  (repro.stream.incremental) against the reports applied since;
+* **updates** — ``update(batch)`` applies an ``EdgeBatch`` through the
+  container (device buffers patched in place) and logs the report for
+  later warm-starts.
+
+Accumulative programs (``use_delta``) are global — their cache key uses
+``source=None`` whatever the caller passed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hytm import HyTMConfig, HyTMState, hytm_iteration, run_hytm
+from repro.graph.algorithms import VertexProgram
+from repro.graph.csr import CSRGraph
+from repro.stream.delta_csr import DeltaCSR, EdgeBatch, UpdateReport
+from repro.stream.incremental import run_incremental
+
+
+@partial(jax.jit, static_argnames=("program", "config", "nhp"))
+def _batched_iteration(state, csr, parts, zc_req, inv_deg, program, config, nhp):
+    """One HyTM iteration vmapped over the source-lane dimension."""
+    return jax.vmap(
+        lambda s: hytm_iteration(
+            s, csr, parts, zc_req, inv_deg, program, config, nhp
+        )
+    )(state)
+
+
+@dataclass
+class QueryResult:
+    source: int | None
+    values: np.ndarray
+    iterations: int        # sweep iterations this query paid for
+    cache_hit: bool
+    mode: str              # 'cache' | 'incremental' | 'batched'
+
+
+@dataclass
+class _CacheEntry:
+    version: int
+    values: np.ndarray
+    delta: np.ndarray
+
+
+@dataclass
+class ServiceStats:
+    n_queries: int = 0
+    n_cache_hits: int = 0
+    n_incremental: int = 0
+    n_full: int = 0
+    n_updates: int = 0
+    sweep_iterations: int = 0
+    update_edges: int = 0
+    extra: dict = field(default_factory=dict)
+
+
+class GraphService:
+    def __init__(
+        self,
+        graph: CSRGraph,
+        config: HyTMConfig | None = None,
+        max_lanes: int = 8,
+        incremental: bool = True,
+        **delta_kw,
+    ):
+        self.config = config if config is not None else HyTMConfig()
+        assert self.config.mesh_axis is None, "serving runs the single-device path"
+        self.dcsr = DeltaCSR(graph, self.config, **delta_kw)
+        self.max_lanes = max_lanes
+        self.incremental = incremental
+        # keyed by the (frozen, hashable) program itself, not its name:
+        # variants like dataclasses.replace(PAGERANK, tolerance=1e-8)
+        # must not collide with each other's converged results
+        self._cache: dict[tuple[VertexProgram, int | None], _CacheEntry] = {}
+        self._reports: list[UpdateReport] = []
+        self.stats = ServiceStats()
+
+    # ----------------------------------------------------------------- update
+    @property
+    def version(self) -> int:
+        return self.dcsr.version
+
+    def update(self, batch: EdgeBatch) -> UpdateReport:
+        """Apply an edge-update batch.  All cached results become stale for
+        direct hits (version bump) and turn into warm states."""
+        rep = self.dcsr.apply(batch)
+        self._reports.append(rep)
+        self._prune_reports()
+        self.stats.n_updates += 1
+        self.stats.update_edges += len(batch)
+        return rep
+
+    def _prune_reports(self) -> None:
+        """Drop reports no warm state can need: every cached entry only
+        ever replays reports *newer* than its own version, so anything at
+        or below the oldest cached version (or everything, with no cache
+        or incremental disabled) is dead weight."""
+        if not self.incremental or not self._cache:
+            self._reports.clear()
+            return
+        floor = min(e.version for e in self._cache.values())
+        self._reports = [r for r in self._reports if r.version > floor]
+
+    def _reports_since(self, version: int) -> list[UpdateReport]:
+        return [r for r in self._reports if r.version > version]
+
+    # ------------------------------------------------------------------ query
+    def query(
+        self, program: VertexProgram, sources: Sequence[int | None] | int | None
+    ) -> list[QueryResult]:
+        """Answer a batch of queries; one ``QueryResult`` per requested
+        source, in order.  Duplicate sources share one computation."""
+        if sources is None or isinstance(sources, int):
+            sources = [sources]
+        keyed = [
+            (None if program.use_delta else s) for s in sources
+        ]
+        results: dict[int | None, QueryResult] = {}
+        fresh: list[int | None] = []
+        for s in dict.fromkeys(keyed):  # dedupe, keep order
+            entry = self._cache.get((program, s))
+            if entry is not None and entry.version == self.version:
+                results[s] = QueryResult(
+                    source=s, values=entry.values, iterations=0,
+                    cache_hit=True, mode="cache",
+                )
+                self.stats.n_cache_hits += 1
+            elif entry is not None and self.incremental:
+                results[s] = self._query_incremental(program, s, entry)
+            else:
+                fresh.append(s)
+        if fresh:
+            results.update(self._query_fresh(program, fresh))
+        self.stats.n_queries += len(sources)
+        return [results[k] for k in keyed]
+
+    def _store(self, program, s, values, delta) -> None:
+        self._cache[(program, s)] = _CacheEntry(
+            version=self.version,
+            values=np.asarray(values),
+            delta=np.asarray(delta),
+        )
+        self._prune_reports()  # refreshed entries may raise the floor
+
+    def _query_incremental(self, program, s, entry: _CacheEntry) -> QueryResult:
+        res = run_incremental(
+            self.dcsr, program, self._reports_since(entry.version),
+            entry.values, entry.delta, source=s, config=self.config,
+        )
+        self._store(program, s, res.values, res.delta)
+        self.stats.n_incremental += 1
+        self.stats.sweep_iterations += res.iterations
+        return QueryResult(
+            source=s, values=res.values, iterations=res.iterations,
+            cache_hit=False, mode="incremental",
+        )
+
+    def _query_fresh(self, program, sources) -> dict:
+        out: dict[int | None, QueryResult] = {}
+        if program.use_delta:
+            # accumulative programs are global: a single full run
+            for s in sources:
+                res = run_hytm(
+                    None, program, source=s, config=self.config,
+                    runtime=self.dcsr.runtime_for(program),
+                )
+                self._store(program, s, res.values, res.delta)
+                self.stats.n_full += 1
+                self.stats.sweep_iterations += res.iterations
+                out[s] = QueryResult(
+                    source=s, values=res.values, iterations=res.iterations,
+                    cache_hit=False, mode="batched",
+                )
+            return out
+        for i in range(0, len(sources), self.max_lanes):
+            chunk = sources[i:i + self.max_lanes]
+            values, deltas, iters = self._run_lanes(program, chunk)
+            for j, s in enumerate(chunk):
+                self._store(program, s, values[j], deltas[j])
+                out[s] = QueryResult(
+                    source=s, values=values[j], iterations=iters,
+                    cache_hit=False, mode="batched",
+                )
+            self.stats.n_full += len(chunk)
+            self.stats.sweep_iterations += iters
+        return out
+
+    def _run_lanes(
+        self, program: VertexProgram, sources: Sequence[int]
+    ) -> tuple[np.ndarray, np.ndarray, int]:
+        """One multiplexed sweep: stack Q per-source init states along a
+        lane dimension and iterate until every lane's frontier drains."""
+        rt = self.dcsr.runtime_for(program)
+        inits = [program.init_state(self.dcsr.n_nodes, s) for s in sources]
+        state = HyTMState(
+            values=jnp.stack([v for v, _, _ in inits]),
+            delta=jnp.stack([d for _, d, _ in inits]),
+            frontier=jnp.stack([f for _, _, f in inits]),
+        )
+        iters = 0
+        for _ in range(self.config.max_iters):
+            state, info = _batched_iteration(
+                state, rt.csr, rt.parts, rt.zc_req, rt.inv_deg,
+                program, self.config, rt.n_hub_partitions,
+            )
+            iters += 1
+            if int(np.asarray(info["next_active"]).sum()) == 0:
+                break
+        return np.asarray(state.values), np.asarray(state.delta), iters

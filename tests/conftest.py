@@ -29,6 +29,7 @@ except ImportError:
             "test_cost_model.py",
             "test_engines.py",
             "test_graph.py",
+            "test_stream.py",
         ]
 
 
@@ -43,6 +44,6 @@ def pytest_report_header(config):
         return (
             "hypothesis: not installed and fallback unavailable — "
             "skipping property-based test modules "
-            "(test_cost_model, test_engines, test_graph)"
+            "(test_cost_model, test_engines, test_graph, test_stream)"
         )
     return None

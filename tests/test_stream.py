@@ -1,0 +1,176 @@
+"""repro.stream — container semantics + the incremental equivalence
+contract: warm-start recomputation after random insert/delete batches
+matches from-scratch ``run_hytm`` on the post-update graph (bit-exact
+for MIN programs, tolerance-bounded for SUM), across ≥3 sequential
+update batches."""
+
+import dataclasses
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.hytm import HyTMConfig, run_hytm
+from repro.graph.algorithms import ALGORITHMS, PAGERANK, SSSP
+from repro.graph.generators import rmat_graph
+from repro.stream import (
+    DeltaCSR,
+    EdgeBatch,
+    random_batch,
+    run_incremental,
+)
+
+CFG = HyTMConfig(n_partitions=6)
+PR = dataclasses.replace(PAGERANK, tolerance=1e-7)
+
+
+# --------------------------------------------------------------------------
+# DeltaCSR container semantics
+# --------------------------------------------------------------------------
+
+def _edge_multiset(g_or_dcsr):
+    if isinstance(g_or_dcsr, DeltaCSR):
+        s, d, w = g_or_dcsr.live_edges()
+    else:
+        s, d, w = (
+            g_or_dcsr.edge_sources(),
+            g_or_dcsr.indices,
+            g_or_dcsr.weights,
+        )
+    return sorted(zip(s.tolist(), d.tolist(), w.tolist()))
+
+
+def test_delta_csr_patch_and_versioning():
+    g = rmat_graph(200, 1600, seed=4)
+    dc = DeltaCSR(g, CFG)
+    assert dc.version == 0 and dc.layout_version == 0
+    assert _edge_multiset(dc) == _edge_multiset(g)
+
+    ref = _edge_multiset(g)
+    # insert two edges, delete one known edge, reweight another — pick
+    # (src, dst) pairs without parallel duplicates so the reference
+    # multiset model is unambiguous about which edge the op matched
+    from collections import Counter
+    pair_counts = Counter((s, d) for s, d, _ in ref)
+    uniq = [t for t in ref if pair_counts[(t[0], t[1])] == 1]
+    s0, d0, w0 = uniq[0]
+    s1, d1, _ = uniq[1]
+    batch = EdgeBatch(
+        op=np.array([0, 0, 1, 2]),
+        src=np.array([5, 9, s0, s1]),
+        dst=np.array([6, 2, d0, d1]),
+        weight=np.array([3.0, 4.0, 0.0, 9.5], np.float32),
+    )
+    rep = dc.apply(batch)
+    assert dc.version == 1 and not rep.merged and dc.layout_version == 0
+    assert set(rep.dirty_partitions) <= set(range(dc.n_partitions))
+    ref.remove((s0, d0, w0))
+    old = next(t for t in ref if t[0] == s1 and t[1] == d1)
+    ref.remove(old)
+    ref += [(5, 6, 3.0), (9, 2, 4.0), (s1, d1, 9.5)]
+    assert _edge_multiset(dc) == sorted(ref)
+    # device mirror agrees with the host log
+    assert _edge_multiset(dc.to_host_graph()) == sorted(ref)
+    np.testing.assert_array_equal(
+        np.asarray(dc.parts.part_edges), dc.counts
+    )
+    # degrees track the live multiset
+    assert int(np.asarray(dc.csr.out_degree)[5]) == sum(
+        1 for t in ref if t[0] == 5
+    )
+
+    # deleting a non-existent edge is a no-op
+    rep2 = dc.apply(EdgeBatch.deletes([s0], [d0]))
+    assert dc.version == 2 and len(rep2.del_src) == 0
+    assert _edge_multiset(dc) == sorted(ref)
+
+
+def test_delta_csr_overflow_merges():
+    g = rmat_graph(100, 800, seed=5)
+    dc = DeltaCSR(g, HyTMConfig(n_partitions=2), slack=0.0, min_slack=1)
+    # flood one source vertex until its partition block overflows
+    k = dc.block_size + 8
+    batch = EdgeBatch.inserts(
+        np.zeros(k, np.int64), np.arange(k) % 100, np.ones(k, np.float32)
+    )
+    rep = dc.apply(batch)
+    assert rep.merged and dc.layout_version == 1
+    assert dc.n_edges == 800 + k
+    assert len(rep.dirty_partitions) == dc.n_partitions
+    # converges correctly on the rebuilt layout
+    res = run_hytm(None, SSSP, source=0, config=CFG,
+                   runtime=dc.runtime_for(SSSP))
+    fs = run_hytm(dc.to_host_graph(), SSSP, source=0, config=CFG)
+    np.testing.assert_array_equal(res.values, fs.values)
+
+
+# --------------------------------------------------------------------------
+# Incremental equivalence (property)
+# --------------------------------------------------------------------------
+
+def _sequential_batches(dc, program, source, seed, n_batches=3, scale=10):
+    """Apply ``n_batches`` random batches; after each, incremental must
+    match from-scratch on the post-update graph."""
+    rng = np.random.default_rng(seed)
+    warm = run_hytm(None, program, source=source, config=CFG,
+                    runtime=dc.runtime_for(program))
+    for _ in range(n_batches):
+        rep = dc.apply(random_batch(
+            dc, rng,
+            n_insert=int(rng.integers(1, scale)),
+            n_delete=int(rng.integers(1, scale)),
+            n_reweight=int(rng.integers(0, scale // 2 + 1)),
+        ))
+        inc = run_incremental(dc, program, [rep], warm.values, warm.delta,
+                              source=source, config=CFG)
+        fs = run_hytm(dc.to_host_graph(), program, source=source, config=CFG)
+        if program.combine == 0:
+            np.testing.assert_array_equal(inc.values, fs.values)
+        else:
+            np.testing.assert_allclose(
+                inc.values + inc.delta, fs.values + fs.delta, atol=1e-3
+            )
+        warm = inc
+
+
+@settings(max_examples=3, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    prog=st.sampled_from(["sssp", "bfs"]),
+)
+def test_incremental_matches_scratch_min(seed, prog):
+    g = rmat_graph(300, 2400, seed=seed % 3)
+    dc = DeltaCSR(g, CFG)
+    _sequential_batches(dc, ALGORITHMS[prog], 0, seed)
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_incremental_matches_scratch_sum(seed):
+    g = rmat_graph(300, 2400, seed=seed % 3)
+    dc = DeltaCSR(g, CFG)
+    _sequential_batches(dc, PR, None, seed)
+
+
+# --------------------------------------------------------------------------
+# Regression: small batches must win
+# --------------------------------------------------------------------------
+
+def test_incremental_fewer_iterations_on_small_batches():
+    """On update batches of <=1% of the edges, the warm-started run must
+    take strictly fewer sweep iterations than from-scratch."""
+    g = rmat_graph(800, 8000, seed=9)
+    dc = DeltaCSR(g, HyTMConfig(n_partitions=8))
+    cfg = dc.config
+    rng = np.random.default_rng(9)
+    warm = run_hytm(None, SSSP, source=0, config=cfg,
+                    runtime=dc.runtime_for(SSSP))
+    for _ in range(3):
+        rep = dc.apply(random_batch(dc, rng, n_insert=40, n_delete=40))
+        assert len(rep.ins_src) + len(rep.del_src) <= 0.01 * 2 * g.n_edges
+        inc = run_incremental(dc, SSSP, [rep], warm.values, warm.delta,
+                              source=0, config=cfg)
+        fs = run_hytm(dc.to_host_graph(), SSSP, source=0, config=cfg)
+        np.testing.assert_array_equal(inc.values, fs.values)
+        assert inc.iterations < fs.iterations, (inc.iterations, fs.iterations)
+        warm = inc

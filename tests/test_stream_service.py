@@ -1,0 +1,126 @@
+"""GraphService acceptance contract: lane-batched queries equal
+independent single-source runs, cached repeats cost zero sweep
+iterations, and update batches invalidate the cache into warm
+incremental recomputes."""
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.hytm import HyTMConfig, run_hytm
+from repro.graph.algorithms import BFS, PAGERANK, SSSP
+from repro.graph.generators import rmat_graph
+from repro.stream import EdgeBatch, GraphService, random_batch
+
+CFG = HyTMConfig(n_partitions=8)
+
+
+def _service(seed=13, n=400, m=3200, lanes=3):
+    g = rmat_graph(n, m, seed=seed)
+    return g, GraphService(g, CFG, max_lanes=lanes)
+
+
+def test_batched_queries_match_independent_runs():
+    """Q multiplexed sources == Q standalone runs, bit-exact — including
+    a source count that does not divide the lane width."""
+    g, svc = _service()
+    sources = [0, 11, 42, 123, 250]  # 5 sources over 3 lanes -> 2 chunks
+    res = svc.query(SSSP, sources)
+    assert [r.source for r in res] == sources
+    for s, r in zip(sources, res):
+        solo = run_hytm(g, SSSP, source=s, config=CFG)
+        np.testing.assert_array_equal(r.values, solo.values)
+        assert r.mode == "batched" and not r.cache_hit
+
+
+def test_cached_repeat_is_zero_iterations():
+    g, svc = _service()
+    first = svc.query(BFS, [0, 7])
+    assert all(r.iterations > 0 for r in first)
+    again = svc.query(BFS, [7, 0])
+    for r in again:
+        assert r.cache_hit and r.iterations == 0 and r.mode == "cache"
+    for a, b in zip(first, reversed(again)):
+        np.testing.assert_array_equal(a.values, b.values)
+    assert svc.stats.n_cache_hits == 2
+
+
+def test_duplicate_sources_share_one_computation():
+    _, svc = _service()
+    res = svc.query(SSSP, [5, 5, 5])
+    np.testing.assert_array_equal(res[0].values, res[2].values)
+    assert svc.stats.n_full == 1
+
+
+def test_update_invalidates_and_incremental_matches():
+    g, svc = _service()
+    sources = [0, 33]
+    svc.query(SSSP, sources)
+    rng = np.random.default_rng(3)
+    rep = svc.update(random_batch(svc.dcsr, rng, n_insert=10, n_delete=10))
+    assert svc.version == 1 and rep.version == 1
+
+    post = svc.query(SSSP, sources)
+    g2 = svc.dcsr.to_host_graph()
+    for s, r in zip(sources, post):
+        assert r.mode == "incremental" and not r.cache_hit
+        fs = run_hytm(g2, SSSP, source=s, config=CFG)
+        np.testing.assert_array_equal(r.values, fs.values)
+
+    # and the refreshed results are cached at the new version
+    again = svc.query(SSSP, sources)
+    assert all(r.cache_hit for r in again)
+
+
+def test_accumulative_program_is_global_and_incremental():
+    pr = dataclasses.replace(PAGERANK, tolerance=1e-7)
+    g, svc = _service()
+    r1 = svc.query(pr, None)[0]
+    # any requested source keys to the same global entry
+    r2 = svc.query(pr, [17])[0]
+    assert r2.cache_hit and r2.iterations == 0
+    np.testing.assert_array_equal(r1.values, r2.values)
+
+    rng = np.random.default_rng(5)
+    svc.update(random_batch(svc.dcsr, rng, n_insert=6, n_delete=6))
+    r3 = svc.query(pr, None)[0]
+    assert r3.mode == "incremental"
+    fs = run_hytm(svc.dcsr.to_host_graph(), pr, source=None, config=CFG)
+    assert np.max(np.abs(r3.values - fs.values)) < 1e-3
+    assert r3.iterations < fs.iterations
+
+
+def test_program_variants_do_not_share_cache_entries():
+    """Two programs differing only in parameters (e.g. tolerance) must
+    not serve each other's converged results as cache hits."""
+    _, svc = _service()
+    loose = dataclasses.replace(PAGERANK, tolerance=1e-3)
+    tight = dataclasses.replace(PAGERANK, tolerance=1e-7)
+    r_loose = svc.query(loose, None)[0]
+    r_tight = svc.query(tight, None)[0]
+    assert not r_tight.cache_hit and r_tight.iterations > r_loose.iterations
+    # each variant still hits its own entry
+    assert svc.query(loose, None)[0].cache_hit
+    assert svc.query(tight, None)[0].cache_hit
+
+
+def test_reports_are_pruned_once_warm_states_catch_up():
+    _, svc = _service()
+    rng = np.random.default_rng(7)
+    svc.query(SSSP, [0])
+    for _ in range(4):
+        svc.update(random_batch(svc.dcsr, rng, n_insert=4, n_delete=4))
+    assert len(svc._reports) == 4
+    svc.query(SSSP, [0])  # incremental refresh raises the floor to v4
+    assert len(svc._reports) == 0
+
+
+def test_incremental_disabled_falls_back_to_full():
+    g = rmat_graph(300, 2400, seed=2)
+    svc = GraphService(g, CFG, max_lanes=2, incremental=False)
+    svc.query(SSSP, [0])
+    svc.update(EdgeBatch.inserts([0], [5], [2.0]))
+    r = svc.query(SSSP, [0])[0]
+    assert r.mode == "batched"
+    fs = run_hytm(svc.dcsr.to_host_graph(), SSSP, source=0, config=CFG)
+    np.testing.assert_array_equal(r.values, fs.values)
