@@ -1,0 +1,43 @@
+"""Autotune benchmark: regret of static vs calibrated engine selection.
+
+Calibrates the PCIe profile against a TPU-modeled ground truth (the
+mis-specified scenario the acceptance contract pins) and reports
+
+  * the total regret of static selection vs the measured-best oracle,
+  * the total regret after calibration (and the improvement ratio),
+  * the wall cost of one full calibration (probe grid -> fit -> tune),
+
+so ``BENCH_*.json`` trajectories can track both the selection-quality
+gain and the calibration overhead across revisions.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.autotune import calibrate, default_grid, model_probe
+from repro.core.constants import PCIE3, TPU_V5E_HBM
+
+
+def run(fast: bool = False):
+    # fast drops edge levels, not ratio resolution — the regret signal
+    # lives at the selection boundaries the ratio sweep crosses
+    points = default_grid(
+        edge_levels=(1.0e6, 1.7e7) if fast else (1.0e6, 4.3e6, 1.7e7, 6.7e7),
+    )
+    obs = model_probe(points, TPU_V5E_HBM)
+
+    rep, us = timed(calibrate, points, obs, PCIE3, repeats=1 if fast else 3)
+    emit("autotune/calibrate_wall", us,
+         f"points={rep.n_points};obs={rep.n_observations}")
+    emit("autotune/static_regret", 0.0, f"{rep.static_regret:.6e}s")
+    emit("autotune/calibrated_regret", 0.0, f"{rep.calibrated_regret:.6e}s")
+    ratio = rep.calibrated_regret / max(rep.static_regret, 1e-30)
+    emit("autotune/regret_ratio", 0.0, f"{ratio:.4f}")
+    emit("autotune/fitted", 0.0,
+         f"bw={rep.profile.bandwidth:.3e};gamma={rep.profile.gamma:.3f};"
+         f"alpha={rep.profile.alpha:.2f};beta={rep.profile.beta:.2f}")
+    return rep
+
+
+if __name__ == "__main__":
+    run()

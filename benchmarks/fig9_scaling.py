@@ -27,8 +27,10 @@ LINK = PCIE3.with_(mr=4.0)  # fine transaction groups: avoids ties at CPU scale
 SYSTEMS = {"hytm": None, "exptm-f": FILTER, "exptm-c": COMPACT, "imptm-zc": ZEROCOPY}
 
 
-def run():
+def run(fast: bool = False):
     sizes = [(2_500, 40_000), (5_000, 160_000), (20_000, 640_000), (40_000, 2_560_000)]
+    if fast:
+        sizes = sizes[:2]  # 4x edge range instead of 64x
     growth = {}
     for sname, engine in SYSTEMS.items():
         modeled = []
@@ -40,7 +42,8 @@ def run():
             emit(f"fig9/{sname}/edges_{m}", wall_us,
                  f"modeled_ms={res.modeled_seconds*1e3:.3f}")
         growth[sname] = modeled[-1] / max(modeled[0], 1e-12)
-        emit(f"fig9/{sname}/growth_64x", 0.0, f"{growth[sname]:.1f}x")
+        span = len(sizes) - 1
+        emit(f"fig9/{sname}/growth_{4 ** span}x", 0.0, f"{growth[sname]:.1f}x")
     return growth
 
 
@@ -77,12 +80,15 @@ _DEVICE_SWEEP_SCRIPT = """
 
 
 def run_devices(device_counts=(1, 2, 4, 8), n_nodes=5_000, n_edges=160_000,
-                n_partitions=32):
+                n_partitions=32, fast: bool = False):
     """Scale-out sweep: one subprocess per forced-host device count, the
     sharded sweep on >1 device (the 1-device row is the single-device
     reference path).  Emits wall time + the modeled transfer metrics,
     which must be device-count-invariant (the model counts bytes, not
     devices) — a cheap end-to-end consistency check on the sharding."""
+    if fast:
+        device_counts = tuple(d for d in device_counts if d <= 2) or (1, 2)
+        n_nodes, n_edges = min(n_nodes, 2_000), min(n_edges, 40_000)
     src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
     script = textwrap.dedent(
         _DEVICE_SWEEP_SCRIPT.format(

@@ -18,38 +18,41 @@ from repro.kernels.segment_spmm.ops import segment_spmm
 RNG = np.random.default_rng(0)
 
 
-def run():
+def run(fast: bool = False):
+    """``fast``: single timed repeat per kernel (interpret mode dominates
+    the cost; the shapes are already small)."""
+    repeats = 1 if fast else 3
     msg = jnp.asarray(RNG.standard_normal((4096, 128)), jnp.float32)
     seg = jnp.asarray(RNG.integers(0, 512, 4096), jnp.int32)
     val = jnp.ones(4096, bool)
-    _, us = timed(lambda: jax.block_until_ready(segment_spmm(msg, seg, 512, val)))
+    _, us = timed(lambda: jax.block_until_ready(segment_spmm(msg, seg, 512, val)), repeats=repeats)
     emit("kernels/segment_spmm_4096x128", us, "interpret")
 
     vals = jnp.asarray(RNG.standard_normal((4096, 3)), jnp.float32)
     mask = jnp.asarray(RNG.random(4096) < 0.3)
-    _, us = timed(lambda: jax.block_until_ready(frontier_compact(vals, mask)[0]))
+    _, us = timed(lambda: jax.block_until_ready(frontier_compact(vals, mask)[0]), repeats=repeats)
     emit("kernels/frontier_compact_4096x3", us, "interpret")
 
     edges = jnp.asarray(RNG.standard_normal((8192, 2)), jnp.float32)
     starts = jnp.asarray(RNG.integers(0, 8000, 64), jnp.int32)
     degs = jnp.asarray(RNG.integers(1, 128, 64), jnp.int32)
-    _, us = timed(lambda: jax.block_until_ready(hyb_gather(edges, starts, degs)))
+    _, us = timed(lambda: jax.block_until_ready(hyb_gather(edges, starts, degs)), repeats=repeats)
     emit("kernels/hyb_gather_64v", us, "interpret")
 
     q = jnp.asarray(RNG.standard_normal((4, 512, 64)), jnp.float32)
-    _, us = timed(lambda: jax.block_until_ready(flash_attention(q, q, q, window=128)))
+    _, us = timed(lambda: jax.block_until_ready(flash_attention(q, q, q, window=128)), repeats=repeats)
     emit("kernels/flash_attention_512", us, "interpret")
 
     t = jnp.asarray(RNG.standard_normal((1000, 128)), jnp.float32)
     idx = jnp.asarray(RNG.integers(0, 1000, (64, 4)), jnp.int32)
-    _, us = timed(lambda: jax.block_until_ready(embedding_bag(t, idx)))
+    _, us = timed(lambda: jax.block_until_ready(embedding_bag(t, idx)), repeats=repeats)
     emit("kernels/embedding_bag_64x4", us, "interpret")
 
     counts = jnp.asarray(RNG.integers(0, 128, 8), jnp.int32)
     st = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(counts)[:-1]])
     x = jnp.asarray(RNG.standard_normal((int(counts.sum()) + 8, 64)), jnp.float32)
     w = jnp.asarray(RNG.standard_normal((8, 64, 128)), jnp.float32)
-    _, us = timed(lambda: jax.block_until_ready(grouped_matmul(x, w, st, counts)))
+    _, us = timed(lambda: jax.block_until_ready(grouped_matmul(x, w, st, counts)), repeats=repeats)
     emit("kernels/grouped_matmul_8e", us, "interpret")
 
 

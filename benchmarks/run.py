@@ -1,16 +1,23 @@
 """Benchmark harness entry point: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit)."""
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit);
+``--json <path>`` additionally writes the rows machine-readably so perf
+trajectories (``BENCH_*.json``) can be recorded across revisions."""
 
 import argparse
+import json
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="run a single benchmark module")
-    ap.add_argument("--fast", action="store_true", help="smaller graphs")
+    ap.add_argument("--fast", action="store_true", help="smaller graphs / fewer repeats")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the emitted rows as JSON to PATH")
     args = ap.parse_args()
 
     from benchmarks import (
+        autotune_bench,
+        common,
         fig3_analysis,
         fig7_execution_path,
         fig8_gains,
@@ -22,6 +29,8 @@ def main() -> None:
         table6_transfer,
     )
 
+    # --fast applies to every entry: the table/fig3/7/8 family shrinks its
+    # graphs via kw; the rest take an explicit fast flag.
     kw = dict(n_nodes=5000, n_edges=80_000, n_partitions=32) if args.fast else {}
     mods = {
         "table5": lambda: table5_runtime.run(**kw),
@@ -29,17 +38,32 @@ def main() -> None:
         "fig3": lambda: fig3_analysis.run(**kw),
         "fig7": lambda: fig7_execution_path.run(**kw),
         "fig8": lambda: fig8_gains.run(**kw),
-        "fig9": lambda: fig9_scaling.run(),
-        "fig9-devices": lambda: fig9_scaling.run_devices(),
-        "kernels": lambda: kernels.run(),
-        "roofline": lambda: roofline.run(),
+        "fig9": lambda: fig9_scaling.run(fast=args.fast),
+        "fig9-devices": lambda: fig9_scaling.run_devices(fast=args.fast),
+        "kernels": lambda: kernels.run(fast=args.fast),
+        "roofline": lambda: roofline.run(fast=args.fast),
         "stream": lambda: stream_bench.run(smoke=args.fast),
+        "autotune": lambda: autotune_bench.run(fast=args.fast),
     }
     print("name,us_per_call,derived")
     for name, fn in mods.items():
         if args.only and name != args.only:
             continue
         fn()
+
+    if args.json:
+        doc = {
+            "fast": args.fast,
+            "only": args.only,
+            "rows": [
+                {"name": n, "us_per_call": us, "derived": d}
+                for n, us, d in common.ROWS
+            ],
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {len(common.ROWS)} rows -> {args.json}")
 
 
 if __name__ == "__main__":

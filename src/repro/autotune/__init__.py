@@ -1,0 +1,59 @@
+"""repro.autotune — measured-cost calibration for the HyTM cost model.
+
+The Eq. 1-3 cost model ships with hand-set platform constants
+(``core.constants.PCIE3`` / ``TPU_V5E_HBM``); this subsystem validates
+and corrects them against what the engines actually cost on the machine
+running them:
+
+  probe     — timed micro-benchmarks of FILTER/COMPACT/ZEROCOPY over
+              synthetic partitions spanning the activity-ratio spectrum
+              (wall-clock, or a ground-truth model as hardware simulator)
+  calibrate — least-squares LinkModel fit + regret-minimizing
+              alpha/beta threshold tuning against the measured-best oracle
+  registry  — JSON profile persistence keyed by device kind
+  feedback  — OnlineCalibrator: EWMA per-engine corrections from
+              per-iteration measured sweep times (HyTMConfig.autotune)
+
+CLI: ``python -m repro.launch.calibrate`` (``--selfcheck`` for CI).
+"""
+
+from repro.autotune.calibrate import (
+    CalibrationReport,
+    calibrate,
+    fit_link,
+    selection_on_grid,
+    total_regret,
+    tune_thresholds,
+)
+from repro.autotune.feedback import OnlineCalibrator
+from repro.autotune.probe import (
+    Observation,
+    ProbePoint,
+    default_grid,
+    model_probe,
+    observation_matrix,
+    stats_for,
+    wall_probe,
+)
+from repro.autotune.registry import (
+    default_device_kind,
+    has_profile,
+    list_profiles,
+    load_profile,
+    profile_from_dict,
+    profile_path,
+    profile_to_dict,
+    registry_dir,
+    save_profile,
+)
+
+__all__ = [
+    "CalibrationReport", "calibrate", "fit_link", "selection_on_grid",
+    "total_regret", "tune_thresholds",
+    "OnlineCalibrator",
+    "Observation", "ProbePoint", "default_grid", "model_probe",
+    "observation_matrix", "stats_for", "wall_probe",
+    "default_device_kind", "has_profile", "list_profiles", "load_profile",
+    "profile_from_dict", "profile_path", "profile_to_dict", "registry_dir",
+    "save_profile",
+]

@@ -1,0 +1,110 @@
+"""Online feedback: per-engine cost corrections from measured sweep times.
+
+Offline calibration (calibrate.py) fixes the *profile*; this module
+closes the loop at run time.  Each HyTM iteration yields one noisy linear
+observation
+
+    measured_iteration_seconds ~= sum_e  c_e * modeled_e
+
+where ``modeled_e`` is the modeled time the plan attributed to engine
+``e`` this iteration.  :class:`OnlineCalibrator` maintains the
+exponentially-forgotten normal equations of that regression (EWMA
+recursive least squares) and solves for the correction vector ``c``.
+
+Because absolute wall time on the measuring host need not match the
+modeled link's units (CPU oracles vs modeled PCIe seconds), the solved
+vector is normalized to geometric-mean 1 over the engines that have
+actually been observed: only the *relative* corrections matter to
+Algorithm 1, which compares engines against each other.  Engines with no
+accumulated evidence stay at 1.0.
+
+The correction multiplies the per-engine selection costs
+(``cost_model.apply_correction``) inside ``hytm_iteration``, steers the
+sharded path's ICI-level exchange choice (``graph_shard.ici_level_cost``),
+and persists across queries in ``stream.service.GraphService`` so lane
+scheduling keeps learning over a service's lifetime.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+N_ENGINES = 3  # FILTER, COMPACT, ZEROCOPY
+
+
+class OnlineCalibrator:
+    """EWMA recursive least squares for per-engine correction factors."""
+
+    def __init__(self, decay: float = 0.25, ridge: float = 0.05,
+                 clip: tuple[float, float] = (0.05, 20.0)):
+        assert 0.0 < decay <= 1.0, decay
+        self.decay = decay
+        self.ridge = ridge
+        self.clip = clip
+        self._A = np.zeros((N_ENGINES, N_ENGINES))
+        self._b = np.zeros(N_ENGINES)
+        self.n_updates = 0
+
+    def update(self, modeled: np.ndarray, measured_seconds: float) -> None:
+        """Fold in one iteration: (3,) modeled per-engine seconds + the
+        measured wall time of that iteration.  Each sample is normalized
+        by its modeled magnitude so iterations contribute comparable
+        weight regardless of frontier size."""
+        t = np.asarray(modeled, dtype=float).reshape(-1)
+        if t.shape != (N_ENGINES,):
+            raise ValueError(f"expected ({N_ENGINES},) modeled times, got {t.shape}")
+        norm = float(np.linalg.norm(t))
+        if not np.isfinite(measured_seconds) or measured_seconds <= 0 or norm <= 0:
+            return
+        u = t / norm
+        f = 1.0 - self.decay
+        self._A = f * self._A + np.outer(u, u)
+        self._b = f * self._b + u * (measured_seconds / norm)
+        self.n_updates += 1
+
+    def observed(self) -> np.ndarray:
+        """(3,) bool — engines with accumulated evidence."""
+        return np.diag(self._A) > 1e-9
+
+    def correction(self) -> np.ndarray:
+        """(3,) multiplicative per-engine correction, geo-mean-1 over the
+        observed engines; all-ones until the first update."""
+        if self.n_updates == 0:
+            return np.ones(N_ENGINES)
+        # ridge prior toward the (scale-free) uncorrected model
+        A = self._A + self.ridge * np.eye(N_ENGINES)
+        b = self._b + self.ridge * np.ones(N_ENGINES)
+        try:
+            c = np.linalg.solve(A, b)
+        except np.linalg.LinAlgError:
+            return np.ones(N_ENGINES)
+        c = np.clip(c, 1e-6, None)
+        obs = self.observed()
+        if obs.any():
+            gm = float(np.exp(np.mean(np.log(c[obs]))))
+            if gm > 0:
+                c = c / gm
+        c = np.where(obs, np.clip(c, *self.clip), 1.0)
+        return c.astype(float)
+
+    def observe_iteration(self, sync_ref, per_engine_modeled, t_start: float,
+                          skip: bool = False):
+        """The per-iteration wiring shared by ``run_hytm``,
+        ``run_hytm_sharded`` and ``GraphService``: block on ``sync_ref``
+        (so the elapsed wall time covers the whole iteration), fold the
+        measurement against the (3,) modeled per-engine seconds — unless
+        ``skip``, for first iterations whose wall time is compile, not
+        sweep — and return the refreshed correction as a (3,) float32
+        jax array ready to feed the next iteration."""
+        import jax
+        import jax.numpy as jnp
+
+        jax.block_until_ready(sync_ref)
+        if not skip:
+            self.update(
+                np.asarray(per_engine_modeled, dtype=float),
+                time.monotonic() - t_start,
+            )
+        return jnp.asarray(self.correction(), jnp.float32)

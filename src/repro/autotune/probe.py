@@ -1,0 +1,259 @@
+"""Engine micro-benchmark probes (the "measure" half of calibration).
+
+A :class:`ProbePoint` is one synthetic partition described by the same
+activity statistics the cost model consumes (Eqs. 1-3): total edges
+``E``, active edges ``Ea``, active vertices ``|A|``, and the fraction of
+active vertices whose neighbour segment is misaligned.  The default grid
+spans the activity-ratio spectrum (the x-axis of the paper's Fig. 3
+"Prefer" analysis) crossed with the degree regimes that separate the
+three engines: few high-degree hubs (EMOGI's zero-copy regime), a
+mid-degree band, and a flat deg~1 frontier (compaction's regime).
+
+Two measurement backends produce ``(point, engine, seconds)``
+observations:
+
+* :func:`model_probe` — evaluates a *ground-truth* :class:`LinkModel` as
+  a hardware simulator.  Deterministic (optionally noised), arbitrarily
+  large ``E``; this is what CI and the ``--selfcheck`` acceptance run
+  use: calibrating profile X against ``model_probe(truth=Y)`` must
+  recover Y-shaped selection.
+* :func:`wall_probe` — materializes each point as a real edge block and
+  wall-times the three engine relaxations (``relax_with_engine``) on the
+  current backend.  This is the path a real deployment calibrates with;
+  points are capped to sizes that fit comfortably in memory.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.constants import LinkModel
+from repro.core.cost_model import (
+    COMPACT,
+    FILTER,
+    ZEROCOPY,
+    PartitionStats,
+    engine_costs,
+)
+
+ENGINES = (FILTER, COMPACT, ZEROCOPY)
+
+
+@dataclass(frozen=True)
+class ProbePoint:
+    """One synthetic partition, described by its activity statistics.
+
+    Active vertices share a uniform out-degree ``Ea / |A|`` so the
+    zero-copy request count (Eq. 3) is computable under *any* candidate
+    link model — the request granule ``m/d1`` differs per profile, so
+    requests are re-derived from the degree rather than stored.
+    """
+
+    total_edges: float      # E_i
+    active_edges: float     # Ea_i
+    active_vertices: float  # |A_i|
+    mis_frac: float = 0.5   # fraction of active vertices with a misaligned segment
+
+    @property
+    def ratio(self) -> float:
+        return self.active_edges / max(self.total_edges, 1.0)
+
+    @property
+    def degree(self) -> float:
+        return self.active_edges / max(self.active_vertices, 1.0)
+
+    def zc_requests(self, link: LinkModel) -> float:
+        """Eq. 3's REQ_i under ``link``: |A| * (ceil(deg*d1/m) + am)."""
+        per_vertex = math.ceil(self.degree * link.d1 / link.m) + self.mis_frac
+        return self.active_vertices * per_vertex
+
+
+def stats_for(points: list[ProbePoint], link: LinkModel) -> PartitionStats:
+    """Stack a probe grid into one (P,) :class:`PartitionStats` under
+    ``link`` (the request counts are link-dependent)."""
+    import jax.numpy as jnp
+
+    return PartitionStats(
+        active_edges=jnp.asarray([p.active_edges for p in points], jnp.float32),
+        active_vertices=jnp.asarray([p.active_vertices for p in points], jnp.float32),
+        zc_requests=jnp.asarray([p.zc_requests(link) for p in points], jnp.float32),
+        total_edges=jnp.asarray([p.total_edges for p in points], jnp.float32),
+    )
+
+
+# Degree regimes: |A| as a function of Ea.  Hub = few high-degree sources
+# (Table III / EMOGI's sweet spot), flat = deg~1 frontier (compaction's).
+_REGIMES = {
+    "hub": lambda ea: max(1.0, ea / 128.0),
+    "mid": lambda ea: max(1.0, ea / 8.0),
+    "flat": lambda ea: ea,
+}
+
+
+def default_grid(
+    edge_levels: tuple[float, ...] = (1.0e6, 4.3e6, 1.7e7, 6.7e7),
+    n_ratios: int = 9,
+    regimes: tuple[str, ...] = ("hub", "mid", "flat"),
+    mis_frac: float = 0.5,
+) -> list[ProbePoint]:
+    """Probe grid spanning the activity spectrum x degree regimes.
+
+    Ratio endpoints are deliberately non-round so grid points do not land
+    on exact cost ties (Algorithm 1 uses strict comparisons; a tie would
+    make "selection unchanged" checks flaky under infinitesimal fits).
+    """
+    ratios = np.geomspace(1.07e-3, 0.93, n_ratios)
+    points = []
+    for E in edge_levels:
+        for r in ratios:
+            ea = max(1.0, float(round(E * r)))
+            for name in regimes:
+                a = min(float(round(_REGIMES[name](ea))), ea)
+                points.append(ProbePoint(
+                    total_edges=float(E), active_edges=ea,
+                    active_vertices=a, mis_frac=mis_frac,
+                ))
+    return points
+
+
+@dataclass(frozen=True)
+class Observation:
+    point: ProbePoint
+    engine: int
+    seconds: float
+
+
+def model_probe(
+    points: list[ProbePoint],
+    truth: LinkModel,
+    noise: float = 0.0,
+    seed: int = 0,
+) -> list[Observation]:
+    """Simulate measurements by evaluating ``truth`` as the hardware.
+
+    Per point the three engines cost what the ground-truth model says
+    *execution* pays — ``tef`` / ``tec_full`` (the compaction pass is
+    physically paid whether or not selection models it) / ``tiz`` —
+    optionally perturbed by multiplicative gaussian noise.
+    """
+    costs = engine_costs(stats_for(points, truth), truth)
+    per_engine = {
+        FILTER: np.asarray(costs.tef, float),
+        COMPACT: np.asarray(costs.tec_full, float),
+        ZEROCOPY: np.asarray(costs.tiz, float),
+    }
+    rng = np.random.default_rng(seed)
+    obs = []
+    for eng in ENGINES:
+        t = per_engine[eng]
+        if noise > 0:
+            t = t * np.clip(1.0 + noise * rng.standard_normal(len(points)), 0.05, None)
+        for i, p in enumerate(points):
+            obs.append(Observation(point=p, engine=eng, seconds=float(t[i])))
+    return obs
+
+
+def _materialize(point: ProbePoint, max_edges: int, seed: int):
+    """Build a real edge block realizing (a capped version of) ``point``;
+    also returns the ProbePoint describing what was *actually* built."""
+    import jax.numpy as jnp
+
+    from repro.core.engines import EdgeBlock
+
+    scale = min(1.0, max_edges / max(point.total_edges, 1.0))
+    E = max(int(point.total_edges * scale), 4)
+    Ea = min(max(int(point.active_edges * scale), 1), E)
+    A = min(max(int(point.active_vertices * scale), 1), Ea)
+    deg = max(Ea // A, 1)
+    rng = np.random.default_rng(seed)
+    n = E  # enough vertices that inactive edges have distinct sources
+    src = np.empty(E, np.int32)
+    # active sources 0..A-1, `deg` consecutive edges each (CSR-contiguous)
+    n_act = min(A * deg, E)
+    src[:n_act] = np.repeat(np.arange(A, dtype=np.int32), deg)[:n_act]
+    src[n_act:] = rng.integers(A, n, size=E - n_act)
+    dst = rng.integers(0, n, size=E).astype(np.int32)
+    w = rng.random(E).astype(np.float32) + 0.5
+    frontier = np.zeros(n, bool)
+    frontier[:A] = True
+    active = frontier[src]
+    block = EdgeBlock(
+        src=jnp.asarray(src), dst=jnp.asarray(dst),
+        weight=jnp.asarray(w), active=jnp.asarray(active),
+    )
+    operand = jnp.asarray(rng.random(n).astype(np.float32))
+    realized = ProbePoint(
+        total_edges=float(E), active_edges=float(n_act),
+        active_vertices=float(A), mis_frac=point.mis_frac,
+    )
+    return block, operand, n, realized
+
+
+def wall_probe(
+    points: list[ProbePoint],
+    max_edges: int = 200_000,
+    repeats: int = 3,
+    seed: int = 0,
+) -> tuple[list[ProbePoint], list[Observation]]:
+    """Wall-time the three engines over materialized probe partitions.
+
+    Each requested point is scaled (preserving its activity ratio and
+    degree regime) to at most ``max_edges`` edges and the observations
+    describe the *materialized* grid with UNSCALED measured seconds —
+    rescaling capped points would also multiply the constant per-call
+    dispatch component and bias the ``fit_overhead`` intercept upward.
+    Returns ``(materialized_points, observations)``; calibrate against
+    the returned points, not the requested ones.  Compile time is
+    excluded (one warmup call per shape/engine).
+    """
+    import time as _time
+
+    import jax
+
+    from repro.core.engines import ENGINE_FNS
+    from repro.graph.algorithms import SSSP
+
+    # one jitted wrapper per engine (n static): points sharing a block
+    # shape reuse the compile instead of retracing per (point, engine)
+    fns = {
+        eng: jax.jit(
+            lambda b, o, n, f=ENGINE_FNS[eng]: f(b, o, n, SSSP),
+            static_argnums=2,
+        )
+        for eng in ENGINES
+    }
+    realized_points = []
+    obs = []
+    for i, p in enumerate(points):
+        block, operand, n, realized = _materialize(p, max_edges, seed + i)
+        realized_points.append(realized)
+        for eng in ENGINES:
+            fn = fns[eng]
+            jax.block_until_ready(fn(block, operand, n))  # warmup / compile
+            times = []
+            for _ in range(repeats):
+                t0 = _time.monotonic()
+                jax.block_until_ready(fn(block, operand, n))
+                times.append(_time.monotonic() - t0)
+            obs.append(Observation(
+                point=realized, engine=eng,
+                seconds=float(np.median(times)),
+            ))
+    return realized_points, obs
+
+
+def observation_matrix(
+    points: list[ProbePoint], observations: list[Observation]
+) -> np.ndarray:
+    """(N, 3) measured seconds, column index == engine id; NaN = missing."""
+    index = {id(p): i for i, p in enumerate(points)}
+    out = np.full((len(points), 3), np.nan)
+    for o in observations:
+        i = index.get(id(o.point))
+        if i is None:  # fall back to value identity (deserialized points)
+            i = points.index(o.point)
+        out[i, o.engine] = o.seconds
+    return out

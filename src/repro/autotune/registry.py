@@ -1,0 +1,133 @@
+"""Calibrated-profile persistence: one JSON file per device kind.
+
+Layout: ``<registry>/<device_kind>.json`` where ``<registry>`` is the
+``REPRO_AUTOTUNE_REGISTRY`` env var or ``~/.cache/repro/autotune``.  Each
+file carries the full :class:`LinkModel` field set plus free-form
+calibration metadata (regret numbers, probe mode, observation count), so
+a profile is self-describing:
+
+    {"schema": 1, "device_kind": "cpu",
+     "profile": {"name": "...", "bandwidth": ..., ...},
+     "meta": {"static_regret": ..., ...}}
+
+Loading round-trips through the :class:`LinkModel` constructor, so the
+``__post_init__`` validation rejects corrupt or hand-edited profiles with
+a clear error instead of silently mis-costing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+from pathlib import Path
+
+from repro.core.constants import LinkModel
+
+SCHEMA_VERSION = 1
+_ENV_VAR = "REPRO_AUTOTUNE_REGISTRY"
+
+
+def registry_dir(base: str | os.PathLike | None = None) -> Path:
+    if base is not None:
+        return Path(base)
+    env = os.environ.get(_ENV_VAR)
+    if env:
+        return Path(env)
+    return Path("~/.cache/repro/autotune").expanduser()
+
+
+def default_device_kind() -> str:
+    """Sanitized device kind of the first visible accelerator."""
+    import jax
+
+    dev = jax.devices()[0]
+    kind = getattr(dev, "device_kind", "") or dev.platform
+    return re.sub(r"[^a-z0-9_.-]+", "-", str(kind).strip().lower()).strip("-") or "unknown"
+
+
+def profile_path(device_kind: str | None = None,
+                 base: str | os.PathLike | None = None) -> Path:
+    kind = device_kind if device_kind is not None else default_device_kind()
+    # an explicit kind is a filename token, never a path: reject
+    # separators / dot-dirs so profiles cannot escape the registry
+    if not re.fullmatch(r"[A-Za-z0-9_.-]+", kind) or set(kind) == {"."}:
+        raise ValueError(
+            f"invalid device kind {kind!r}: expected a plain name "
+            f"(letters, digits, '_', '.', '-')")
+    return registry_dir(base) / f"{kind}.json"
+
+
+def profile_to_dict(link: LinkModel) -> dict:
+    return dataclasses.asdict(link)
+
+
+def profile_from_dict(d: dict) -> LinkModel:
+    fields = {f.name for f in dataclasses.fields(LinkModel)}
+    unknown = set(d) - fields
+    if unknown:
+        raise ValueError(f"unknown LinkModel fields in profile: {sorted(unknown)}")
+    # save_profile always writes the full field set; a truncated profile
+    # must fail loudly rather than silently inherit shipped defaults
+    missing = fields - set(d)
+    if missing:
+        raise ValueError(f"profile is missing LinkModel fields: {sorted(missing)}")
+    return LinkModel(**d)  # __post_init__ validates
+
+
+def save_profile(
+    link: LinkModel,
+    device_kind: str | None = None,
+    base: str | os.PathLike | None = None,
+    meta: dict | None = None,
+) -> Path:
+    path = profile_path(device_kind, base)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    doc = {
+        "schema": SCHEMA_VERSION,
+        "device_kind": device_kind if device_kind is not None else default_device_kind(),
+        "profile": profile_to_dict(link),
+        "meta": meta or {},
+    }
+    tmp = path.with_suffix(".json.tmp")
+    tmp.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    tmp.replace(path)
+    return path
+
+
+def load_profile(
+    device_kind: str | None = None,
+    base: str | os.PathLike | None = None,
+    with_meta: bool = False,
+) -> LinkModel | tuple[LinkModel, dict]:
+    path = profile_path(device_kind, base)
+    if not path.exists():
+        raise FileNotFoundError(
+            f"no calibrated profile for device kind "
+            f"{device_kind or default_device_kind()!r} at {path} — run "
+            f"`python -m repro.launch.calibrate` to create one"
+        )
+    doc = json.loads(path.read_text())
+    if doc.get("schema") != SCHEMA_VERSION:
+        raise ValueError(f"{path}: unsupported profile schema {doc.get('schema')!r}")
+    link = profile_from_dict(doc["profile"])
+    return (link, doc.get("meta", {})) if with_meta else link
+
+
+def has_profile(device_kind: str | None = None,
+                base: str | os.PathLike | None = None) -> bool:
+    return profile_path(device_kind, base).exists()
+
+
+def list_profiles(base: str | os.PathLike | None = None) -> dict[str, LinkModel]:
+    root = registry_dir(base)
+    out = {}
+    if root.is_dir():
+        for p in sorted(root.glob("*.json")):
+            try:
+                doc = json.loads(p.read_text())
+                out[p.stem] = profile_from_dict(doc["profile"])
+            except (ValueError, TypeError, KeyError, json.JSONDecodeError):
+                continue  # skip corrupt entries; load_profile reports them
+    return out

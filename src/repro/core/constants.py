@@ -20,6 +20,23 @@ Two link models ship:
 ``TPU_V5E_ICI`` models the inter-chip level for the distributed (two-level)
 HyTM extension (DESIGN.md §2): all-gather of whole value arrays == filter,
 compacted frontier exchange == compaction.
+
+Shipped vs calibrated profiles
+------------------------------
+The constants below are *shipped* profiles: paper-faithful hand-set
+values, never validated against the machine actually running the
+engines.  ``repro.autotune`` turns them into *calibrated* profiles: it
+probes the three engines over synthetic partitions, fits ``bandwidth`` /
+``gamma`` / ``compaction_bandwidth`` / ``launch_overhead_s`` by least
+squares, and tunes the ``alpha``/``beta`` selection thresholds by regret
+minimization against the measured-best engine (the paper itself tunes
+alpha/beta empirically per platform, §V-A).  Calibrated profiles live in
+a JSON registry keyed by device kind — ``$REPRO_AUTOTUNE_REGISTRY`` or
+``~/.cache/repro/autotune/<device_kind>.json`` — created by ``python -m
+repro.launch.calibrate`` and loaded via
+``repro.autotune.registry.load_profile``.  Hardware-topology constants
+(``m``, ``mr``, ``d1``, ``d2``) are never fitted; ``__post_init__``
+validates every profile, shipped or loaded.
 """
 
 from __future__ import annotations
@@ -44,6 +61,31 @@ class LinkModel:
     # the unmodeled CPU pass); on TPU the on-device pass IS modelable and
     # enters selection directly (DESIGN.md §2).
     selection_uses_full_compaction_cost: bool = False
+
+    def __post_init__(self) -> None:
+        for fname in ("d1", "d2", "m", "mr", "bandwidth"):
+            v = getattr(self, fname)
+            if not v > 0:
+                raise ValueError(
+                    f"LinkModel {self.name!r}: {fname} must be > 0, got {v}")
+        if float(self.m) % float(self.d1) != 0.0:
+            # zc_request_counts' alignment test uses the integer granule
+            # m // d1; a non-divisor would silently produce wrong request
+            # counts for every zero-copy partition.
+            raise ValueError(
+                f"LinkModel {self.name!r}: d1={self.d1} must divide "
+                f"m={self.m} (the Eq. 3 request-alignment granule is m/d1)")
+        for fname in ("alpha", "beta", "gamma"):
+            v = getattr(self, fname)
+            if not 0.0 < v <= 1.0:
+                raise ValueError(
+                    f"LinkModel {self.name!r}: {fname} must be in (0, 1], "
+                    f"got {v}")
+        for fname in ("launch_overhead_s", "compaction_bandwidth"):
+            v = getattr(self, fname)
+            if v < 0:
+                raise ValueError(
+                    f"LinkModel {self.name!r}: {fname} must be >= 0, got {v}")
 
     @property
     def rtt(self) -> float:

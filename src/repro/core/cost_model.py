@@ -124,12 +124,89 @@ def engine_costs(stats: PartitionStats, link: LinkModel) -> EngineCosts:
     return EngineCosts(tef=tef, tec=tec, tiz=tiz, tec_full=tec_full)
 
 
-def select_engines(stats: PartitionStats, costs: EngineCosts, link: LinkModel) -> jax.Array:
-    """Algorithm 1 lines 4-12 → (P,) engine ids (NONE for inactive)."""
-    pick_compact = (costs.tec < link.alpha * costs.tef) & (costs.tec < link.beta * costs.tiz)
-    pick_filter = costs.tef < costs.tiz
-    eng = jnp.where(pick_compact, COMPACT, jnp.where(pick_filter, FILTER, ZEROCOPY))
+def apply_correction(costs: EngineCosts, correction: jax.Array | None) -> EngineCosts:
+    """Scale per-engine costs by a (3,) multiplicative correction vector
+    (index == engine id) — the online-feedback hook
+    (repro.autotune.feedback).  ``None`` is the identity."""
+    if correction is None:
+        return costs
+    return EngineCosts(
+        tef=costs.tef * correction[FILTER],
+        tec=costs.tec * correction[COMPACT],
+        tiz=costs.tiz * correction[ZEROCOPY],
+        tec_full=costs.tec_full * correction[COMPACT],
+    )
+
+
+def algorithm1_engines(tef, tec, tiz, alpha, beta) -> jax.Array:
+    """Algorithm 1 lines 4-12 on raw per-engine selection costs.
+
+    The single definition of the threshold rule — ``select_engines``
+    (runtime, jitted) and ``repro.autotune``'s alpha/beta tuning both
+    call it, so tuned thresholds always optimize the rule the runtime
+    executes.  Accepts numpy or jax arrays; ``alpha``/``beta`` may be
+    scalars or arrays broadcastable against the costs (the tuner
+    evaluates its whole candidate grid in one call).
+    """
+    pick_compact = (tec < alpha * tef) & (tec < beta * tiz)
+    pick_filter = tef < tiz
+    return jnp.where(pick_compact, COMPACT, jnp.where(pick_filter, FILTER, ZEROCOPY))
+
+
+def select_engines(
+    stats: PartitionStats,
+    costs: EngineCosts,
+    link: LinkModel,
+    correction: jax.Array | None = None,
+) -> jax.Array:
+    """Algorithm 1 lines 4-12 → (P,) engine ids (NONE for inactive).
+
+    ``correction`` (optional (3,)) rescales the per-engine costs before
+    the threshold comparisons; transfer *accounting* stays uncorrected —
+    feedback steers decisions, the model keeps reporting its own units.
+    """
+    costs = apply_correction(costs, correction)
+    eng = algorithm1_engines(costs.tef, costs.tec, costs.tiz, link.alpha, link.beta)
     return jnp.where(stats.active_edges > 0, eng, NONE).astype(jnp.int32)
+
+
+def modeled_best_engines(
+    stats: PartitionStats,
+    costs: EngineCosts,
+    correction: jax.Array | None = None,
+) -> jax.Array:
+    """(P,) engine whose (corrected) *execution* cost is minimal — the
+    model's own oracle.  Selection vs this oracle defines the per-
+    iteration misprediction count: Algorithm 1's thresholds deliberately
+    bias away from pure argmin, and the online corrections move the
+    argmin itself, so the gap is the quantity autotuning drives down."""
+    costs = apply_correction(costs, correction)
+    stacked = jnp.stack([costs.tef, costs.tec_full, costs.tiz])  # row idx == engine id
+    best = jnp.argmin(stacked, axis=0).astype(jnp.int32)
+    return jnp.where(stats.active_edges > 0, best, NONE)
+
+
+def selection_diagnostics(
+    engines: jax.Array,        # (P,) chosen engine ids
+    transfer_time: jax.Array,  # (P,) modeled seconds under chosen engine
+    stats: PartitionStats,
+    costs: EngineCosts,
+    correction: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-iteration feedback diagnostics, shared by the single-device and
+    sharded iterations: (3,) modeled seconds attributed to each engine
+    (the online calibrator's regressors) and the count of processed
+    partitions where Algorithm 1 diverged from the (corrected)
+    modeled-best engine."""
+    per_engine_time = jnp.stack([
+        jnp.sum(jnp.where(engines == e, transfer_time, 0.0))
+        for e in (FILTER, COMPACT, ZEROCOPY)
+    ])
+    best = modeled_best_engines(stats, costs, correction)
+    mispredictions = jnp.sum(
+        ((engines != best) & (engines != NONE)).astype(jnp.int32)
+    )
+    return per_engine_time, mispredictions
 
 
 def modeled_transfer_bytes(stats: PartitionStats, engines: jax.Array, link: LinkModel) -> jax.Array:

@@ -39,6 +39,7 @@ from repro.core.cost_model import (
     NONE,
     ZEROCOPY,
     partition_stats,
+    selection_diagnostics,
     zc_request_counts,
 )
 from repro.core.engines import EdgeBlock, relax_with_engine
@@ -71,6 +72,14 @@ class HyTMConfig:
     # to charge the cross-device merge of the sharded sweep.  Only read on
     # the mesh_axis path; the single-device run reports zero ICI traffic.
     ici_link: LinkModel = TPU_V5E_ICI
+    # Online autotuning (repro.autotune.feedback): per-iteration measured
+    # sweep times feed an EWMA per-engine correction factor that rescales
+    # the Algorithm-1 selection costs (and the sharded path's ICI-level
+    # exchange choice).  Transfer *accounting* stays in model units; the
+    # engines are semantically interchangeable, so results are unchanged
+    # — only which engine pays for each partition moves.
+    autotune: bool = False
+    autotune_decay: float = 0.25  # EWMA forgetting factor of the calibrator
     # Name of a 1-D mesh axis to shard the partition edge blocks over
     # (repro.dist.graph_shard).  None = the single-device path below
     # (note: the sync-sweep SUM consumption fix in ``_sweep`` changed
@@ -230,6 +239,7 @@ def hytm_iteration(
     program: VertexProgram,
     config: HyTMConfig,
     n_hub_partitions: int,
+    correction: jax.Array | None = None,
 ) -> tuple[HyTMState, dict[str, Any]]:
     rt = Runtime(csr=csr, parts=parts, zc_req=zc_req, inv_deg=inv_deg,
                  n_hub_partitions=n_hub_partitions)
@@ -242,6 +252,7 @@ def hytm_iteration(
         plan: TaskPlan = generate_tasks(
             stats, config.link, combine_k=config.combine_k,
             enable_combination=config.enable_task_combination,
+            correction=correction,
         )
     else:
         plan = forced_engine_plan(
@@ -288,6 +299,10 @@ def hytm_iteration(
         next_frontier = jnp.abs(state2.delta) > program.tolerance
     new_state = HyTMState(values=state2.values, delta=state2.delta, frontier=next_frontier)
 
+    per_engine_time, mispredictions = selection_diagnostics(
+        plan.engines, plan.transfer_time, stats, plan.costs, correction,
+    )
+
     info = {
         "engines": plan.engines,
         "transfer_bytes": plan.transfer_bytes,
@@ -297,6 +312,8 @@ def hytm_iteration(
         "active_vertices": jnp.sum(frontier.astype(jnp.int32)),
         "active_edges": jnp.sum(stats.active_edges),
         "next_active": jnp.sum(next_frontier.astype(jnp.int32)),
+        "per_engine_time": per_engine_time,
+        "mispredictions": mispredictions,
     }
     return new_state, info
 
@@ -319,6 +336,11 @@ class HyTMResult:
     # single-device path.
     total_ici_bytes: float = 0.0
     modeled_ici_seconds: float = 0.0
+    # autotune diagnostics: partitions where Algorithm 1 diverged from the
+    # (corrected) modeled-best engine, summed over iterations, and the
+    # final per-engine correction vector (None without config.autotune).
+    total_mispredictions: int = 0
+    engine_corrections: np.ndarray | None = None
 
 
 def run_hytm(
@@ -330,6 +352,7 @@ def run_hytm(
     runtime: Runtime | None = None,
     mesh=None,
     initial_state: HyTMState | None = None,
+    calibrator=None,
 ) -> HyTMResult:
     """``runtime`` lets callers amortize preprocessing across runs; with
     ``config.mesh_axis`` set it must be a ``graph_shard.ShardedRuntime``
@@ -339,6 +362,11 @@ def run_hytm(
     (values, Δ, frontier) triple instead of ``program.init_state`` — the
     entry point of the incremental path (repro.stream.incremental).  With
     both ``runtime`` and ``initial_state`` given, ``g`` may be ``None``.
+
+    ``calibrator``: an external ``repro.autotune.OnlineCalibrator`` to
+    learn into (and start from) instead of a fresh per-run one — how
+    ``GraphService`` keeps one feedback loop across queries.  Only read
+    when ``config.autotune`` is set.
     """
     if config.mesh_axis is not None:
         assert initial_state is None, "sharded path has no warm-start yet"
@@ -347,7 +375,7 @@ def run_hytm(
 
         return run_hytm_sharded(
             g, program, source=source, config=config, n_hubs=n_hubs,
-            mesh=mesh, runtime=runtime,
+            mesh=mesh, runtime=runtime, calibrator=calibrator,
         )
     rt = runtime if runtime is not None else build_runtime(
         g, config, n_hubs=n_hubs,
@@ -359,18 +387,37 @@ def run_hytm(
     else:
         state = initial_state
 
+    calib = None
+    correction = None
+    if config.autotune:
+        from repro.autotune.feedback import OnlineCalibrator
+
+        calib = (calibrator if calibrator is not None
+                 else OnlineCalibrator(decay=config.autotune_decay))
+        # start from the calibrator's current knowledge (identity when
+        # fresh); always an array so the iteration traces once, not
+        # twice (None -> array would retrace on iteration 2)
+        correction = jnp.asarray(calib.correction(), jnp.float32)
+
     hist: dict[str, list] = {
         "engines": [], "transfer_bytes": [], "transfer_time": [],
         "active_vertices": [], "active_edges": [], "n_tasks": [],
+        "mispredictions": [],
     }
     t0 = time.monotonic()
     iters = 0
     for _ in range(config.max_iters):
+        t_iter = time.monotonic()
         state, info = hytm_iteration(
             state, rt.csr, rt.parts, rt.zc_req, rt.inv_deg,
-            program, config, rt.n_hub_partitions,
+            program, config, rt.n_hub_partitions, correction,
         )
         iters += 1
+        if calib is not None:
+            correction = calib.observe_iteration(
+                state.values, info["per_engine_time"], t_iter,
+                skip=iters == 1,  # iteration 1 measures compile, not sweep
+            )
         for k in hist:
             hist[k].append(np.asarray(info[k]))
         if int(info["next_active"]) == 0:
@@ -387,4 +434,8 @@ def run_hytm(
         modeled_seconds=float(np.sum(history["transfer_time"])),
         total_transfer_bytes=float(np.sum(history["transfer_bytes"])),
         history=history,
+        total_mispredictions=int(np.sum(history["mispredictions"])),
+        engine_corrections=(
+            calib.correction() if calib is not None else None
+        ),
     )

@@ -62,9 +62,13 @@ def generate_tasks(
     link: LinkModel,
     combine_k: int = 4,
     enable_combination: bool = True,
+    correction=None,
 ) -> TaskPlan:
+    """``correction``: optional (3,) per-engine cost scaling from the
+    online-feedback loop (repro.autotune) — biases *selection* only; the
+    transfer_bytes/transfer_time accounting stays in model units."""
     costs = engine_costs(stats, link)
-    engines = select_engines(stats, costs, link)
+    engines = select_engines(stats, costs, link, correction)
     active = engines >= 0
     if enable_combination:
         n_filter_tasks = _merged_filter_tasks(engines == FILTER, combine_k)

@@ -30,6 +30,15 @@ Engine semantics are unchanged: each local partition still relaxes
 through its selected FILTER/COMPACT/ZEROCOPY engine via ``lax.switch``,
 so the cost model's per-partition decisions (and the modeled transfer
 accounting) are identical to the single-device run.
+
+Second level (DESIGN.md §2): the cross-device merge is itself
+transfer-managed *in the model* — ``ici_level_cost`` selects per
+iteration between a dense all-reduce (filter analogue) and a compacted
+active-entry exchange (compact analogue) over ``HyTMConfig.ici_link``,
+optionally reweighed by the online-feedback correction
+(``HyTMConfig.autotune``, repro.autotune).  The executed collective
+stays the bulk-synchronous pmin/psum merge, preserving the oracle
+equivalence contract.
 """
 
 from __future__ import annotations
@@ -45,10 +54,13 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core.cost_model import (
+    COMPACT,
+    FILTER,
     NONE,
     engine_costs,
     partition_stats,
     select_engines,
+    selection_diagnostics,
     zc_request_counts,
 )
 from repro.core.engines import EdgeBlock, relax_with_engine
@@ -275,24 +287,25 @@ def make_sharded_iteration(
     P_local = P_total // n_dev
     mode = config.cds_mode
 
-    def select_local(stats_slice):
+    def select_local(stats_slice, correction):
         """Algorithm 1 on a (P_local,) stats shard — identical result to
         slicing the global selection (selection is per-partition)."""
         if config.forced_engine is None:
             costs = engine_costs(stats_slice, config.link)
-            return select_engines(stats_slice, costs, config.link)
+            return select_engines(stats_slice, costs, config.link, correction)
         return jnp.where(
             stats_slice.active_edges > 0, config.forced_engine, NONE
         ).astype(jnp.int32)
 
     def sweep_pass(stats, second_mask, frontier, operand, delta_mass,
-                   pass_two: bool):
+                   correction, pass_two: bool):
         """One shard_mapped sweep pass; returns merged (agg, touched) plus
         the engines each device selected (for the second pass mask)."""
 
-        def local(blocks_l, stats_l, mask_l, dmass_l, frontier_, operand_):
+        def local(blocks_l, stats_l, mask_l, dmass_l, frontier_, operand_,
+                  corr_):
             dev = jax.lax.axis_index(axis)
-            engines_l = select_local(stats_l)
+            engines_l = select_local(stats_l, corr_)
             if pass_two:
                 engines_l = jnp.where(mask_l, engines_l, NONE)
             sched = make_schedule(
@@ -315,15 +328,20 @@ def make_sharded_iteration(
                 BlockedEdges(src=P(axis, None), dst=P(axis, None),
                              weight=P(axis, None), in_range=P(axis, None)),
                 jax.tree.map(lambda _: shard, stats),
-                shard, shard, rep, rep,
+                shard, shard, rep, rep, rep,
             ),
             out_specs=(rep, rep),
             check_rep=False,
         )
-        return fn(rt.blocks, stats, second_mask, delta_mass, frontier, operand)
+        return fn(rt.blocks, stats, second_mask, delta_mass, frontier,
+                  operand, correction)
 
     @jax.jit
-    def iteration(state: HyTMState):
+    def iteration(state: HyTMState, correction: jax.Array | None = None):
+        if correction is None:
+            # identity correction: float multiply by 1.0 is exact, so the
+            # uncorrected path stays bit-identical to the oracle contract
+            correction = jnp.ones(3, jnp.float32)
         frontier = state.frontier
         values, delta = state.values, state.delta
 
@@ -340,6 +358,7 @@ def make_sharded_iteration(
             plan = generate_tasks(
                 stats, config.link, combine_k=config.combine_k,
                 enable_combination=config.enable_task_combination,
+                correction=correction,
             )
         else:
             plan = forced_engine_plan(
@@ -361,7 +380,8 @@ def make_sharded_iteration(
         else:
             operand = values
         agg, touched = sweep_pass(
-            stats, second_mask, frontier, operand, delta_mass, pass_two=False,
+            stats, second_mask, frontier, operand, delta_mass, correction,
+            pass_two=False,
         )
         values1, delta1, activated = _apply_merged(
             values, delta, frontier, agg, touched, program,
@@ -379,7 +399,8 @@ def make_sharded_iteration(
         else:
             operand2 = values1
         agg2, touched2 = sweep_pass(
-            stats, second_mask, frontier2, operand2, delta_mass, pass_two=True,
+            stats, second_mask, frontier2, operand2, delta_mass, correction,
+            pass_two=True,
         )
         # pass-2 consumption only touches re-processed partitions
         processed2 = second_mask[rt.parts.vertex_part_id] & (
@@ -389,6 +410,10 @@ def make_sharded_iteration(
             values1, delta1, frontier2 & processed2, agg2, touched2, program,
         )
         activated = activated | activated2
+        # entries a compacted ICI exchange would ship: destinations any
+        # device touched this iteration (both passes) — NOT the source
+        # frontier, which undercounts by the fan-out in hub regimes
+        merged_entries = jnp.sum((touched | touched2).astype(jnp.int32))
 
         if program.combine == MIN:
             next_frontier = activated
@@ -396,6 +421,9 @@ def make_sharded_iteration(
             next_frontier = jnp.abs(delta2) > program.tolerance
 
         new_state = HyTMState(values=values2, delta=delta2, frontier=next_frontier)
+        per_engine_time, mispredictions = selection_diagnostics(
+            plan.engines, plan.transfer_time, stats, plan.costs, correction,
+        )
         info = {
             "engines": plan.engines,
             "transfer_bytes": plan.transfer_bytes,
@@ -405,6 +433,9 @@ def make_sharded_iteration(
             "active_vertices": jnp.sum(frontier.astype(jnp.int32)),
             "active_edges": jnp.sum(stats.active_edges),
             "next_active": jnp.sum(next_frontier.astype(jnp.int32)),
+            "per_engine_time": per_engine_time,
+            "mispredictions": mispredictions,
+            "merged_entries": merged_entries,
         }
         return new_state, info
 
@@ -414,6 +445,19 @@ def make_sharded_iteration(
 # --------------------------------------------------------------------------
 # Second transfer-management level: the cross-device merge
 # --------------------------------------------------------------------------
+
+def _ring_per_dev_bytes(payload_bytes: float, n_devices: int) -> float:
+    """Bytes one device moves for a ring all-reduce of ``payload_bytes``."""
+    return 2.0 * (n_devices - 1) / n_devices * payload_bytes
+
+
+def _collective_charge(per_dev_bytes: float, link) -> float:
+    """Seconds for one collective, through the Eq-1 transaction-group
+    model (shared by the dense and compacted ICI candidates — they must
+    never diverge, or the second-level engine comparison is corrupted)."""
+    group = link.m * link.mr
+    return float(np.ceil(per_dev_bytes / group)) * link.rtt + link.launch_overhead_s
+
 
 def ici_merge_cost(
     n_nodes: int, n_devices: int, link, n_collectives: int = 4
@@ -431,11 +475,45 @@ def ici_merge_cost(
     """
     if n_devices <= 1:
         return 0.0, 0.0
-    per_dev = 2.0 * (n_devices - 1) / n_devices * n_nodes * 4.0
+    per_dev = _ring_per_dev_bytes(n_nodes * 4.0, n_devices)
     total_bytes = per_dev * n_devices * n_collectives
-    group = link.m * link.mr
-    per_collective = float(np.ceil(per_dev / group)) * link.rtt + link.launch_overhead_s
-    return total_bytes, n_collectives * per_collective
+    return total_bytes, n_collectives * _collective_charge(per_dev, link)
+
+
+def ici_level_cost(
+    n_nodes: int,
+    merged_entries: float,
+    n_devices: int,
+    link,
+    correction: np.ndarray | None = None,
+    n_collectives: int = 4,
+) -> tuple[float, float, int]:
+    """Per-iteration ICI-level *engine selection* (Algorithm 1 at the
+    second transfer-management level): dense all-reduce of the whole
+    (n,) contribution vectors (the FILTER analogue) vs a compacted
+    exchange of only the ``merged_entries`` destinations the sweep
+    touched — (index, payload) pairs, 8 B — (the COMPACT analogue).
+    Returns (bytes, seconds, engine).
+
+    ``correction`` is the same (3,) online-feedback vector the HBM level
+    uses (repro.autotune.feedback); it rescales the two candidate costs
+    before *comparison* only — the returned charge is the chosen
+    engine's uncorrected model time, matching the HBM level's
+    select-corrected / account-uncorrected contract.  Accounting-level
+    selection: the executed collective stays the bulk-synchronous
+    pmin/psum merge (oracle equivalence); what moves is the modeled
+    charge, exactly as the HBM level's accounting does.
+    """
+    if n_devices <= 1:
+        return 0.0, 0.0, NONE
+    c = np.ones(3) if correction is None else np.asarray(correction, float)
+    per_dev_comp = _ring_per_dev_bytes(float(merged_entries) * 8.0, n_devices)
+    t_comp = n_collectives * _collective_charge(per_dev_comp, link)
+    dense_bytes, t_dense = ici_merge_cost(
+        n_nodes, n_devices, link, n_collectives=n_collectives)
+    if t_comp * c[COMPACT] < t_dense * c[FILTER]:
+        return per_dev_comp * n_devices * n_collectives, t_comp, COMPACT
+    return dense_bytes, t_dense, FILTER
 
 
 # --------------------------------------------------------------------------
@@ -450,6 +528,7 @@ def run_hytm_sharded(
     n_hubs: int = 0,
     mesh: jax.sharding.Mesh | None = None,
     runtime: ShardedRuntime | None = None,
+    calibrator=None,
 ) -> HyTMResult:
     """Drop-in ``run_hytm`` over a 1-D device mesh.
 
@@ -475,24 +554,51 @@ def run_hytm_sharded(
     values, delta, frontier = program.init_state(g.n_nodes, source)
     state = HyTMState(values=values, delta=delta, frontier=frontier)
 
-    # second-level accounting: the merge exchanges dense (n,) vectors, so
-    # its cost is iteration-invariant — charge it once per iteration.
     n_dev = int(mesh.shape[config.mesh_axis])
-    ici_bytes_iter, ici_time_iter = ici_merge_cost(
-        g.n_nodes, n_dev, config.ici_link
-    )
+
+    calib = None
+    correction = None
+    corr_np = None
+    if config.autotune:
+        from repro.autotune.feedback import OnlineCalibrator
+
+        calib = (calibrator if calibrator is not None
+                 else OnlineCalibrator(decay=config.autotune_decay))
+        correction = jnp.asarray(calib.correction(), jnp.float32)
+        corr_np = np.asarray(correction, dtype=float)
 
     hist: dict[str, list] = {
         "engines": [], "transfer_bytes": [], "transfer_time": [],
         "active_vertices": [], "active_edges": [], "n_tasks": [],
+        "mispredictions": [],
     }
+    # second-level accounting (per iteration: the exchange mode depends on
+    # the live active-vertex count, and feedback can reweigh the choice)
+    ici_hist: dict[str, list] = {"ici_bytes": [], "ici_time": [], "ici_engine": []}
     t0 = time.monotonic()
     iters = 0
     for _ in range(config.max_iters):
-        state, info = iteration(state)
+        t_iter = time.monotonic()
+        state, info = iteration(state, correction)
         iters += 1
+        # charge the ICI level under the SAME correction this iteration's
+        # HBM-level selection ran with (the update below only steers the
+        # next iteration, exactly as on the single-device path)
+        ib, it_, ie = ici_level_cost(
+            g.n_nodes, float(info["merged_entries"]), n_dev,
+            config.ici_link, corr_np,
+        )
+        if calib is not None:
+            correction = calib.observe_iteration(
+                state.values, info["per_engine_time"], t_iter,
+                skip=iters == 1,  # iteration 1 measures compile, not sweep
+            )
+            corr_np = np.asarray(correction, dtype=float)
         for k in hist:
             hist[k].append(np.asarray(info[k]))
+        ici_hist["ici_bytes"].append(ib)
+        ici_hist["ici_time"].append(it_)
+        ici_hist["ici_engine"].append(ie)
         if int(info["next_active"]) == 0:
             break
     jax.block_until_ready(state.values)
@@ -501,8 +607,8 @@ def run_hytm_sharded(
     history = {
         k: np.stack(v) if np.ndim(v[0]) else np.asarray(v) for k, v in hist.items()
     }
-    history["ici_bytes"] = np.full(iters, ici_bytes_iter)
-    history["ici_time"] = np.full(iters, ici_time_iter)
+    for k, v in ici_hist.items():
+        history[k] = np.asarray(v)
     return HyTMResult(
         values=np.asarray(state.values),
         delta=np.asarray(state.delta),
@@ -511,6 +617,10 @@ def run_hytm_sharded(
         modeled_seconds=float(np.sum(history["transfer_time"])),
         total_transfer_bytes=float(np.sum(history["transfer_bytes"])),
         history=history,
-        total_ici_bytes=float(iters * ici_bytes_iter),
-        modeled_ici_seconds=float(iters * ici_time_iter),
+        total_ici_bytes=float(np.sum(history["ici_bytes"])),
+        modeled_ici_seconds=float(np.sum(history["ici_time"])),
+        total_mispredictions=int(np.sum(history["mispredictions"])),
+        engine_corrections=(
+            calib.correction() if calib is not None else None
+        ),
     )

@@ -184,6 +184,7 @@ def run_incremental(
     delta: np.ndarray,
     source: int | None = 0,
     config: HyTMConfig | None = None,
+    calibrator=None,
 ) -> HyTMResult:
     """Converge the post-update graph from the warm (values, Δ) state of a
     previous converged run, seeding only update-affected vertices.
@@ -196,4 +197,5 @@ def run_incremental(
     return run_hytm(
         None, program, source=source, config=config,
         runtime=dcsr.runtime_for(program), initial_state=state,
+        calibrator=calibrator,
     )

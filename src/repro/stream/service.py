@@ -22,10 +22,19 @@
 
 Accumulative programs (``use_delta``) are global — their cache key uses
 ``source=None`` whatever the caller passed.
+
+With ``HyTMConfig.autotune`` the service carries one
+``repro.autotune.OnlineCalibrator`` for its whole lifetime: every
+multiplexed lane sweep contributes a measured-vs-modeled observation,
+and the resulting per-engine correction biases each lane's engine
+selection (and hence the priority schedule) on subsequent iterations and
+queries.  ``stats.extra`` reports the live correction vector and the
+accumulated misprediction count.
 """
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Sequence
@@ -42,11 +51,16 @@ from repro.stream.incremental import run_incremental
 
 
 @partial(jax.jit, static_argnames=("program", "config", "nhp"))
-def _batched_iteration(state, csr, parts, zc_req, inv_deg, program, config, nhp):
-    """One HyTM iteration vmapped over the source-lane dimension."""
+def _batched_iteration(state, csr, parts, zc_req, inv_deg, program, config, nhp,
+                       correction=None):
+    """One HyTM iteration vmapped over the source-lane dimension.
+
+    ``correction`` (optional (3,)) is shared across lanes — one
+    machine, one set of per-engine corrections — while each lane still
+    runs its own cost model and selection over its own frontier."""
     return jax.vmap(
         lambda s: hytm_iteration(
-            s, csr, parts, zc_req, inv_deg, program, config, nhp
+            s, csr, parts, zc_req, inv_deg, program, config, nhp, correction
         )
     )(state)
 
@@ -99,6 +113,15 @@ class GraphService:
         self._cache: dict[tuple[VertexProgram, int | None], _CacheEntry] = {}
         self._reports: list[UpdateReport] = []
         self.stats = ServiceStats()
+        # online feedback (repro.autotune): one calibrator for the whole
+        # service lifetime — measured lane-sweep times keep correcting the
+        # per-engine selection costs across queries and update batches
+        self._calibrator = None
+        self._correction = None
+        if self.config.autotune:
+            from repro.autotune.feedback import OnlineCalibrator
+
+            self._calibrator = OnlineCalibrator(decay=self.config.autotune_decay)
 
     # ----------------------------------------------------------------- update
     @property
@@ -167,11 +190,33 @@ class GraphService:
         )
         self._prune_reports()  # refreshed entries may raise the floor
 
+    def _record_feedback(self, mispredictions, correction=None) -> None:
+        """Single bookkeeping point for every feedback source (lane
+        sweeps, incremental runs, full accumulative runs): refresh the
+        cached correction and accumulate the misprediction count into
+        ``stats.extra``.  ``correction`` skips re-solving when the caller
+        already holds the refreshed vector (observe_iteration's return)."""
+        if self._calibrator is None:
+            return
+        if correction is None:
+            correction = jnp.asarray(
+                self._calibrator.correction(), jnp.float32)
+        self._correction = correction
+        self.stats.extra["engine_corrections"] = (
+            np.asarray(self._correction).tolist())
+        self.stats.extra["mispredictions"] = (
+            self.stats.extra.get("mispredictions", 0) + int(mispredictions))
+
+    def _absorb_run(self, res) -> None:
+        self._record_feedback(res.total_mispredictions)
+
     def _query_incremental(self, program, s, entry: _CacheEntry) -> QueryResult:
         res = run_incremental(
             self.dcsr, program, self._reports_since(entry.version),
             entry.values, entry.delta, source=s, config=self.config,
+            calibrator=self._calibrator,
         )
+        self._absorb_run(res)
         self._store(program, s, res.values, res.delta)
         self.stats.n_incremental += 1
         self.stats.sweep_iterations += res.iterations
@@ -188,7 +233,9 @@ class GraphService:
                 res = run_hytm(
                     None, program, source=s, config=self.config,
                     runtime=self.dcsr.runtime_for(program),
+                    calibrator=self._calibrator,
                 )
+                self._absorb_run(res)
                 self._store(program, s, res.values, res.delta)
                 self.stats.n_full += 1
                 self.stats.sweep_iterations += res.iterations
@@ -222,13 +269,30 @@ class GraphService:
             delta=jnp.stack([d for _, d, _ in inits]),
             frontier=jnp.stack([f for _, _, f in inits]),
         )
+        correction = self._correction
+        if self._calibrator is not None and correction is None:
+            correction = jnp.ones(3, jnp.float32)
         iters = 0
         for _ in range(self.config.max_iters):
+            t_iter = time.monotonic()
             state, info = _batched_iteration(
                 state, rt.csr, rt.parts, rt.zc_req, rt.inv_deg,
-                program, self.config, rt.n_hub_partitions,
+                program, self.config, rt.n_hub_partitions, correction,
             )
             iters += 1
+            if self._calibrator is not None:
+                # lanes share the machine: their modeled per-engine times
+                # sum into one observation per multiplexed sweep.  Each
+                # sweep's first iteration may pay a retrace (new lane
+                # count or program), so never count it as a measurement.
+                refreshed = self._calibrator.observe_iteration(
+                    state.values,
+                    np.asarray(info["per_engine_time"], dtype=float).sum(axis=0),
+                    t_iter, skip=iters == 1,
+                )
+                self._record_feedback(
+                    np.asarray(info["mispredictions"]).sum(), refreshed)
+                correction = self._correction
             if int(np.asarray(info["next_active"]).sum()) == 0:
                 break
         return np.asarray(state.values), np.asarray(state.delta), iters

@@ -26,6 +26,7 @@ except ImportError:
         # hypothesis unavailable and the fallback shim broke: skip the
         # property-based modules rather than failing collection.
         collect_ignore = [
+            "test_autotune.py",
             "test_cost_model.py",
             "test_engines.py",
             "test_graph.py",
@@ -43,7 +44,7 @@ def pytest_report_header(config):
     if _HYPOTHESIS_MODE == "missing":
         return (
             "hypothesis: not installed and fallback unavailable — "
-            "skipping property-based test modules "
-            "(test_cost_model, test_engines, test_graph, test_stream)"
+            "skipping property-based test modules (test_autotune, "
+            "test_cost_model, test_engines, test_graph, test_stream)"
         )
     return None
