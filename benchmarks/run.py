@@ -22,6 +22,7 @@ def main() -> None:
         fig7_execution_path,
         fig8_gains,
         fig9_scaling,
+        iterloop,
         kernels,
         roofline,
         stream_bench,
@@ -44,6 +45,7 @@ def main() -> None:
         "roofline": lambda: roofline.run(fast=args.fast),
         "stream": lambda: stream_bench.run(smoke=args.fast),
         "autotune": lambda: autotune_bench.run(fast=args.fast),
+        "iterloop": lambda: iterloop.run(fast=args.fast),
     }
     print("name,us_per_call,derived")
     for name, fn in mods.items():

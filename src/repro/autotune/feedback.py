@@ -108,3 +108,25 @@ class OnlineCalibrator:
                 time.monotonic() - t_start,
             )
         return jnp.asarray(self.correction(), jnp.float32)
+
+    def observe_chunk(self, sync_ref, per_engine_modeled_sum, t_start: float,
+                      skip: bool = False):
+        """Chunk-granularity observation for the device-resident drivers
+        (``HyTMConfig.sync_every > 1``): the regression target moves from
+        one iteration to one chunk —
+
+            measured_chunk_seconds ~= sum_e c_e * (sum over the chunk's
+                                      iterations of modeled_e)
+
+        which identifies the same correction vector (the model is linear
+        in the per-engine regressors; summing iterations just aggregates
+        observations) while costing one measurement per dispatch instead
+        of per iteration.  ``per_engine_modeled_sum`` is the (3,)
+        per-engine modeled seconds summed over the chunk's *executed*
+        iterations (drained history rows ``[:n_done]``); ``skip`` marks
+        chunks whose dispatch compiled (wall time measures XLA, not the
+        sweep).  Returns the refreshed (3,) float32 correction for the
+        next chunk."""
+        return self.observe_iteration(
+            sync_ref, per_engine_modeled_sum, t_start, skip=skip,
+        )

@@ -209,6 +209,45 @@ def selection_diagnostics(
     return per_engine_time, mispredictions
 
 
+# --------------------------------------------------------------------------
+# Per-iteration history layout (shared by the chunked drivers)
+# --------------------------------------------------------------------------
+
+# The iteration-info keys that persist into ``HyTMResult.history`` — one
+# row per iteration.  The chunked ``lax.while_loop`` drivers
+# (core.hytm.hytm_chunk, dist.graph_shard.make_sharded_chunk) preallocate
+# an on-device ``(chunk, *shape)`` buffer per key, write row ``i`` inside
+# the loop body, and drain the whole buffer to host once per chunk — this
+# tuple is the single definition of which keys those buffers carry.
+# ``per_engine_time`` rides along because the online calibrator
+# (repro.autotune.feedback) regresses its per-chunk sum against measured
+# chunk wall time.  Sharded runs extend the set with ``merged_entries``
+# (the ICI-level accounting input); ``next_active`` is *not* buffered —
+# it lives in the while-loop carry as the early-exit condition and is
+# returned separately.
+HISTORY_KEYS = (
+    "engines", "transfer_bytes", "transfer_time", "active_vertices",
+    "active_edges", "n_tasks", "mispredictions", "per_engine_time",
+)
+
+
+def init_history_buffers(
+    info_shapes: dict, chunk: int, keys: tuple = HISTORY_KEYS
+) -> dict:
+    """Preallocated on-device history: ``key -> zeros((chunk, *shape))``.
+
+    ``info_shapes`` maps info keys to ``jax.ShapeDtypeStruct``s (usually
+    from ``jax.eval_shape`` of the iteration), so buffer layout follows
+    the iteration's actual output spec instead of a parallel hand-written
+    one that could drift.
+    """
+    return {
+        k: jnp.zeros((chunk,) + tuple(info_shapes[k].shape),
+                     info_shapes[k].dtype)
+        for k in keys
+    }
+
+
 def modeled_transfer_bytes(stats: PartitionStats, engines: jax.Array, link: LinkModel) -> jax.Array:
     """Modeled host->accelerator bytes each partition moves under its
     chosen engine (Table VI accounting).

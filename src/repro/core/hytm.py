@@ -14,17 +14,34 @@ One *iteration* is a single jitted function:
   6. recompute-once second pass        (loaded priority partitions, no
      additional transfer)
 
-The convergence loop runs on host (the per-iteration frontier population
-is the loop condition — the same device->host sync real GPU frameworks
-do), collecting the per-iteration history that feeds the Fig-7 execution
-path, Table-VI transfer volume, and Table-V runtime analyses.
+The convergence loop is **device-resident and chunked**
+(``HyTMConfig.sync_every = K``): ``hytm_chunk`` runs up to K iterations
+inside one compiled ``jax.lax.while_loop`` dispatch, with the state and
+the preallocated on-device history buffers donated so values/Δ/frontier
+update in place instead of round-tripping through host.  The chunk's
+while-condition checks the *previous* iteration's frontier population
+(``next_active == 0``), so a converged run early-exits inside the chunk
+and never executes a single iteration past convergence; the host only
+syncs once per chunk — to drain the ``(K, ...)`` history rows actually
+written and to read the loop-exit flag — instead of twice per iteration.
+``K = 1`` keeps the legacy one-dispatch-per-iteration loop (whose
+per-iteration device->host sync on the frontier population is the same
+sync real GPU frameworks pay), reproducing the pre-chunk dataflow
+bit-for-bit; ``K > 1`` is bit-identical for min-combine programs and
+tolerance-bounded for sum-combine (XLA may fuse the loop body
+differently than the standalone iteration).  The drained history feeds
+the Fig-7 execution path, Table-VI transfer volume, and Table-V runtime
+analyses exactly as before — chunking changes *when* history reaches the
+host, never what it records.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
-from dataclasses import dataclass
+import warnings
+from dataclasses import dataclass, field
 from functools import partial
 from typing import Any
 
@@ -36,8 +53,10 @@ from repro.core.constants import PCIE3, TPU_V5E_ICI, LinkModel
 from repro.core.cost_model import (
     COMPACT,
     FILTER,
+    HISTORY_KEYS,
     NONE,
     ZEROCOPY,
+    init_history_buffers,
     partition_stats,
     selection_diagnostics,
     zc_request_counts,
@@ -66,6 +85,16 @@ class HyTMConfig:
     recompute_once: bool = True
     combine_k: int = 4
     max_iters: int = 10_000
+    # Convergence-loop chunk size K: each device dispatch runs up to K
+    # iterations inside one compiled lax.while_loop (early-exiting the
+    # moment the frontier drains), and the host syncs once per chunk
+    # instead of twice per iteration.  K=1 keeps the legacy
+    # one-dispatch-per-iteration loop (bit-for-bit the pre-chunk
+    # dataflow); the default is tuned for dispatch-bound many-iteration
+    # workloads (benchmarks/iterloop.py) — large enough to amortize
+    # dispatch+sync, small enough that history draining and the online
+    # calibrator keep a useful cadence.
+    sync_every: int = 8
     forced_engine: int | None = None  # force a single engine (baselines)
     hub_fraction: float = 0.08
     # Second transfer-management level (DESIGN.md §2): the link model used
@@ -108,6 +137,13 @@ class Runtime:
     inv_deg: jax.Array         # (n,) float32 — 1/max(deg,1) (or 1/sum(w)
                                # for weighted accumulative programs: PHP)
     n_hub_partitions: int
+    # (program, config, shapes) -> iteration info ShapeDtypeStructs;
+    # reusing a runtime across run_hytm calls — or sharing this dict
+    # across runtime views, as DeltaCSR.runtime_for does — skips the
+    # per-call jax.eval_shape re-trace of the iteration body.  Keys
+    # include the specializing shapes, so a shared dict stays correct
+    # when the underlying buffers are re-blocked (merge-compaction).
+    info_shape_cache: dict = field(default_factory=dict, repr=False)
 
 
 def build_runtime(
@@ -226,11 +262,7 @@ def _sweep(
     return HyTMState(values=values, delta=delta, frontier=state.frontier), activated
 
 
-@partial(
-    jax.jit,
-    static_argnames=("program", "config", "n_hub_partitions"),
-)
-def hytm_iteration(
+def _iteration_impl(
     state: HyTMState,
     csr: DeviceCSR,
     parts: DevicePartitions,
@@ -241,6 +273,9 @@ def hytm_iteration(
     n_hub_partitions: int,
     correction: jax.Array | None = None,
 ) -> tuple[HyTMState, dict[str, Any]]:
+    """Untraced single-iteration body.  ``hytm_iteration`` jits it as the
+    public per-dispatch entry; ``hytm_chunk`` inlines it inside the
+    chunked ``lax.while_loop`` so K iterations share one dispatch."""
     rt = Runtime(csr=csr, parts=parts, zc_req=zc_req, inv_deg=inv_deg,
                  n_hub_partitions=n_hub_partitions)
     n = csr.n_nodes
@@ -261,11 +296,18 @@ def hytm_iteration(
             combine_k=config.combine_k,
         )
 
-    # (4) contribution-driven priority schedule
-    delta_mass = jax.ops.segment_sum(
-        jnp.abs(state.delta) * frontier, parts.vertex_part_id,
-        num_segments=parts.n_partitions,
-    )
+    # (4) contribution-driven priority schedule.  Only the 'delta' CDS
+    # mode reads the per-partition |Δ| mass, and min-combine programs
+    # carry an identically-zero Δ — in both cases the (n,)->(P,)
+    # segment-sum would reduce zeros (or feed a schedule that ignores
+    # it), so skip it.
+    if program.combine == MIN or config.cds_mode != "delta":
+        delta_mass = jnp.zeros(parts.n_partitions, jnp.float32)
+    else:
+        delta_mass = jax.ops.segment_sum(
+            jnp.abs(state.delta) * frontier, parts.vertex_part_id,
+            num_segments=parts.n_partitions,
+        )
     mode = config.cds_mode
     sched = make_schedule(
         plan.engines, delta_mass, n_hub_partitions, mode, config.recompute_once,
@@ -318,6 +360,157 @@ def hytm_iteration(
     return new_state, info
 
 
+# Public per-dispatch entry: one jitted iteration (the K=1 driver and the
+# vmapped service lanes dispatch through this).
+hytm_iteration = partial(
+    jax.jit, static_argnames=("program", "config", "n_hub_partitions"),
+)(_iteration_impl)
+
+
+# --------------------------------------------------------------------------
+# Chunked device-resident driver
+# --------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def quiet_donation():
+    """Scoped filter for jax's 'Some donated buffers were not usable'
+    warning around a chunk dispatch: CPU backends cannot alias donated
+    buffers, so on this container the donation (a device-side
+    optimization — state/history update in place on GPU/TPU) would warn
+    on every first dispatch.  Scoped, not global: other code's donation
+    diagnostics stay visible."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        yield
+
+
+def chunked_while(iter_fn, state: HyTMState, history: dict, chunk: int):
+    """The shared ``lax.while_loop`` skeleton of every chunked driver
+    (``hytm_chunk``, ``graph_shard.make_sharded_chunk``): run up to
+    ``chunk`` iterations of ``iter_fn(state) -> (state, info)``, writing
+    iteration ``i``'s info rows into ``history[k][i]`` and accumulating
+    the (3,) per-engine modeled seconds, with the early-exit condition on
+    the *previous* iteration's ``next_active`` (sentinel 1: the first
+    iteration of a chunk always runs, matching the K=1 loop, which runs
+    one iteration even on an empty frontier).
+
+    Returns ``(state, history, n_done, last_next_active,
+    per_engine_sum)``.  ``per_engine_sum`` rides in the carry so the
+    online calibrator can observe the chunk *before* the history drain —
+    the measured wall window then covers dispatch + execution only.
+    """
+    def cond(carry):
+        _state, _hist, i, prev_active, _pe = carry
+        return (i < chunk) & (prev_active != 0)
+
+    def body(carry):
+        st, hist, i, _prev, pe = carry
+        new_st, info = iter_fn(st)
+        hist = {k: hist[k].at[i].set(info[k]) for k in hist}
+        return (new_st, hist, i + 1, info["next_active"],
+                pe + info["per_engine_time"])
+
+    init = (state, history, jnp.int32(0), jnp.int32(1),
+            jnp.zeros(3, jnp.float32))
+    state, history, n_done, last_active, pe_sum = jax.lax.while_loop(
+        cond, body, init)
+    return state, history, n_done, last_active, pe_sum
+
+
+@partial(
+    jax.jit,
+    static_argnames=("program", "config", "n_hub_partitions", "chunk"),
+    donate_argnames=("state", "history"),
+)
+def hytm_chunk(
+    state: HyTMState,
+    history: dict[str, jax.Array],   # key -> (chunk, ...) preallocated
+    csr: DeviceCSR,
+    parts: DevicePartitions,
+    zc_req: jax.Array,
+    inv_deg: jax.Array,
+    program: VertexProgram,
+    config: HyTMConfig,
+    n_hub_partitions: int,
+    chunk: int,
+    correction: jax.Array | None = None,
+) -> tuple[HyTMState, dict[str, jax.Array], jax.Array, jax.Array, jax.Array]:
+    """Run up to ``chunk`` iterations inside one ``lax.while_loop``.
+
+    Contract (the chunk/early-exit contract the chunked drivers share):
+
+    * the loop body is exactly ``_iteration_impl`` — chunking changes how
+      many iterations share a dispatch, never what an iteration computes;
+    * the while-condition tests the *previous* iteration's
+      ``next_active``, so the loop stops immediately after the converging
+      iteration — a converged run never executes an iteration past
+      convergence, and the iteration count is identical to the K=1 loop;
+    * iteration ``i``'s info rows land in ``history[k][i]``; rows at
+      index >= the returned ``n_done`` are stale garbage (possibly from a
+      previous chunk through the same donated buffer) and must be sliced
+      off when draining;
+    * ``state`` and ``history`` are donated: on accelerators the
+      values/Δ/frontier and history buffers update in place across
+      chunks.  Callers must drain (``jax.device_get``) a returned history
+      before feeding it back to the next chunk, which invalidates it.
+
+    Returns ``(state, history, n_done, last_next_active,
+    per_engine_sum)``; the host reads the scalars (one sync per chunk) to
+    decide whether to dispatch another chunk and to feed the calibrator.
+    """
+    return chunked_while(
+        lambda st: _iteration_impl(
+            st, csr, parts, zc_req, inv_deg, program, config,
+            n_hub_partitions, correction,
+        ),
+        state, history, chunk,
+    )
+
+
+@contextlib.contextmanager
+def count_driver_dispatches():
+    """Count convergence-driver dispatches by swapping the module-global
+    entry points (``run_hytm`` resolves both at call time, so the swap
+    sees every dispatch).  Yields a live ``{"iteration": n, "chunk": n}``
+    dict — the regression seam ``tests/test_chunked.py`` and
+    ``benchmarks/iterloop.py --selfcheck`` share to prove the chunked
+    loop really batches (chunk dispatches ≤ iterations/K + 1)."""
+    mod = __import__("repro.core.hytm", fromlist=["hytm"])
+    counts = {"iteration": 0, "chunk": 0}
+    orig_iter, orig_chunk = mod.hytm_iteration, mod.hytm_chunk
+
+    def count_iter(*a, **kw):
+        counts["iteration"] += 1
+        return orig_iter(*a, **kw)
+
+    def count_chunk(*a, **kw):
+        counts["chunk"] += 1
+        return orig_chunk(*a, **kw)
+
+    mod.hytm_iteration, mod.hytm_chunk = count_iter, count_chunk
+    try:
+        yield counts
+    finally:
+        mod.hytm_iteration, mod.hytm_chunk = orig_iter, orig_chunk
+
+
+# Host-side registry of dispatch signatures that have already compiled:
+# the first dispatch of a given (shapes, program, config) signature pays
+# trace+compile, so its wall time must not feed the online calibrator.
+# Mirrors the jit cache closely enough (module-level jits persist for the
+# process lifetime) without reaching into private jax state.
+_WARM_SIGNATURES: set = set()
+
+
+def _consume_warm(signature) -> bool:
+    """True if ``signature`` was already dispatched (compiled) in this
+    process; marks it warm either way."""
+    warm = signature in _WARM_SIGNATURES
+    _WARM_SIGNATURES.add(signature)
+    return warm
+
+
 # --------------------------------------------------------------------------
 # Convergence loop
 # --------------------------------------------------------------------------
@@ -362,6 +555,10 @@ def run_hytm(
     (values, Δ, frontier) triple instead of ``program.init_state`` — the
     entry point of the incremental path (repro.stream.incremental).  With
     both ``runtime`` and ``initial_state`` given, ``g`` may be ``None``.
+    With ``config.sync_every > 1`` the state is *donated* to the chunked
+    driver (``hytm_chunk``): on accelerator backends the caller's
+    ``initial_state`` buffers are invalidated by the first chunk — pass a
+    copy if they must survive the run.
 
     ``calibrator``: an external ``repro.autotune.OnlineCalibrator`` to
     learn into (and start from) instead of a fresh per-run one — how
@@ -399,33 +596,97 @@ def run_hytm(
         # twice (None -> array would retrace on iteration 2)
         correction = jnp.asarray(calib.correction(), jnp.float32)
 
-    hist: dict[str, list] = {
-        "engines": [], "transfer_bytes": [], "transfer_time": [],
-        "active_vertices": [], "active_edges": [], "n_tasks": [],
-        "mispredictions": [],
-    }
+    assert config.sync_every >= 1, config.sync_every
+    rows: dict[str, list] = {k: [] for k in HISTORY_KEYS}
     t0 = time.monotonic()
     iters = 0
-    for _ in range(config.max_iters):
-        t_iter = time.monotonic()
-        state, info = hytm_iteration(
-            state, rt.csr, rt.parts, rt.zc_req, rt.inv_deg,
-            program, config, rt.n_hub_partitions, correction,
+    if config.sync_every > 1:
+        # Chunked device-resident driver: one hytm_chunk dispatch per K
+        # iterations, one host sync per chunk (n_done + history drain).
+        shape_key = (
+            program, config, rt.n_hub_partitions, rt.csr.n_nodes,
+            rt.csr.edge_src.shape[0], rt.parts.n_partitions,
+            rt.parts.block_size,
         )
-        iters += 1
-        if calib is not None:
-            correction = calib.observe_iteration(
-                state.values, info["per_engine_time"], t_iter,
-                skip=iters == 1,  # iteration 1 measures compile, not sweep
+        info_shapes = rt.info_shape_cache.get(shape_key)
+        if info_shapes is None:
+            info_shapes = jax.eval_shape(
+                lambda s: _iteration_impl(
+                    s, rt.csr, rt.parts, rt.zc_req, rt.inv_deg, program,
+                    config, rt.n_hub_partitions, correction,
+                ),
+                state,
+            )[1]
+            rt.info_shape_cache[shape_key] = info_shapes
+        history, cur_chunk = None, -1
+        while iters < config.max_iters:
+            chunk = min(config.sync_every, config.max_iters - iters)
+            if chunk != cur_chunk:
+                # allocated once (and for the rare max_iters tail);
+                # otherwise the drained buffers cycle back in, so on
+                # accelerators the donated memory is reused across chunks
+                history = init_history_buffers(info_shapes, chunk)
+                cur_chunk = chunk
+            # the warm signature mirrors the jit cache key: statics +
+            # every shape the trace specializes on (node/edge capacity,
+            # partition grid) — a dispatch not seen here compiles, and
+            # its wall time must not feed the calibrator
+            warm = _consume_warm((
+                "chunk", program, config, rt.n_hub_partitions, chunk,
+                rt.csr.n_nodes, rt.csr.edge_src.shape[0],
+                rt.parts.n_partitions, rt.parts.block_size,
+                correction is not None,
+            ))
+            t_chunk = time.monotonic()
+            with quiet_donation():
+                state, history, n_done, last_active, pe_sum = hytm_chunk(
+                    state, history, rt.csr, rt.parts, rt.zc_req,
+                    rt.inv_deg, program, config, rt.n_hub_partitions,
+                    chunk, correction,
+                )
+            n_done = int(n_done)
+            iters += n_done
+            if calib is not None:
+                # observe BEFORE the history drain so the measured wall
+                # window covers dispatch + execution only
+                correction = calib.observe_chunk(
+                    state.values, np.asarray(pe_sum, dtype=float),
+                    t_chunk,
+                    skip=not warm,  # a compiling chunk measures compile
+                )
+            # drain before the next dispatch donates these buffers; rows
+            # past n_done are stale (early exit) and sliced off
+            drained = jax.device_get(history)
+            for k in rows:
+                rows[k].append(drained[k][:n_done])
+            if int(last_active) == 0:
+                break
+        history = {k: np.concatenate(v) for k, v in rows.items()}
+    else:
+        # Legacy per-iteration driver (sync_every == 1): bit-for-bit the
+        # pre-chunk dataflow.  History is staged as device references and
+        # pulled once after convergence — the only per-iteration sync
+        # left is the loop condition itself.
+        for _ in range(config.max_iters):
+            t_iter = time.monotonic()
+            state, info = hytm_iteration(
+                state, rt.csr, rt.parts, rt.zc_req, rt.inv_deg,
+                program, config, rt.n_hub_partitions, correction,
             )
-        for k in hist:
-            hist[k].append(np.asarray(info[k]))
-        if int(info["next_active"]) == 0:
-            break
+            iters += 1
+            if calib is not None:
+                correction = calib.observe_iteration(
+                    state.values, info["per_engine_time"], t_iter,
+                    skip=iters == 1,  # iteration 1 measures compile
+                )
+            for k in rows:
+                rows[k].append(info[k])
+            if int(info["next_active"]) == 0:
+                break
+        staged = jax.device_get(rows)  # one host conversion, post-hoc
+        history = {k: np.stack(v) for k, v in staged.items()}
     jax.block_until_ready(state.values)
     wall = time.monotonic() - t0
-
-    history = {k: np.stack(v) if np.ndim(v[0]) else np.asarray(v) for k, v in hist.items()}
     return HyTMResult(
         values=np.asarray(state.values),
         delta=np.asarray(state.delta),

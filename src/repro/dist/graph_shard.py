@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -56,15 +57,23 @@ from jax.sharding import PartitionSpec as P
 from repro.core.cost_model import (
     COMPACT,
     FILTER,
+    HISTORY_KEYS,
     NONE,
     engine_costs,
+    init_history_buffers,
     partition_stats,
     select_engines,
     selection_diagnostics,
     zc_request_counts,
 )
 from repro.core.engines import EdgeBlock, relax_with_engine
-from repro.core.hytm import HyTMConfig, HyTMResult, HyTMState
+from repro.core.hytm import (
+    HyTMConfig,
+    HyTMResult,
+    HyTMState,
+    chunked_while,
+    quiet_donation,
+)
 from repro.core.partition import (
     DevicePartitions,
     PartitionTable,
@@ -276,10 +285,13 @@ def _apply_merged(
     return values, delta, touched
 
 
-def make_sharded_iteration(
+def _make_iteration_impl(
     rt: ShardedRuntime, program: VertexProgram, config: HyTMConfig
 ):
-    """Build the jitted per-iteration function for one runtime/program."""
+    """Build the untraced per-iteration body for one runtime/program.
+    ``make_sharded_iteration`` jits it directly (the sync_every=1 driver);
+    ``make_sharded_chunk`` inlines it in a ``lax.while_loop`` so K
+    shard_mapped iterations share one dispatch."""
     mesh, axis = rt.mesh, rt.axis
     n = rt.n_nodes
     P_total = rt.n_partitions
@@ -336,7 +348,6 @@ def make_sharded_iteration(
         return fn(rt.blocks, stats, second_mask, delta_mass, frontier,
                   operand, correction)
 
-    @jax.jit
     def iteration(state: HyTMState, correction: jax.Array | None = None):
         if correction is None:
             # identity correction: float multiply by 1.0 is exact, so the
@@ -345,12 +356,18 @@ def make_sharded_iteration(
         frontier = state.frontier
         values, delta = state.values, state.delta
 
-        # (1) global stats + Δ mass on the replicated vertex state
+        # (1) global stats + Δ mass on the replicated vertex state.  As in
+        # core.hytm: only the 'delta' CDS mode reads the Δ mass, and
+        # min-combine programs carry an identically-zero Δ — skip the
+        # segment-sum in both cases.
         stats = partition_stats(frontier, rt.out_degree, rt.zc_req, rt.parts)
-        delta_mass = jax.ops.segment_sum(
-            jnp.abs(delta) * frontier, rt.parts.vertex_part_id,
-            num_segments=P_total,
-        )
+        if program.combine == MIN or mode != "delta":
+            delta_mass = jnp.zeros(P_total, jnp.float32)
+        else:
+            delta_mass = jax.ops.segment_sum(
+                jnp.abs(delta) * frontier, rt.parts.vertex_part_id,
+                num_segments=P_total,
+            )
 
         # (2) global plan for the transfer accounting (identical to the
         # per-device selections — selection is per-partition)
@@ -440,6 +457,44 @@ def make_sharded_iteration(
         return new_state, info
 
     return iteration
+
+
+def make_sharded_iteration(
+    rt: ShardedRuntime, program: VertexProgram, config: HyTMConfig
+):
+    """Build the jitted per-iteration function for one runtime/program."""
+    return jax.jit(_make_iteration_impl(rt, program, config))
+
+
+def make_sharded_chunk(
+    rt: ShardedRuntime, program: VertexProgram, config: HyTMConfig,
+    chunk: int,
+):
+    """Chunked sharded driver: up to ``chunk`` shard_mapped iterations
+    inside one ``lax.while_loop`` dispatch, same chunk/early-exit and
+    history-draining contract as ``core.hytm.hytm_chunk`` (state and
+    history buffers donated; the while-condition tests the previous
+    iteration's ``next_active``, so convergence never overshoots).  The
+    history buffers additionally carry ``merged_entries`` — the
+    per-iteration input of the host-side ICI-level accounting
+    (``ici_level_cost``), which runs over the drained rows once per
+    chunk."""
+    impl = _make_iteration_impl(rt, program, config)
+    keys = HISTORY_KEYS + ("merged_entries",)
+
+    @partial(jax.jit, donate_argnames=("state", "history"))
+    def chunk_fn(state: HyTMState, history: dict, correction: jax.Array):
+        return chunked_while(
+            lambda st: impl(st, correction), state, history, chunk)
+
+    shapes_cell: dict = {}  # eval_shape once, not once per chunk dispatch
+
+    def init_history(state: HyTMState, correction: jax.Array) -> dict:
+        if "info" not in shapes_cell:
+            shapes_cell["info"] = jax.eval_shape(impl, state, correction)[1]
+        return init_history_buffers(shapes_cell["info"], chunk, keys=keys)
+
+    return chunk_fn, init_history
 
 
 # --------------------------------------------------------------------------
@@ -545,12 +600,6 @@ def run_hytm_sharded(
         g, config, mesh, n_hubs=n_hubs,
         weighted_norm=program.use_delta and program.weighted,
     )
-    cache_key = (program, config)
-    iteration = rt.iteration_cache.get(cache_key)
-    if iteration is None:
-        iteration = make_sharded_iteration(rt, program, config)
-        rt.iteration_cache[cache_key] = iteration
-
     values, delta, frontier = program.init_state(g.n_nodes, source)
     state = HyTMState(values=values, delta=delta, frontier=frontier)
 
@@ -567,46 +616,103 @@ def run_hytm_sharded(
         correction = jnp.asarray(calib.correction(), jnp.float32)
         corr_np = np.asarray(correction, dtype=float)
 
-    hist: dict[str, list] = {
-        "engines": [], "transfer_bytes": [], "transfer_time": [],
-        "active_vertices": [], "active_edges": [], "n_tasks": [],
-        "mispredictions": [],
-    }
+    assert config.sync_every >= 1, config.sync_every
+    rows: dict[str, list] = {k: [] for k in HISTORY_KEYS}
     # second-level accounting (per iteration: the exchange mode depends on
     # the live active-vertex count, and feedback can reweigh the choice)
     ici_hist: dict[str, list] = {"ici_bytes": [], "ici_time": [], "ici_engine": []}
-    t0 = time.monotonic()
-    iters = 0
-    for _ in range(config.max_iters):
-        t_iter = time.monotonic()
-        state, info = iteration(state, correction)
-        iters += 1
-        # charge the ICI level under the SAME correction this iteration's
-        # HBM-level selection ran with (the update below only steers the
-        # next iteration, exactly as on the single-device path)
+
+    def charge_ici(merged_entries: float) -> None:
         ib, it_, ie = ici_level_cost(
-            g.n_nodes, float(info["merged_entries"]), n_dev,
-            config.ici_link, corr_np,
+            g.n_nodes, float(merged_entries), n_dev, config.ici_link, corr_np,
         )
-        if calib is not None:
-            correction = calib.observe_iteration(
-                state.values, info["per_engine_time"], t_iter,
-                skip=iters == 1,  # iteration 1 measures compile, not sweep
-            )
-            corr_np = np.asarray(correction, dtype=float)
-        for k in hist:
-            hist[k].append(np.asarray(info[k]))
         ici_hist["ici_bytes"].append(ib)
         ici_hist["ici_time"].append(it_)
         ici_hist["ici_engine"].append(ie)
-        if int(info["next_active"]) == 0:
-            break
+
+    t0 = time.monotonic()
+    iters = 0
+    if config.sync_every > 1:
+        # Chunked driver: one shard_mapped lax.while_loop dispatch per K
+        # iterations (same contract as core.hytm.hytm_chunk); the ICI
+        # level is charged per executed iteration from the drained
+        # merged_entries rows, under the SAME correction the chunk's
+        # HBM-level selections ran with.
+        corr_arr = (correction if correction is not None
+                    else jnp.ones(3, jnp.float32))
+        history, cur_chunk = None, -1
+        while iters < config.max_iters:
+            chunk = min(config.sync_every, config.max_iters - iters)
+            key = ("chunk", program, config, chunk)
+            cached = rt.iteration_cache.get(key)
+            if cached is None:
+                chunk_fn, init_history = make_sharded_chunk(
+                    rt, program, config, chunk)
+                cached = {"fn": chunk_fn, "init": init_history, "warm": False}
+                rt.iteration_cache[key] = cached
+            if chunk != cur_chunk:
+                # allocated once per chunk size; afterwards the drained
+                # buffers cycle back in (donated reuse on accelerators)
+                history = cached["init"](state, corr_arr)
+                cur_chunk = chunk
+            # each cached chunk_fn is its own jit (its own compile
+            # cache), so its first dispatch is exactly the compiling one
+            warm, cached["warm"] = cached["warm"], True
+            t_chunk = time.monotonic()
+            with quiet_donation():
+                state, history, n_done, last_active, pe_sum = cached["fn"](
+                    state, history, corr_arr)
+            n_done = int(n_done)
+            iters += n_done
+            if calib is not None:
+                # observe BEFORE the drain + ICI loop: the measured wall
+                # window covers dispatch + execution only
+                corr_arr = calib.observe_chunk(
+                    state.values, np.asarray(pe_sum, dtype=float),
+                    t_chunk, skip=not warm,
+                )
+            # drain BEFORE the next dispatch donates these buffers
+            drained = jax.device_get(history)
+            for me in drained["merged_entries"][:n_done]:
+                charge_ici(me)  # charged under the chunk's correction
+            if calib is not None:
+                corr_np = np.asarray(corr_arr, dtype=float)
+            for k in rows:
+                rows[k].append(drained[k][:n_done])
+            if int(last_active) == 0:
+                break
+        history = {k: np.concatenate(v) for k, v in rows.items()}
+    else:
+        cache_key = (program, config)
+        iteration = rt.iteration_cache.get(cache_key)
+        if iteration is None:
+            iteration = make_sharded_iteration(rt, program, config)
+            rt.iteration_cache[cache_key] = iteration
+        for _ in range(config.max_iters):
+            t_iter = time.monotonic()
+            state, info = iteration(state, correction)
+            iters += 1
+            # charge the ICI level under the SAME correction this
+            # iteration's HBM-level selection ran with (the update below
+            # only steers the next iteration, exactly as on the
+            # single-device path)
+            charge_ici(info["merged_entries"])
+            if calib is not None:
+                correction = calib.observe_iteration(
+                    state.values, info["per_engine_time"], t_iter,
+                    skip=iters == 1,  # iteration 1 measures compile
+                )
+                corr_np = np.asarray(correction, dtype=float)
+            for k in rows:
+                rows[k].append(info[k])
+            if int(info["next_active"]) == 0:
+                break
+        # history stayed on device during the loop; one pull post-hoc
+        staged = jax.device_get(rows)
+        history = {k: np.stack(v) for k, v in staged.items()}
     jax.block_until_ready(state.values)
     wall = time.monotonic() - t0
 
-    history = {
-        k: np.stack(v) if np.ndim(v[0]) else np.asarray(v) for k, v in hist.items()
-    }
     for k, v in ici_hist.items():
         history[k] = np.asarray(v)
     return HyTMResult(

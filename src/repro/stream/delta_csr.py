@@ -140,6 +140,11 @@ class DeltaCSR:
         self.layout_version = 0
         self.dirty: set[int] = set()  # dirty partitions since last merge
         self._inv_deg_cache: dict[bool, jnp.ndarray] = {}
+        # shared across the Runtime views runtime_for builds, so the
+        # chunked driver's per-(program, config, shapes) eval_shape
+        # results survive across queries (keys carry the shapes — safe
+        # through merge-compaction re-blocking)
+        self._info_shape_cache: dict = {}
         self._build_layout(g)
 
     # ------------------------------------------------------------ construction
@@ -439,6 +444,7 @@ class DeltaCSR:
         return Runtime(
             csr=self.csr, parts=self.parts, zc_req=self.zc_req,
             inv_deg=inv, n_hub_partitions=0,
+            info_shape_cache=self._info_shape_cache,
         )
 
 

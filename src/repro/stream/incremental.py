@@ -190,7 +190,18 @@ def run_incremental(
     previous converged run, seeding only update-affected vertices.
 
     ``reports`` are the ``DeltaCSR.apply`` reports for every batch applied
-    since ``values``/``delta`` were computed, in order."""
+    since ``values``/``delta`` were computed, in order.
+
+    The run inherits ``config.sync_every``: with K > 1 the residual
+    convergence runs through the chunked device-resident driver
+    (``core.hytm.hytm_chunk``).  Incremental runs are exactly where the
+    chunk's early exit matters — warm starts converge in a handful of
+    iterations, and the while-loop condition stops the chunk the moment
+    the residual frontier drains, so a short run never pays for K
+    iterations.  The seeded state is materialized fresh per run
+    (``incremental_state`` builds new device arrays), so the chunked
+    driver's state donation never invalidates the caller's cached warm
+    (values, Δ) buffers."""
     config = config if config is not None else dcsr.config
     assert config.mesh_axis is None, "incremental path is single-device"
     state = incremental_state(program, values, delta, reports, dcsr, source)

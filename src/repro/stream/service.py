@@ -9,7 +9,11 @@
   model, engine selection, and priority schedule are evaluated *per
   lane*, making every lane's dataflow identical to its standalone run
   (bit-exact for MIN programs — converged lanes are no-ops while the
-  stragglers finish);
+  stragglers finish).  With ``HyTMConfig.sync_every > 1`` the sweep is
+  chunked (``_batched_chunk``): K vmapped iterations share one
+  ``lax.while_loop`` dispatch, and the host syncs once per chunk instead
+  of once per iteration — the same device-resident driver ``run_hytm``
+  uses, lifted over the lane dimension;
 * **result cache** — converged (values, Δ) keyed by
   ``(graph_version, program, source)``.  A repeat query at the same
   version is a pure cache hit: zero sweep iterations.  An update batch
@@ -43,7 +47,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hytm import HyTMConfig, HyTMState, hytm_iteration, run_hytm
+from repro.core.hytm import (
+    HyTMConfig,
+    HyTMState,
+    _consume_warm,
+    _iteration_impl,
+    hytm_iteration,
+    quiet_donation,
+    run_hytm,
+)
 from repro.graph.algorithms import VertexProgram
 from repro.graph.csr import CSRGraph
 from repro.stream.delta_csr import DeltaCSR, EdgeBatch, UpdateReport
@@ -63,6 +75,52 @@ def _batched_iteration(state, csr, parts, zc_req, inv_deg, program, config, nhp,
             s, csr, parts, zc_req, inv_deg, program, config, nhp, correction
         )
     )(state)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("program", "config", "nhp", "chunk"),
+    donate_argnames=("state",),
+)
+def _batched_chunk(state, csr, parts, zc_req, inv_deg, program, config, nhp,
+                   chunk, correction=None):
+    """Chunked lane sweep (``config.sync_every > 1``): up to ``chunk``
+    vmapped iterations inside one ``lax.while_loop`` dispatch, early-
+    exiting once every lane's frontier drains (``core.hytm.hytm_chunk``'s
+    chunk/early-exit contract, lifted over the lane dimension: the
+    while-condition sums ``next_active`` across lanes, so converged lanes
+    idle as no-ops only while a straggler is still inside the chunk).
+    The service never reads per-iteration history, so instead of (K, ...)
+    buffers the loop carries running reductions: summed per-engine
+    modeled seconds and mispredictions (the calibrator's chunk-granular
+    observation inputs).  Returns
+    ``(state, n_done, last_active_total, per_engine_sum, mispred_sum)``.
+    """
+    def one(s):
+        return _iteration_impl(
+            s, csr, parts, zc_req, inv_deg, program, config, nhp, correction
+        )
+
+    def cond(carry):
+        _s, i, prev_active, _pe, _mp = carry
+        return (i < chunk) & (prev_active != 0)
+
+    def body(carry):
+        s, i, _prev, pe, mp = carry
+        s2, info = jax.vmap(one)(s)
+        return (
+            s2,
+            i + 1,
+            jnp.sum(info["next_active"]),
+            pe + jnp.sum(info["per_engine_time"], axis=0),
+            mp + jnp.sum(info["mispredictions"]),
+        )
+
+    init = (state, jnp.int32(0), jnp.int32(1),
+            jnp.zeros(3, jnp.float32), jnp.int32(0))
+    state, n_done, last_active, pe_sum, mp_sum = jax.lax.while_loop(
+        cond, body, init)
+    return state, n_done, last_active, pe_sum, mp_sum
 
 
 @dataclass
@@ -273,26 +331,69 @@ class GraphService:
         if self._calibrator is not None and correction is None:
             correction = jnp.ones(3, jnp.float32)
         iters = 0
-        for _ in range(self.config.max_iters):
-            t_iter = time.monotonic()
-            state, info = _batched_iteration(
-                state, rt.csr, rt.parts, rt.zc_req, rt.inv_deg,
-                program, self.config, rt.n_hub_partitions, correction,
-            )
-            iters += 1
-            if self._calibrator is not None:
-                # lanes share the machine: their modeled per-engine times
-                # sum into one observation per multiplexed sweep.  Each
-                # sweep's first iteration may pay a retrace (new lane
-                # count or program), so never count it as a measurement.
-                refreshed = self._calibrator.observe_iteration(
-                    state.values,
-                    np.asarray(info["per_engine_time"], dtype=float).sum(axis=0),
-                    t_iter, skip=iters == 1,
+        if self.config.sync_every > 1:
+            # chunked lane sweep: one _batched_chunk dispatch per K
+            # iterations; converged lanes idle inside the chunk only
+            # while a straggler lane is still relaxing (early exit the
+            # moment the summed frontier drains)
+            Q = len(sources)
+            while iters < self.config.max_iters:
+                chunk = min(self.config.sync_every,
+                            self.config.max_iters - iters)
+                # the warm signature mirrors the jit cache key: statics +
+                # every shape the trace specializes on — lane count and
+                # the runtime's node/edge/partition capacities (which move
+                # on merge-compaction), so a recompiling dispatch is never
+                # fed to the calibrator as a measurement
+                warm = _consume_warm((
+                    "lanes", program, self.config, rt.n_hub_partitions,
+                    Q, self.dcsr.n_nodes, rt.csr.edge_src.shape[0],
+                    rt.parts.n_partitions, rt.parts.block_size,
+                    chunk, correction is not None,
+                ))
+                t_chunk = time.monotonic()
+                with quiet_donation():
+                    state, n_done, last_active, pe_sum, mp_sum = \
+                        _batched_chunk(
+                            state, rt.csr, rt.parts, rt.zc_req, rt.inv_deg,
+                            program, self.config, rt.n_hub_partitions,
+                            chunk, correction,
+                        )
+                iters += int(n_done)
+                if self._calibrator is not None:
+                    # lanes share the machine: the chunk's summed modeled
+                    # per-engine times form one observation (skipped when
+                    # this dispatch signature compiled)
+                    refreshed = self._calibrator.observe_chunk(
+                        state.values, np.asarray(pe_sum, dtype=float),
+                        t_chunk, skip=not warm,
+                    )
+                    self._record_feedback(int(mp_sum), refreshed)
+                    correction = self._correction
+                if int(last_active) == 0:
+                    break
+        else:
+            for _ in range(self.config.max_iters):
+                t_iter = time.monotonic()
+                state, info = _batched_iteration(
+                    state, rt.csr, rt.parts, rt.zc_req, rt.inv_deg,
+                    program, self.config, rt.n_hub_partitions, correction,
                 )
-                self._record_feedback(
-                    np.asarray(info["mispredictions"]).sum(), refreshed)
-                correction = self._correction
-            if int(np.asarray(info["next_active"]).sum()) == 0:
-                break
+                iters += 1
+                if self._calibrator is not None:
+                    # lanes share the machine: their modeled per-engine
+                    # times sum into one observation per multiplexed
+                    # sweep.  Each sweep's first iteration may pay a
+                    # retrace (new lane count or program), so never count
+                    # it as a measurement.
+                    refreshed = self._calibrator.observe_iteration(
+                        state.values,
+                        np.asarray(info["per_engine_time"], dtype=float).sum(axis=0),
+                        t_iter, skip=iters == 1,
+                    )
+                    self._record_feedback(
+                        np.asarray(info["mispredictions"]).sum(), refreshed)
+                    correction = self._correction
+                if int(np.asarray(info["next_active"]).sum()) == 0:
+                    break
         return np.asarray(state.values), np.asarray(state.delta), iters
