@@ -89,7 +89,8 @@ def run_devices(device_counts=(1, 2, 4, 8), n_nodes=5_000, n_edges=160_000,
     if fast:
         device_counts = tuple(d for d in device_counts if d <= 2) or (1, 2)
         n_nodes, n_edges = min(n_nodes, 2_000), min(n_edges, 40_000)
-    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.launch.mesh import forced_host_device_env
+
     script = textwrap.dedent(
         _DEVICE_SWEEP_SCRIPT.format(
             n_nodes=n_nodes, n_edges=n_edges, n_partitions=n_partitions
@@ -97,15 +98,10 @@ def run_devices(device_counts=(1, 2, 4, 8), n_nodes=5_000, n_edges=160_000,
     )
     rows = {}
     for n_dev in device_counts:
-        env = dict(os.environ)
-        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
-        # the forced count only applies to the CPU backend — pin it, or a
-        # machine with an accelerator would run every row on 1 device
-        env["JAX_PLATFORMS"] = "cpu"
-        env["PYTHONPATH"] = src
         out = subprocess.run(
             [sys.executable, "-c", script],
-            capture_output=True, text=True, timeout=600, env=env,
+            capture_output=True, text=True, timeout=600,
+            env=forced_host_device_env(n_dev),
         )
         if out.returncode != 0:
             emit(f"fig9/devices_{n_dev}", 0.0, f"FAILED: {out.stderr[-200:]}")

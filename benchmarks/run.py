@@ -44,6 +44,7 @@ def main() -> None:
         "kernels": lambda: kernels.run(fast=args.fast),
         "roofline": lambda: roofline.run(fast=args.fast),
         "stream": lambda: stream_bench.run(smoke=args.fast),
+        "stream-devices": lambda: stream_bench.run_sharded(smoke=args.fast),
         "autotune": lambda: autotune_bench.run(fast=args.fast),
         "iterloop": lambda: iterloop.run(fast=args.fast),
     }

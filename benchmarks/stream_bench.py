@@ -11,6 +11,16 @@ Three measurements per run:
 * ``query``   — lane-batched query service throughput vs sequential
   single-source runs, plus the cache-hit path.
 
+``run_sharded`` (CLI: ``--devices N``) adds the mesh-serving leg: the
+same serving stack with ``HyTMConfig.mesh_axis`` set, run in a
+subprocess on N forced-host devices (jax locks the device count at first
+init) — lane-batched sharded queries, scatter-patched updates against
+the device-sharded (P_pad, B) grid, and warm-started sharded incremental
+recomputation vs a cold sharded restart.  ``--selfcheck`` gates the
+sharded leg: incremental must converge in strictly fewer sweep
+iterations than the cold restart (and match it bit-for-bit) — the CI
+acceptance gate for the sharded warm-start path.
+
 ``--smoke`` (also ``run(smoke=True)``) shrinks everything to finish in
 well under 30 s on CPU — the CI configuration.
 """
@@ -18,6 +28,9 @@ well under 30 s on CPU — the CI configuration.
 from __future__ import annotations
 
 import argparse
+import subprocess
+import sys
+import textwrap
 import time
 
 import numpy as np
@@ -120,13 +133,135 @@ def run(smoke: bool = False, n_nodes: int | None = None,
     }
 
 
+_SHARDED_SERVING_SCRIPT = """
+    import time
+    import numpy as np
+    import jax
+    from repro.core.hytm import HyTMConfig, run_hytm
+    from repro.graph.algorithms import SSSP
+    from repro.graph.generators import rmat_graph
+    from repro.stream import GraphService, random_batch, run_incremental
+
+    n_dev = len(jax.devices())
+    n_nodes = {n_nodes}
+    g = rmat_graph(n_nodes, {n_edges}, seed=23)
+    cfg = HyTMConfig(n_partitions={n_partitions}, async_sweep=False,
+                     mesh_axis="graph")
+    svc = GraphService(g, cfg, max_lanes={lanes})
+    rng = np.random.default_rng(23)
+
+    sources = [0] + rng.integers(0, n_nodes, size={n_queries} - 1).tolist()
+    t0 = time.monotonic()
+    batched = svc.query(SSSP, sources)
+    t_query = time.monotonic() - t0
+
+    # warm-started sharded incremental vs cold sharded restart, per batch
+    rt = svc.dcsr.sharded_runtime_for(SSSP, mesh=svc.mesh, axis="graph")
+    warm_vals = batched[0].values
+    warm_delta = np.zeros(n_nodes, np.float32)
+    t_apply = t_inc = t_cold = 0.0
+    iters_inc = iters_cold = 0
+    edges_applied = 0
+    for _ in range({n_batches}):
+        b = random_batch(svc.dcsr, rng, n_insert={batch_edges} // 2,
+                         n_delete={batch_edges} // 2)
+        t0 = time.monotonic()
+        rep = svc.update(b)
+        t_apply += time.monotonic() - t0
+        edges_applied += len(b)
+
+        t0 = time.monotonic()
+        inc = run_incremental(svc.dcsr, SSSP, [rep], warm_vals, warm_delta,
+                              source=0, config=cfg, mesh=svc.mesh)
+        t_inc += time.monotonic() - t0
+        iters_inc += inc.iterations
+
+        t0 = time.monotonic()
+        cold = run_hytm(None, SSSP, source=0, config=cfg, runtime=rt,
+                        mesh=svc.mesh)
+        t_cold += time.monotonic() - t0
+        iters_cold += cold.iterations
+
+        np.testing.assert_array_equal(inc.values, cold.values)
+        warm_vals, warm_delta = inc.values, inc.delta
+    print(f"RESULT,{{n_dev}},{{t_query * 1e6:.1f}},{{t_apply * 1e6:.1f}},"
+          f"{{edges_applied}},{{t_inc * 1e6:.1f}},{{t_cold * 1e6:.1f}},"
+          f"{{iters_inc}},{{iters_cold}}")
+"""
+
+
+def run_sharded(n_devices: int = 4, smoke: bool = False,
+                selfcheck: bool = False) -> dict:
+    """Mesh-serving leg on ``n_devices`` forced-host devices (its own
+    subprocess — jax locks the device count at first init).  With
+    ``selfcheck`` the run exits non-zero unless sharded incremental
+    recomputation beats the cold sharded restart in sweep iterations."""
+    if smoke:
+        kw = dict(n_nodes=800, n_edges=6_400, n_partitions=8,
+                  n_batches=3, batch_edges=32, n_queries=4, lanes=4)
+    else:
+        kw = dict(n_nodes=4_000, n_edges=64_000, n_partitions=16,
+                  n_batches=4, batch_edges=128, n_queries=8, lanes=4)
+    from repro.launch.mesh import forced_host_device_env
+
+    out = subprocess.run(
+        [sys.executable, "-c",
+         textwrap.dedent(_SHARDED_SERVING_SCRIPT.format(**kw))],
+        capture_output=True, text=True, timeout=600,
+        env=forced_host_device_env(n_devices),
+    )
+    if out.returncode != 0:
+        emit(f"stream/sharded_devices_{n_devices}", 0.0,
+             f"FAILED: {out.stderr[-300:]}")
+        raise SystemExit(
+            f"sharded serving leg failed:\n{out.stderr[-3000:]}")
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT,")][0]
+    (_, n_dev, t_query, t_apply, edges, t_inc, t_cold,
+     iters_inc, iters_cold) = line.split(",")
+    nq, nb = kw["n_queries"], kw["n_batches"]
+    emit(f"stream/sharded{n_dev}_query_batched", float(t_query) / nq,
+         f"lanes={kw['lanes']} devices={n_dev}")
+    emit(f"stream/sharded{n_dev}_update_apply", float(t_apply) / nb,
+         f"edges={edges}")
+    emit(f"stream/sharded{n_dev}_recompute_incremental",
+         float(t_inc) / nb, f"iters={iters_inc}")
+    emit(f"stream/sharded{n_dev}_recompute_cold", float(t_cold) / nb,
+         f"iters={iters_cold} iter_savings="
+         f"{(1 - int(iters_inc) / max(int(iters_cold), 1)) * 100:.0f}%")
+    rows = {"iters_inc": int(iters_inc), "iters_cold": int(iters_cold)}
+    if selfcheck:
+        if not rows["iters_inc"] < rows["iters_cold"]:
+            raise SystemExit(
+                f"SELFCHECK FAILED: sharded incremental took "
+                f"{rows['iters_inc']} iterations vs cold restart "
+                f"{rows['iters_cold']}")
+        print(f"# SELFCHECK OK: sharded incremental {rows['iters_inc']} "
+              f"iters < cold restart {rows['iters_cold']} iters "
+              f"on {n_dev} devices")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny configuration (<30 s on CPU; CI mode)")
+    ap.add_argument("--devices", type=int, default=0, metavar="N",
+                    help="also run the sharded serving leg on N "
+                         "forced-host devices (subprocess)")
+    ap.add_argument("--selfcheck", action="store_true",
+                    help="gate the sharded leg: incremental must beat "
+                         "the cold sharded restart (requires --devices)")
     args = ap.parse_args()
+    if args.selfcheck and not args.devices:
+        raise SystemExit("--selfcheck needs --devices N")
     print("name,us_per_call,derived")
     t0 = time.monotonic()
+    if args.devices:
+        out = run_sharded(n_devices=args.devices, smoke=args.smoke,
+                          selfcheck=args.selfcheck)
+        emit("stream/sharded_total_wall", (time.monotonic() - t0) * 1e6,
+             f"iters_inc={out['iters_inc']} iters_cold={out['iters_cold']}")
+        return
     out = run(smoke=args.smoke)
     emit("stream/total_wall", (time.monotonic() - t0) * 1e6,
          f"iters_inc={out['iters_inc']} iters_full={out['iters_full']}")

@@ -503,11 +503,18 @@ def count_driver_dispatches():
 _WARM_SIGNATURES: set = set()
 
 
-def _consume_warm(signature) -> bool:
+def _consume_warm(signature, registry: set | None = None) -> bool:
     """True if ``signature`` was already dispatched (compiled) in this
-    process; marks it warm either way."""
-    warm = signature in _WARM_SIGNATURES
-    _WARM_SIGNATURES.add(signature)
+    process; marks it warm either way.  ``registry`` overrides the
+    module-level set — callers whose compiled function does NOT live for
+    the process lifetime (the sharded drivers: a DeltaCSR
+    merge-compaction rebuilds the jitted chunk with a fresh compile
+    cache) scope the warm signatures to the function's own lifetime, so
+    a rebuilt function's first dispatch is correctly cold even when its
+    shapes were seen before."""
+    reg = _WARM_SIGNATURES if registry is None else registry
+    warm = signature in reg
+    reg.add(signature)
     return warm
 
 
@@ -558,7 +565,11 @@ def run_hytm(
     With ``config.sync_every > 1`` the state is *donated* to the chunked
     driver (``hytm_chunk``): on accelerator backends the caller's
     ``initial_state`` buffers are invalidated by the first chunk — pass a
-    copy if they must survive the run.
+    copy if they must survive the run.  Warm-start composes with
+    ``config.mesh_axis``: the sharded driver replicates the triple over
+    the mesh and resumes the shard_mapped chunk from it, bit-identical to
+    the single-device ``async_sweep=False`` warm run for min-combine
+    programs (``run_hytm_sharded``).
 
     ``calibrator``: an external ``repro.autotune.OnlineCalibrator`` to
     learn into (and start from) instead of a fresh per-run one — how
@@ -566,14 +577,16 @@ def run_hytm(
     when ``config.autotune`` is set.
     """
     if config.mesh_axis is not None:
-        assert initial_state is None, "sharded path has no warm-start yet"
         # late import: graph_shard depends on this module's dataclasses
         from repro.dist.graph_shard import run_hytm_sharded
 
         return run_hytm_sharded(
             g, program, source=source, config=config, n_hubs=n_hubs,
             mesh=mesh, runtime=runtime, calibrator=calibrator,
+            initial_state=initial_state,
         )
+    if g is None and runtime is None:
+        raise ValueError("run_hytm needs a graph or a prebuilt runtime")
     rt = runtime if runtime is not None else build_runtime(
         g, config, n_hubs=n_hubs,
         weighted_norm=program.use_delta and program.weighted,
@@ -596,7 +609,10 @@ def run_hytm(
         # twice (None -> array would retrace on iteration 2)
         correction = jnp.asarray(calib.correction(), jnp.float32)
 
-    assert config.sync_every >= 1, config.sync_every
+    # raised (not asserted): under ``python -O`` an assert vanishes and a
+    # zero/negative chunk size would silently run the wrong driver
+    if config.sync_every < 1:
+        raise ValueError(f"sync_every must be >= 1, got {config.sync_every}")
     rows: dict[str, list] = {k: [] for k in HISTORY_KEYS}
     t0 = time.monotonic()
     iters = 0

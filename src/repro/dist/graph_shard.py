@@ -71,6 +71,7 @@ from repro.core.hytm import (
     HyTMConfig,
     HyTMResult,
     HyTMState,
+    _consume_warm,
     chunked_while,
     quiet_donation,
 )
@@ -115,9 +116,13 @@ class ShardedRuntime:
     n_nodes: int
     n_partitions: int          # padded: multiple of mesh.shape[axis]
     n_hub_partitions: int
-    # (program, config) -> jitted iteration; reusing a runtime across
-    # run_hytm_sharded calls reuses the compiled sweep instead of
-    # retracing a fresh shard_map closure every run
+    # (program, config[, chunk]) -> jitted iteration/chunk; reusing a
+    # runtime across run_hytm_sharded calls reuses the compiled sweep
+    # instead of retracing a fresh shard_map closure every run.  The
+    # device buffers above are *arguments* of the compiled functions, not
+    # baked-in constants, so a holder (DeltaCSR's sharded view) may swap
+    # them between calls — same shapes reuse the compiled sweep, changed
+    # shapes (merge-compaction) re-specialize through the jit cache.
     iteration_cache: dict = field(default_factory=dict, repr=False)
 
 
@@ -141,7 +146,12 @@ def build_sharded_runtime(
     weighted_norm: bool = False,
 ) -> ShardedRuntime:
     axis = config.mesh_axis
-    assert axis in mesh.axis_names, (axis, mesh.axis_names)
+    if axis not in mesh.axis_names:
+        # a raised guard, not an assert: under ``python -O`` an assert
+        # vanishes and the sweep would shard over a nonexistent axis
+        raise ValueError(
+            f"config.mesh_axis={axis!r} is not an axis of the mesh "
+            f"(axes: {mesh.axis_names})")
     n_dev = int(mesh.shape[axis])
 
     table = _pad_table(
@@ -291,7 +301,16 @@ def _make_iteration_impl(
     """Build the untraced per-iteration body for one runtime/program.
     ``make_sharded_iteration`` jits it directly (the sync_every=1 driver);
     ``make_sharded_chunk`` inlines it in a ``lax.while_loop`` so K
-    shard_mapped iterations share one dispatch."""
+    shard_mapped iterations share one dispatch; ``vmap`` lifts it over a
+    lane dimension (``make_sharded_batched_chunk``).
+
+    ``rt`` contributes only the *static* structure (mesh, axis, node and
+    partition counts) — the device buffers are traced **arguments** of
+    the returned ``iteration(state, blocks, parts, out_degree, zc_req,
+    inv_deg, correction)``, never baked-in constants.  That is what lets
+    ``DeltaCSR``'s sharded view patch the (P, B) edge-block grid between
+    calls while the compiled sweep survives: same shapes hit the jit
+    cache, a merge-compaction's new shapes re-specialize through it."""
     mesh, axis = rt.mesh, rt.axis
     n = rt.n_nodes
     P_total = rt.n_partitions
@@ -309,7 +328,7 @@ def _make_iteration_impl(
             stats_slice.active_edges > 0, config.forced_engine, NONE
         ).astype(jnp.int32)
 
-    def sweep_pass(stats, second_mask, frontier, operand, delta_mass,
+    def sweep_pass(blocks, stats, second_mask, frontier, operand, delta_mass,
                    correction, pass_two: bool):
         """One shard_mapped sweep pass; returns merged (agg, touched) plus
         the engines each device selected (for the second pass mask)."""
@@ -345,10 +364,18 @@ def _make_iteration_impl(
             out_specs=(rep, rep),
             check_rep=False,
         )
-        return fn(rt.blocks, stats, second_mask, delta_mass, frontier,
+        return fn(blocks, stats, second_mask, delta_mass, frontier,
                   operand, correction)
 
-    def iteration(state: HyTMState, correction: jax.Array | None = None):
+    def iteration(
+        state: HyTMState,
+        blocks: BlockedEdges,
+        parts: DevicePartitions,
+        out_degree: jax.Array,
+        zc_req: jax.Array,
+        inv_deg: jax.Array,
+        correction: jax.Array | None = None,
+    ):
         if correction is None:
             # identity correction: float multiply by 1.0 is exact, so the
             # uncorrected path stays bit-identical to the oracle contract
@@ -360,12 +387,12 @@ def _make_iteration_impl(
         # core.hytm: only the 'delta' CDS mode reads the Δ mass, and
         # min-combine programs carry an identically-zero Δ — skip the
         # segment-sum in both cases.
-        stats = partition_stats(frontier, rt.out_degree, rt.zc_req, rt.parts)
+        stats = partition_stats(frontier, out_degree, zc_req, parts)
         if program.combine == MIN or mode != "delta":
             delta_mass = jnp.zeros(P_total, jnp.float32)
         else:
             delta_mass = jax.ops.segment_sum(
-                jnp.abs(delta) * frontier, rt.parts.vertex_part_id,
+                jnp.abs(delta) * frontier, parts.vertex_part_id,
                 num_segments=P_total,
             )
 
@@ -393,12 +420,12 @@ def _make_iteration_impl(
 
         # (4) pass 1: every active partition, synchronous merge
         if program.combine == SUM:
-            operand = program.damping * delta * rt.inv_deg
+            operand = program.damping * delta * inv_deg
         else:
             operand = values
         agg, touched = sweep_pass(
-            stats, second_mask, frontier, operand, delta_mass, correction,
-            pass_two=False,
+            blocks, stats, second_mask, frontier, operand, delta_mass,
+            correction, pass_two=False,
         )
         values1, delta1, activated = _apply_merged(
             values, delta, frontier, agg, touched, program,
@@ -412,16 +439,16 @@ def _make_iteration_impl(
             # incremental repro.stream path) must keep propagating.
             frontier2 = jnp.abs(delta1) > program.tolerance
         if program.combine == SUM:
-            operand2 = program.damping * delta1 * rt.inv_deg
+            operand2 = program.damping * delta1 * inv_deg
         else:
             operand2 = values1
         agg2, touched2 = sweep_pass(
-            stats, second_mask, frontier2, operand2, delta_mass, correction,
-            pass_two=True,
+            blocks, stats, second_mask, frontier2, operand2, delta_mass,
+            correction, pass_two=True,
         )
         # pass-2 consumption only touches re-processed partitions
-        processed2 = second_mask[rt.parts.vertex_part_id] & (
-            plan.engines[rt.parts.vertex_part_id] != NONE
+        processed2 = second_mask[parts.vertex_part_id] & (
+            plan.engines[parts.vertex_part_id] != NONE
         )
         values2, delta2, activated2 = _apply_merged(
             values1, delta1, frontier2 & processed2, agg2, touched2, program,
@@ -459,10 +486,19 @@ def _make_iteration_impl(
     return iteration
 
 
+def _runtime_args(rt: ShardedRuntime) -> tuple:
+    """The traced device-buffer arguments every compiled sharded driver
+    takes, read fresh from the runtime at each dispatch (so a patched
+    view — DeltaCSR's sharded grid — is always what executes)."""
+    return rt.blocks, rt.parts, rt.out_degree, rt.zc_req, rt.inv_deg
+
+
 def make_sharded_iteration(
     rt: ShardedRuntime, program: VertexProgram, config: HyTMConfig
 ):
-    """Build the jitted per-iteration function for one runtime/program."""
+    """Build the jitted per-iteration function for one runtime/program:
+    ``iteration(state, blocks, parts, out_degree, zc_req, inv_deg,
+    correction)``."""
     return jax.jit(_make_iteration_impl(rt, program, config))
 
 
@@ -478,23 +514,85 @@ def make_sharded_chunk(
     history buffers additionally carry ``merged_entries`` — the
     per-iteration input of the host-side ICI-level accounting
     (``ici_level_cost``), which runs over the drained rows once per
-    chunk."""
+    chunk.  The edge blocks and vertex vectors are traced arguments (see
+    ``_make_iteration_impl``), so warm-started reruns over a patched
+    ``DeltaCSR`` view reuse this compiled chunk."""
     impl = _make_iteration_impl(rt, program, config)
     keys = HISTORY_KEYS + ("merged_entries",)
 
     @partial(jax.jit, donate_argnames=("state", "history"))
-    def chunk_fn(state: HyTMState, history: dict, correction: jax.Array):
+    def chunk_fn(state: HyTMState, history: dict, blocks, parts, out_degree,
+                 zc_req, inv_deg, correction: jax.Array):
         return chunked_while(
-            lambda st: impl(st, correction), state, history, chunk)
+            lambda st: impl(st, blocks, parts, out_degree, zc_req, inv_deg,
+                            correction),
+            state, history, chunk)
 
-    shapes_cell: dict = {}  # eval_shape once, not once per chunk dispatch
+    shapes_cell: dict = {}  # eval_shape once per shape signature
 
     def init_history(state: HyTMState, correction: jax.Array) -> dict:
-        if "info" not in shapes_cell:
-            shapes_cell["info"] = jax.eval_shape(impl, state, correction)[1]
-        return init_history_buffers(shapes_cell["info"], chunk, keys=keys)
+        shape_key = (rt.blocks.src.shape, rt.parts.n_partitions,
+                     rt.parts.block_size)
+        if shape_key not in shapes_cell:
+            shapes_cell[shape_key] = jax.eval_shape(
+                impl, state, *_runtime_args(rt), correction)[1]
+        return init_history_buffers(shapes_cell[shape_key], chunk, keys=keys)
 
     return chunk_fn, init_history
+
+
+def make_sharded_batched_chunk(
+    rt: ShardedRuntime, program: VertexProgram, config: HyTMConfig,
+    chunk: int,
+):
+    """Service lane sweep over the mesh (``GraphService`` with
+    ``config.mesh_axis`` set): up to ``chunk`` iterations of the sharded
+    iteration, ``vmap``ped over the leading lane dimension of ``state``
+    — each lane runs its own cost model / engine selection / schedule
+    over its own frontier, while the edge blocks stay sharded over the
+    mesh axis and every relaxation merges with the same bulk-synchronous
+    pmin/psum collectives as the single-lane sweep (one batched
+    collective carries all lanes).  Early exit sums ``next_active``
+    across lanes, mirroring ``service._batched_chunk``: converged lanes
+    idle as no-ops only while a straggler is still inside the chunk.
+
+    The service reads no per-iteration history; the loop carries running
+    reductions (summed per-engine modeled seconds + mispredictions — the
+    calibrator's chunk-granular observation inputs) plus a ``(chunk,)``
+    row of lane-summed ``merged_entries`` for the host-side ICI-level
+    accounting.  Returns ``(state, n_done, last_active_total,
+    per_engine_sum, mispred_sum, merged_rows)``."""
+    impl = _make_iteration_impl(rt, program, config)
+
+    @partial(jax.jit, donate_argnames=("state",))
+    def chunk_fn(state: HyTMState, blocks, parts, out_degree, zc_req,
+                 inv_deg, correction):
+        def one(s):
+            return impl(s, blocks, parts, out_degree, zc_req, inv_deg,
+                        correction)
+
+        def cond(carry):
+            _s, i, prev_active, _pe, _mp, _me = carry
+            return (i < chunk) & (prev_active != 0)
+
+        def body(carry):
+            s, i, _prev, pe, mp, me = carry
+            s2, info = jax.vmap(one)(s)
+            return (
+                s2,
+                i + 1,
+                jnp.sum(info["next_active"]),
+                pe + jnp.sum(info["per_engine_time"], axis=0),
+                mp + jnp.sum(info["mispredictions"]),
+                me.at[i].set(jnp.sum(info["merged_entries"])),
+            )
+
+        init = (state, jnp.int32(0), jnp.int32(1),
+                jnp.zeros(3, jnp.float32), jnp.int32(0),
+                jnp.zeros(chunk, jnp.int32))
+        return jax.lax.while_loop(cond, body, init)
+
+    return chunk_fn
 
 
 # --------------------------------------------------------------------------
@@ -584,6 +682,7 @@ def run_hytm_sharded(
     mesh: jax.sharding.Mesh | None = None,
     runtime: ShardedRuntime | None = None,
     calibrator=None,
+    initial_state: HyTMState | None = None,
 ) -> HyTMResult:
     """Drop-in ``run_hytm`` over a 1-D device mesh.
 
@@ -591,17 +690,45 @@ def run_hytm_sharded(
     modeled transfer accounting as single-device, and state trajectories
     matching the single-device ``async_sweep=False`` run (exact for
     min-combine programs; up to FP summation order for sum-combine).
-    """
-    if mesh is None:
-        from repro.launch.mesh import make_graph_mesh
 
-        mesh = make_graph_mesh(axis=config.mesh_axis)
-    rt = runtime if runtime is not None else build_sharded_runtime(
-        g, config, mesh, n_hubs=n_hubs,
-        weighted_norm=program.use_delta and program.weighted,
-    )
-    values, delta, frontier = program.init_state(g.n_nodes, source)
-    state = HyTMState(values=values, delta=delta, frontier=frontier)
+    ``initial_state`` warm-starts the sharded convergence loop from an
+    arbitrary (values, Δ, frontier) triple — the entry point of the
+    sharded incremental path (repro.stream.incremental with
+    ``config.mesh_axis`` set).  The warm state is re-placed replicated
+    over the mesh (the same sharding the cold start's init state takes),
+    so it re-enters the compiled chunk under identical layout; the warm
+    equivalence contract mirrors the cold one (warm sharded ==
+    single-device ``async_sweep=False`` warm, bit-for-bit for
+    min-combine).  With ``runtime`` and ``initial_state`` both given,
+    ``g`` may be ``None``.
+    """
+    if runtime is not None:
+        rt = runtime
+        mesh = rt.mesh if mesh is None else mesh
+    else:
+        if g is None:
+            raise ValueError(
+                "run_hytm_sharded needs a graph or a prebuilt runtime")
+        if mesh is None:
+            from repro.launch.mesh import make_graph_mesh
+
+            mesh = make_graph_mesh(axis=config.mesh_axis)
+        rt = build_sharded_runtime(
+            g, config, mesh, n_hubs=n_hubs,
+            weighted_norm=program.use_delta and program.weighted,
+        )
+    if initial_state is None:
+        values, delta, frontier = program.init_state(rt.n_nodes, source)
+        state = HyTMState(values=values, delta=delta, frontier=frontier)
+    else:
+        # replicate the warm triple over the mesh — identical placement to
+        # the cold start, so the compiled sweep sees one layout either way
+        rep = NamedSharding(mesh, P())
+        state = HyTMState(
+            values=jax.device_put(jnp.asarray(initial_state.values), rep),
+            delta=jax.device_put(jnp.asarray(initial_state.delta), rep),
+            frontier=jax.device_put(jnp.asarray(initial_state.frontier), rep),
+        )
 
     n_dev = int(mesh.shape[config.mesh_axis])
 
@@ -616,7 +743,8 @@ def run_hytm_sharded(
         correction = jnp.asarray(calib.correction(), jnp.float32)
         corr_np = np.asarray(correction, dtype=float)
 
-    assert config.sync_every >= 1, config.sync_every
+    if config.sync_every < 1:
+        raise ValueError(f"sync_every must be >= 1, got {config.sync_every}")
     rows: dict[str, list] = {k: [] for k in HISTORY_KEYS}
     # second-level accounting (per iteration: the exchange mode depends on
     # the live active-vertex count, and feedback can reweigh the choice)
@@ -624,7 +752,7 @@ def run_hytm_sharded(
 
     def charge_ici(merged_entries: float) -> None:
         ib, it_, ie = ici_level_cost(
-            g.n_nodes, float(merged_entries), n_dev, config.ici_link, corr_np,
+            rt.n_nodes, float(merged_entries), n_dev, config.ici_link, corr_np,
         )
         ici_hist["ici_bytes"].append(ib)
         ici_hist["ici_time"].append(it_)
@@ -648,20 +776,28 @@ def run_hytm_sharded(
             if cached is None:
                 chunk_fn, init_history = make_sharded_chunk(
                     rt, program, config, chunk)
-                cached = {"fn": chunk_fn, "init": init_history, "warm": False}
+                cached = {"fn": chunk_fn, "init": init_history,
+                          "seen": set()}
                 rt.iteration_cache[key] = cached
             if chunk != cur_chunk:
                 # allocated once per chunk size; afterwards the drained
                 # buffers cycle back in (donated reuse on accelerators)
                 history = cached["init"](state, corr_arr)
                 cur_chunk = chunk
-            # each cached chunk_fn is its own jit (its own compile
-            # cache), so its first dispatch is exactly the compiling one
-            warm, cached["warm"] = cached["warm"], True
+            # warm iff THIS chunk_fn already dispatched THESE shapes: the
+            # seen-set lives on the cached entry, so when a DeltaCSR
+            # merge-compaction drops the entry (fresh jit cache) or moves
+            # the block grid, the recompiling dispatch is cold and its
+            # wall time never feeds the calibrator
+            warm = _consume_warm(
+                (rt.blocks.src.shape, rt.parts.n_partitions,
+                 rt.parts.block_size),
+                registry=cached["seen"],
+            )
             t_chunk = time.monotonic()
             with quiet_donation():
                 state, history, n_done, last_active, pe_sum = cached["fn"](
-                    state, history, corr_arr)
+                    state, history, *_runtime_args(rt), corr_arr)
             n_done = int(n_done)
             iters += n_done
             if calib is not None:
@@ -690,7 +826,7 @@ def run_hytm_sharded(
             rt.iteration_cache[cache_key] = iteration
         for _ in range(config.max_iters):
             t_iter = time.monotonic()
-            state, info = iteration(state, correction)
+            state, info = iteration(state, *_runtime_args(rt), correction)
             iters += 1
             # charge the ICI level under the SAME correction this
             # iteration's HBM-level selection ran with (the update below

@@ -48,3 +48,33 @@ def make_graph_mesh(n_devices: int | None = None, axis: str = "graph"):
     if n_devices is None:
         n_devices = len(jax.devices())
     return _mesh((n_devices,), (axis,))
+
+
+def forced_host_device_env(n_devices: int) -> dict:
+    """Environment for a subprocess that must see ``n_devices`` fake CPU
+    devices — jax locks the device count at first backend init, so
+    multi-device tests and benchmarks re-exec with this env instead of
+    reconfiguring the parent.  The single definition of the recipe
+    (``tests/_forced_devices.py`` and the device-sweep benchmarks both
+    build on it), so an environment change lands in one place:
+
+    * ``XLA_FLAGS=--xla_force_host_platform_device_count=N``;
+    * ``JAX_PLATFORMS=cpu`` — forced counts only exist on the CPU
+      backend; without the pin, a machine with an accelerator would run
+      everything on 1 real device;
+    * ``PYTHONPATH`` led by this checkout's ``src`` (derived from the
+      installed ``repro`` package, so it works from any cwd).
+    """
+    import os
+
+    import repro
+
+    # repro is a namespace package (no __init__.py): locate src via
+    # __path__, not __file__ (which is None)
+    src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["JAX_PLATFORMS"] = "cpu"
+    prior = env.get("PYTHONPATH")
+    env["PYTHONPATH"] = src + (os.pathsep + prior if prior else "")
+    return env

@@ -35,7 +35,9 @@ from __future__ import annotations
 import dataclasses
 from collections import defaultdict
 from dataclasses import dataclass, field
+from typing import Any
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -66,7 +68,14 @@ class EdgeBatch:
         self.src = np.asarray(self.src, dtype=np.int64)
         self.dst = np.asarray(self.dst, dtype=np.int64)
         self.weight = np.asarray(self.weight, dtype=np.float32)
-        assert self.op.shape == self.src.shape == self.dst.shape == self.weight.shape
+        if not (self.op.shape == self.src.shape == self.dst.shape
+                == self.weight.shape):
+            # raised (not asserted): a ragged batch under ``python -O``
+            # would silently pair ops with the wrong endpoints
+            raise ValueError(
+                "EdgeBatch fields must be parallel arrays; got shapes "
+                f"op={self.op.shape} src={self.src.shape} "
+                f"dst={self.dst.shape} weight={self.weight.shape}")
 
     def __len__(self) -> int:
         return len(self.op)
@@ -122,20 +131,35 @@ class DeltaCSR:
 
       * partition p's live edges are ``_src/_dst/_w[p*B : p*B + counts[p]]``
         (B = ``block_size``, uniform block capacity);
-      * device arrays mirror the host log exactly (patched per batch);
+      * device arrays mirror the host log exactly (patched per batch) —
+        including every registered *sharded* view
+        (``sharded_runtime_for``): the same lanes scatter into the
+        device-sharded (P_pad, B) grid, so the mesh sees the same edge
+        multiset as the single device at every version;
       * ``seg_start`` (per-vertex segment starts, feeding the zero-copy
-        alignment term of Eq. 3) is frozen at the last merge — inserted
-        edges live at the partition tail, so the ZC *alignment* flag is an
-        approximation until the next merge (the request-count base uses
-        the live out-degrees and stays exact).
+        alignment term of Eq. 3): with ``refresh_seg_start=True`` (the
+        default) dirty partitions re-derive it on every patch from the
+        live-degree prefix-sum, tracking the layout the next merge will
+        realize; ``refresh_seg_start=False`` keeps the historical
+        frozen-at-last-merge approximation, whose alignment term drifts
+        as deletes accumulate (the request-count base uses the live
+        out-degrees and stays exact either way).
     """
 
     def __init__(self, g: CSRGraph, config: HyTMConfig | None = None,
-                 slack: float = 0.5, min_slack: int = 128):
+                 slack: float = 0.5, min_slack: int = 128,
+                 refresh_seg_start: bool = True):
         self.config = config if config is not None else HyTMConfig()
         self.n_nodes = g.n_nodes
         self.slack = slack
         self.min_slack = min_slack
+        # True (default): recompute the per-vertex ``seg_start`` of dirty
+        # partitions on every patch (a prefix-sum over live degrees), so
+        # the Eq. 3 zero-copy alignment term tracks the layout the next
+        # merge-compaction will realize instead of drifting as deletes
+        # accumulate.  False keeps the historical frozen-at-last-merge
+        # approximation (tests/test_stream.py quantifies the drift).
+        self.refresh_seg_start = refresh_seg_start
         self.version = 0
         self.layout_version = 0
         self.dirty: set[int] = set()  # dirty partitions since last merge
@@ -145,6 +169,10 @@ class DeltaCSR:
         # results survive across queries (keys carry the shapes — safe
         # through merge-compaction re-blocking)
         self._info_shape_cache: dict = {}
+        # sharded (P, B) grid views (graph_shard.ShardedRuntime), keyed by
+        # (axis, device ids, weighted-norm flag); patched in lock-step
+        # with the single-device buffers and rebuilt on merge-compaction
+        self._sharded_views: dict[tuple, Any] = {}
         self._build_layout(g)
 
     # ------------------------------------------------------------ construction
@@ -223,6 +251,13 @@ class DeltaCSR:
             self.csr.out_degree, self.csr.seg_start, self.config.link
         )
         self._inv_deg_cache.clear()
+        # merge-compaction re-blocks the grid: re-upload every sharded
+        # view from the fresh layout (per device, via the row sharding)
+        # and drop its compiled sweeps — the static partition grid the
+        # cached closures were built around may have moved
+        for (_axis, _devs, weighted), rt in self._sharded_views.items():
+            self._refill_sharded_view(rt, weighted)
+            rt.iteration_cache.clear()
 
     # ------------------------------------------------------------- inspection
     @property
@@ -257,7 +292,18 @@ class DeltaCSR:
     # ---------------------------------------------------------------- updates
     def apply(self, batch: EdgeBatch) -> UpdateReport:
         """Apply one batch; patch device buffers (or merge-compact on
-        overflow); bump ``version``; return the report."""
+        overflow); bump ``version``; return the report.
+
+        Sharded equivalence guarantee: registered sharded views
+        (``sharded_runtime_for``) are patched in the same step — inserts,
+        deletes, and reweights scatter into the device-sharded (P_pad, B)
+        grid without re-blocking, and a merge-compaction re-partitions
+        and re-uploads them per device.  After any sequence of ``apply``
+        calls, a warm-started sharded run over the view is bit-identical
+        to the warm-started single-device ``async_sweep=False`` run for
+        min-combine programs (values, iterations, transfer accounting,
+        engine picks) and tolerance-bounded for sum-combine — the
+        contract ``tests/test_stream_sharded.py`` enforces."""
         n = self.n_nodes
         if len(batch) and (
             batch.src.min() < 0 or batch.src.max() >= n
@@ -316,7 +362,7 @@ class DeltaCSR:
             self.dirty = set()
             dirty = set(range(self.n_partitions))
         else:
-            self._patch_device(touched)
+            self._patch_device(touched, dirty)
             self.dirty |= dirty
 
         self.version += 1
@@ -392,9 +438,13 @@ class DeltaCSR:
         touched.add(slot)
         return old
 
-    def _patch_device(self, touched: set[int]) -> None:
+    def _patch_device(self, touched: set[int], dirty: set[int] = frozenset()) -> None:
         """Scatter the touched lanes + refresh the (P,)/(n,) vectors —
-        the 'patched, not rebuilt' contract (shapes never change here)."""
+        the 'patched, not rebuilt' contract (shapes never change here).
+        Registered sharded views are patched in the same step, so the
+        (P, B) grid on the mesh mirrors the single-device buffers at
+        every version."""
+        idx = None
         if touched:
             idx = np.fromiter(sorted(touched), np.int64, len(touched))
             # pad the scatter index to a power-of-two bucket (repeating the
@@ -417,18 +467,46 @@ class DeltaCSR:
         self.parts = dataclasses.replace(
             self.parts, part_edges=jnp.asarray(self.counts, jnp.int32)
         )
+        if self.refresh_seg_start:
+            # re-derive the ZC alignment base of dirty partitions from the
+            # live degree prefix-sum (what the next merge will realize)
+            self._refresh_seg_start(dirty)
         # request-count base tracks the live degrees; the alignment term
-        # keeps the last-merge seg_start (documented approximation)
+        # uses the refreshed seg_start (or, with refresh_seg_start=False,
+        # the last-merge snapshot — the historical approximation)
         self.zc_req = zc_request_counts(
             self.csr.out_degree, self.csr.seg_start, self.config.link
         )
         self._inv_deg_cache.clear()
+        for (_axis, _devs, weighted), rt in self._sharded_views.items():
+            self._patch_sharded_view(rt, weighted, idx)
+
+    def _refresh_seg_start(self, dirty) -> None:
+        """Recompute ``seg_start`` for ``dirty`` partitions: vertex v's
+        segment starts at the partition base plus the summed live degrees
+        of the vertices before it — exactly the dense layout the next
+        merge-compaction materializes, so the Eq. 3 alignment flags stop
+        drifting as swap-removes scramble the block interior.  O(vertices
+        of the dirty partitions) on host; uploaded as one (n,) vector."""
+        changed = False
+        B = self.block_size
+        for p in sorted(dirty):
+            v0, v1 = int(self.vertex_start[p]), int(self.vertex_start[p + 1])
+            if v1 <= v0:
+                continue
+            deg = self.out_deg[v0:v1].astype(np.int64)
+            seg = p * B + np.concatenate(([0], np.cumsum(deg[:-1])))
+            if not np.array_equal(seg, self._seg_start_host[v0:v1]):
+                self._seg_start_host[v0:v1] = seg
+                changed = True
+        if changed:
+            self.csr = dataclasses.replace(
+                self.csr,
+                seg_start=jnp.asarray(self._seg_start_host, jnp.int32),
+            )
 
     # ---------------------------------------------------------------- runtime
-    def runtime_for(self, program: VertexProgram) -> Runtime:
-        """A ``core.hytm.Runtime`` view of the current version (shared
-        device buffers — do not mutate between ``apply`` calls)."""
-        weighted = bool(program.use_delta and program.weighted)
+    def _inv_deg(self, weighted: bool) -> jnp.ndarray:
         inv = self._inv_deg_cache.get(weighted)
         if inv is None:
             if weighted:
@@ -441,11 +519,152 @@ class DeltaCSR:
                     self.csr.out_degree.astype(jnp.float32), 1.0
                 )
             self._inv_deg_cache[weighted] = inv
+        return inv
+
+    def runtime_for(self, program: VertexProgram) -> Runtime:
+        """A ``core.hytm.Runtime`` view of the current version (shared
+        device buffers — do not mutate between ``apply`` calls)."""
+        weighted = bool(program.use_delta and program.weighted)
         return Runtime(
             csr=self.csr, parts=self.parts, zc_req=self.zc_req,
-            inv_deg=inv, n_hub_partitions=0,
+            inv_deg=self._inv_deg(weighted), n_hub_partitions=0,
             info_shape_cache=self._info_shape_cache,
         )
+
+    # --------------------------------------------------------- sharded runtime
+    def sharded_runtime_for(self, program: VertexProgram, mesh=None,
+                            axis: str | None = None):
+        """A ``graph_shard.ShardedRuntime`` view of the current version:
+        the blocked edge log as a (P_pad, B) grid sharded over
+        ``config.mesh_axis`` (P_pad pads the partition count up to a
+        multiple of the mesh size with empty, accounting-neutral rows).
+
+        The view is registered: every subsequent ``apply`` patches its
+        device-sharded buffers by scatter in lock-step with the
+        single-device buffers (insert/delete/reweight land without
+        re-blocking), and a merge-compaction re-partitions and re-uploads
+        it per device (``layout_version`` bump, compiled sweeps dropped).
+        Because the partition structure, live counts, and ``seg_start``
+        base are *shared* with ``runtime_for``'s view, a sharded run over
+        this grid selects the same engines and charges the same transfer
+        bytes as the single-device run at every version — the sharded
+        warm-start equivalence contract (tests/test_stream_sharded.py).
+        """
+        axis = axis if axis is not None else self.config.mesh_axis
+        if axis is None:
+            raise ValueError(
+                "no mesh axis: set config.mesh_axis or pass axis= — use "
+                "runtime_for() for the single-device view")
+        if mesh is None:
+            from repro.launch.mesh import make_graph_mesh
+
+            mesh = make_graph_mesh(axis=axis)
+        if axis not in mesh.axis_names:
+            raise ValueError(
+                f"config.mesh_axis={axis!r} is not an axis of the mesh "
+                f"(axes: {mesh.axis_names})")
+        weighted = bool(program.use_delta and program.weighted)
+        key = (axis, tuple(int(d.id) for d in mesh.devices.flat), weighted)
+        rt = self._sharded_views.get(key)
+        if rt is None:
+            from repro.dist.graph_shard import ShardedRuntime
+
+            rt = ShardedRuntime(
+                mesh=mesh, axis=axis, blocks=None, parts=None,
+                out_degree=None, zc_req=None, inv_deg=None,
+                n_nodes=self.n_nodes, n_partitions=0, n_hub_partitions=0,
+            )
+            self._refill_sharded_view(rt, weighted)
+            self._sharded_views[key] = rt
+        return rt
+
+    def _grid_arrays(self, n_dev: int):
+        """Padded (P_pad, B) host grids of the blocked edge log."""
+        P_real, B = self.n_partitions, self.block_size
+        P_pad = -(-P_real // n_dev) * n_dev
+
+        def grid(a: np.ndarray, fill) -> np.ndarray:
+            out = a.reshape(P_real, B)
+            if P_pad != P_real:
+                out = np.concatenate(
+                    [out, np.full((P_pad - P_real, B), fill, a.dtype)])
+            return out
+
+        return P_pad, grid
+
+    def _refill_sharded_view(self, rt, weighted: bool) -> None:
+        """(Re-)upload a sharded view from the current host layout — the
+        build path and the merge-compaction path (full re-upload per
+        device; between merges ``_patch_sharded_view`` scatters)."""
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        from repro.dist.graph_shard import BlockedEdges
+
+        n_dev = int(rt.mesh.shape[rt.axis])
+        P_pad, grid = self._grid_arrays(n_dev)
+        row = NamedSharding(rt.mesh, PartitionSpec(rt.axis, None))
+        rep = NamedSharding(rt.mesh, PartitionSpec())
+        rt.blocks = BlockedEdges(
+            src=jax.device_put(grid(self._src, 0), row),
+            dst=jax.device_put(grid(self._dst, 0), row),
+            weight=jax.device_put(grid(self._w, np.float32(np.inf)), row),
+            in_range=jax.device_put(grid(self._valid, False), row),
+        )
+        pad = P_pad - self.n_partitions
+        vstart = np.concatenate(
+            [self.vertex_start, np.full(pad, self.vertex_start[-1])])
+        counts = np.concatenate([self.counts, np.zeros(pad, np.int64)])
+        cap_start = np.arange(P_pad + 1, dtype=np.int64) * self.block_size
+        rt.parts = DevicePartitions(
+            vertex_start=jax.device_put(
+                jnp.asarray(vstart, jnp.int32), rep),
+            edge_start=jax.device_put(jnp.asarray(cap_start, jnp.int32), rep),
+            part_edges=jax.device_put(jnp.asarray(counts, jnp.int32), rep),
+            vertex_part_id=jax.device_put(
+                jnp.asarray(self.vertex_part), rep),
+            n_partitions=P_pad,
+            block_size=self.block_size,
+        )
+        rt.out_degree = jax.device_put(self.csr.out_degree, rep)
+        rt.zc_req = jax.device_put(self.zc_req, rep)
+        rt.inv_deg = jax.device_put(self._inv_deg(weighted), rep)
+        rt.n_partitions = P_pad
+
+    def _patch_sharded_view(self, rt, weighted: bool,
+                            idx: np.ndarray | None) -> None:
+        """Scatter the touched lanes into the device-sharded (P_pad, B)
+        grid and refresh the replicated (P,)/(n,) vectors — no
+        re-blocking, no re-upload of untouched rows.  ``idx`` is the
+        (bucket-padded) flat lane index ``_patch_device`` used."""
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        from repro.dist.graph_shard import BlockedEdges
+
+        row = NamedSharding(rt.mesh, PartitionSpec(rt.axis, None))
+        rep = NamedSharding(rt.mesh, PartitionSpec())
+        if idx is not None:
+            B = self.block_size
+            rows_, cols_ = idx // B, idx % B
+            b = rt.blocks
+            rt.blocks = BlockedEdges(
+                src=jax.device_put(
+                    b.src.at[rows_, cols_].set(self._src[idx]), row),
+                dst=jax.device_put(
+                    b.dst.at[rows_, cols_].set(self._dst[idx]), row),
+                weight=jax.device_put(
+                    b.weight.at[rows_, cols_].set(self._w[idx]), row),
+                in_range=jax.device_put(
+                    b.in_range.at[rows_, cols_].set(self._valid[idx]), row),
+            )
+        pad = rt.n_partitions - self.n_partitions
+        counts = np.concatenate([self.counts, np.zeros(pad, np.int64)])
+        rt.parts = dataclasses.replace(
+            rt.parts,
+            part_edges=jax.device_put(jnp.asarray(counts, jnp.int32), rep),
+        )
+        rt.out_degree = jax.device_put(self.csr.out_degree, rep)
+        rt.zc_req = jax.device_put(self.zc_req, rep)
+        rt.inv_deg = jax.device_put(self._inv_deg(weighted), rep)
 
 
 def random_batch(

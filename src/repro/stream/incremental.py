@@ -185,6 +185,7 @@ def run_incremental(
     source: int | None = 0,
     config: HyTMConfig | None = None,
     calibrator=None,
+    mesh=None,
 ) -> HyTMResult:
     """Converge the post-update graph from the warm (values, Δ) state of a
     previous converged run, seeding only update-affected vertices.
@@ -192,19 +193,39 @@ def run_incremental(
     ``reports`` are the ``DeltaCSR.apply`` reports for every batch applied
     since ``values``/``delta`` were computed, in order.
 
+    With ``config.mesh_axis`` set the residual convergence runs *on the
+    mesh*: the same host-side seeding builds the warm (values, Δ,
+    frontier) triple, which re-enters the shard_mapped chunked driver
+    replicated over the devices, sweeping ``dcsr``'s device-sharded
+    (P_pad, B) grid (``DeltaCSR.sharded_runtime_for``).  Sharded
+    equivalence guarantee: because seeding is identical and the sharded
+    sweep reproduces the single-device ``async_sweep=False`` dataflow,
+    the sharded incremental run is bit-identical to the single-device
+    incremental run for MIN programs — values, iterations, transfer
+    accounting, engine picks — and tolerance-bounded for SUM programs
+    (tests/test_stream_sharded.py).  ``mesh`` optionally pins the device
+    mesh (defaults to every visible device).
+
     The run inherits ``config.sync_every``: with K > 1 the residual
     convergence runs through the chunked device-resident driver
-    (``core.hytm.hytm_chunk``).  Incremental runs are exactly where the
-    chunk's early exit matters — warm starts converge in a handful of
-    iterations, and the while-loop condition stops the chunk the moment
-    the residual frontier drains, so a short run never pays for K
-    iterations.  The seeded state is materialized fresh per run
-    (``incremental_state`` builds new device arrays), so the chunked
-    driver's state donation never invalidates the caller's cached warm
-    (values, Δ) buffers."""
+    (``core.hytm.hytm_chunk``, or ``graph_shard.make_sharded_chunk`` on
+    the mesh).  Incremental runs are exactly where the chunk's early exit
+    matters — warm starts converge in a handful of iterations, and the
+    while-loop condition stops the chunk the moment the residual frontier
+    drains, so a short run never pays for K iterations.  The seeded state
+    is materialized fresh per run (``incremental_state`` builds new
+    device arrays), so the chunked driver's state donation never
+    invalidates the caller's cached warm (values, Δ) buffers."""
     config = config if config is not None else dcsr.config
-    assert config.mesh_axis is None, "incremental path is single-device"
     state = incremental_state(program, values, delta, reports, dcsr, source)
+    if config.mesh_axis is not None:
+        runtime = dcsr.sharded_runtime_for(
+            program, mesh=mesh, axis=config.mesh_axis)
+        return run_hytm(
+            None, program, source=source, config=config,
+            runtime=runtime, mesh=runtime.mesh, initial_state=state,
+            calibrator=calibrator,
+        )
     return run_hytm(
         None, program, source=source, config=config,
         runtime=dcsr.runtime_for(program), initial_state=state,

@@ -22,7 +22,13 @@
   (repro.stream.incremental) against the reports applied since;
 * **updates** — ``update(batch)`` applies an ``EdgeBatch`` through the
   container (device buffers patched in place) and logs the report for
-  later warm-starts.
+  later warm-starts (bounded by ``max_reports``: overflow evicts the
+  cache entries too stale to replay the retained suffix);
+* **mesh serving** — with ``HyTMConfig.mesh_axis`` set, lane sweeps run
+  the vmapped sharded chunk over the container's device-sharded
+  (P_pad, B) edge grid and incremental recomputes warm-start the
+  shard_mapped driver; every lane / warm run stays bit-identical to its
+  single-device ``async_sweep=False`` counterpart for MIN programs.
 
 Accumulative programs (``use_delta``) are global — their cache key uses
 ``source=None`` whatever the caller passed.
@@ -158,13 +164,35 @@ class GraphService:
         config: HyTMConfig | None = None,
         max_lanes: int = 8,
         incremental: bool = True,
+        max_reports: int = 256,
+        mesh=None,
         **delta_kw,
     ):
         self.config = config if config is not None else HyTMConfig()
-        assert self.config.mesh_axis is None, "serving runs the single-device path"
         self.dcsr = DeltaCSR(graph, self.config, **delta_kw)
+        # With config.mesh_axis set, the service serves *from the mesh*:
+        # lane sweeps run the vmapped sharded chunk
+        # (graph_shard.make_sharded_batched_chunk) over the container's
+        # device-sharded (P_pad, B) grid, and incremental recomputes
+        # warm-start the shard_mapped driver — each lane / warm run
+        # bit-identical to its single-device async_sweep=False
+        # counterpart for MIN programs.
+        self.mesh = None
+        if self.config.mesh_axis is not None:
+            if mesh is None:
+                from repro.launch.mesh import make_graph_mesh
+
+                mesh = make_graph_mesh(axis=self.config.mesh_axis)
+            self.mesh = mesh
         self.max_lanes = max_lanes
         self.incremental = incremental
+        # upper bound on retained UpdateReports: a stale cache entry that
+        # is never re-queried would otherwise pin the prune floor and let
+        # report memory grow without limit (one abandoned entry = every
+        # later report retained forever).  Overflow drops the oldest
+        # reports and evicts the cache entries that would have needed
+        # them (their next query falls back to a full recompute).
+        self.max_reports = max_reports
         # keyed by the (frozen, hashable) program itself, not its name:
         # variants like dataclasses.replace(PAGERANK, tolerance=1e-8)
         # must not collide with each other's converged results
@@ -200,12 +228,32 @@ class GraphService:
         """Drop reports no warm state can need: every cached entry only
         ever replays reports *newer* than its own version, so anything at
         or below the oldest cached version (or everything, with no cache
-        or incremental disabled) is dead weight."""
+        or incremental disabled) is dead weight.
+
+        Age bound (``max_reports``): a stale entry that is never
+        re-queried pins the floor forever, so past the bound the oldest
+        overflow reports are dropped *and* every cache entry too old to
+        replay the retained suffix is evicted — correctness first: an
+        entry must never warm-start against a gappy report list, so
+        eviction forces its next query onto the full-recompute path."""
         if not self.incremental or not self._cache:
             self._reports.clear()
             return
         floor = min(e.version for e in self._cache.values())
         self._reports = [r for r in self._reports if r.version > floor]
+        if len(self._reports) > self.max_reports:
+            # explicit drop count, not a [-max:] slice — max_reports=0
+            # (retain nothing) must really drop everything
+            drop = len(self._reports) - self.max_reports
+            self._reports = self._reports[drop:]
+            # versions are consecutive (one report per apply): an entry
+            # at version v needs every report with version > v, so it
+            # survives only if v >= retained_first - 1
+            min_replayable = (self._reports[0].version - 1
+                              if self._reports else self.version)
+            for k in [k for k, e in self._cache.items()
+                      if e.version < min_replayable]:
+                del self._cache[k]
 
     def _reports_since(self, version: int) -> list[UpdateReport]:
         return [r for r in self._reports if r.version > version]
@@ -272,7 +320,7 @@ class GraphService:
         res = run_incremental(
             self.dcsr, program, self._reports_since(entry.version),
             entry.values, entry.delta, source=s, config=self.config,
-            calibrator=self._calibrator,
+            calibrator=self._calibrator, mesh=self.mesh,
         )
         self._absorb_run(res)
         self._store(program, s, res.values, res.delta)
@@ -283,6 +331,15 @@ class GraphService:
             cache_hit=False, mode="incremental",
         )
 
+    def _runtime_for(self, program):
+        """The container view matching the configured execution path:
+        the device-sharded (P_pad, B) grid on the mesh, or the
+        single-device blocked log."""
+        if self.mesh is not None:
+            return self.dcsr.sharded_runtime_for(
+                program, mesh=self.mesh, axis=self.config.mesh_axis)
+        return self.dcsr.runtime_for(program)
+
     def _query_fresh(self, program, sources) -> dict:
         out: dict[int | None, QueryResult] = {}
         if program.use_delta:
@@ -290,7 +347,7 @@ class GraphService:
             for s in sources:
                 res = run_hytm(
                     None, program, source=s, config=self.config,
-                    runtime=self.dcsr.runtime_for(program),
+                    runtime=self._runtime_for(program), mesh=self.mesh,
                     calibrator=self._calibrator,
                 )
                 self._absorb_run(res)
@@ -319,8 +376,9 @@ class GraphService:
         self, program: VertexProgram, sources: Sequence[int]
     ) -> tuple[np.ndarray, np.ndarray, int]:
         """One multiplexed sweep: stack Q per-source init states along a
-        lane dimension and iterate until every lane's frontier drains."""
-        rt = self.dcsr.runtime_for(program)
+        lane dimension and iterate until every lane's frontier drains.
+        With ``config.mesh_axis`` set, the whole lane stack runs on the
+        mesh (``_run_lanes_sharded``)."""
         inits = [program.init_state(self.dcsr.n_nodes, s) for s in sources]
         state = HyTMState(
             values=jnp.stack([v for v, _, _ in inits]),
@@ -330,6 +388,10 @@ class GraphService:
         correction = self._correction
         if self._calibrator is not None and correction is None:
             correction = jnp.ones(3, jnp.float32)
+        if self.mesh is not None:
+            return self._run_lanes_sharded(program, state, len(sources),
+                                           correction)
+        rt = self.dcsr.runtime_for(program)
         iters = 0
         if self.config.sync_every > 1:
             # chunked lane sweep: one _batched_chunk dispatch per K
@@ -396,4 +458,77 @@ class GraphService:
                     correction = self._correction
                 if int(np.asarray(info["next_active"]).sum()) == 0:
                     break
+        return np.asarray(state.values), np.asarray(state.delta), iters
+
+    def _run_lanes_sharded(
+        self, program: VertexProgram, state: HyTMState, n_lanes: int,
+        correction,
+    ) -> tuple[np.ndarray, np.ndarray, int]:
+        """Multiplexed lane sweep on the mesh: the sharded iteration
+        (per-lane cost model / engine selection / schedule, edge blocks
+        sharded over the mesh axis, bulk-synchronous pmin/psum merges)
+        vmapped over the lane dimension inside one chunked
+        ``lax.while_loop`` dispatch
+        (``graph_shard.make_sharded_batched_chunk``).  Each lane is
+        bit-identical to its standalone single-device
+        ``async_sweep=False`` run for MIN programs.  The cross-device
+        merge is charged per executed iteration over ``config.ici_link``
+        (lane-summed entries, Q·(n,) dense payload) into
+        ``stats.extra['ici_bytes'/'ici_time']``."""
+        from repro.dist.graph_shard import (
+            ici_level_cost,
+            make_sharded_batched_chunk,
+        )
+
+        rt = self._runtime_for(program)
+        n_dev = int(self.mesh.shape[self.config.mesh_axis])
+        iters = 0
+        while iters < self.config.max_iters:
+            chunk = min(max(self.config.sync_every, 1),
+                        self.config.max_iters - iters)
+            key = ("lanes", program, self.config, chunk, n_lanes)
+            cached = rt.iteration_cache.get(key)
+            if cached is None:
+                cached = {"fn": make_sharded_batched_chunk(
+                    rt, program, self.config, chunk), "seen": set()}
+                rt.iteration_cache[key] = cached
+            # warm iff THIS chunk_fn already dispatched THESE shapes —
+            # scoped to the cached entry, which a DeltaCSR
+            # merge-compaction drops (see graph_shard: a rebuilt fn's
+            # recompile must never feed the calibrator)
+            warm = _consume_warm(
+                (rt.blocks.src.shape, rt.parts.n_partitions,
+                 rt.parts.block_size, correction is not None),
+                registry=cached["seen"],
+            )
+            t_chunk = time.monotonic()
+            with quiet_donation():
+                state, n_done, last_active, pe_sum, mp_sum, merged = \
+                    cached["fn"](state, rt.blocks, rt.parts, rt.out_degree,
+                                 rt.zc_req, rt.inv_deg, correction)
+            n_done = int(n_done)
+            iters += n_done
+            if self._calibrator is not None:
+                refreshed = self._calibrator.observe_chunk(
+                    state.values, np.asarray(pe_sum, dtype=float),
+                    t_chunk, skip=not warm,
+                )
+                self._record_feedback(int(mp_sum), refreshed)
+                correction = self._correction
+            # second-level accounting: all lanes merge in one batched
+            # collective, so the dense candidate payload is Q stacked
+            # (n,) vectors and the compacted one the lane-summed entries
+            corr_np = (np.asarray(correction, dtype=float)
+                       if correction is not None else None)
+            for me in np.asarray(merged)[:n_done]:
+                ib, it_, _ie = ici_level_cost(
+                    n_lanes * self.dcsr.n_nodes, float(me), n_dev,
+                    self.config.ici_link, corr_np,
+                )
+                self.stats.extra["ici_bytes"] = (
+                    self.stats.extra.get("ici_bytes", 0.0) + ib)
+                self.stats.extra["ici_time"] = (
+                    self.stats.extra.get("ici_time", 0.0) + it_)
+            if int(last_active) == 0:
+                break
         return np.asarray(state.values), np.asarray(state.delta), iters

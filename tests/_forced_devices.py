@@ -1,0 +1,29 @@
+"""Shared forced-host-device subprocess harness for the test suite.
+
+jax locks the device count at the first backend init, so any test that
+needs N (fake CPU) devices must run its script in a fresh subprocess.
+The environment recipe itself is ``repro.launch.mesh.forced_host_device_env``
+(one definition, shared with the device-sweep benchmarks); this module
+adds the test-side plumbing — dedent, run, assert exit 0 — used by
+``test_distributed``, ``test_chunked``, and ``test_stream_sharded``.
+"""
+
+import subprocess
+import sys
+import textwrap
+
+from repro.launch.mesh import forced_host_device_env
+
+
+def run_forced_devices(script: str, devices: int = 8, python_flags=(),
+                       timeout: int = 560) -> str:
+    """Run ``script`` (dedented) under ``devices`` forced-host CPU
+    devices; assert it exits 0 and return its stdout."""
+    out = subprocess.run(
+        [sys.executable, *python_flags, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, timeout=timeout,
+        env=forced_host_device_env(devices),
+    )
+    assert out.returncode == 0, (
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-4000:]}")
+    return out.stdout

@@ -20,19 +20,14 @@ The contract under test (core.hytm.hytm_chunk and its consumers):
 """
 
 import dataclasses
-import os
-import subprocess
-import sys
-import textwrap
 
 import numpy as np
 import pytest
 
+from _forced_devices import run_forced_devices
 from repro.core.hytm import HyTMConfig, run_hytm
 from repro.graph.algorithms import BFS, CC, PAGERANK, SSSP
 from repro.graph.generators import grid_mesh_graph, rmat_graph
-
-REPO_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def _assert_min_bit_exact(a, b):
@@ -236,13 +231,5 @@ def test_chunked_sharded_matches_k1_and_oracle():
     dispatch reproduces the per-iteration sharded run (bit-exact MIN with
     identical ICI accounting; tolerance-bounded SUM) and the
     single-device oracle, autotune on and off."""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-    env["PYTHONPATH"] = REPO_SRC
-    out = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(_SHARDED_CHUNK_SCRIPT)],
-        capture_output=True, text=True, timeout=560, env=env,
-    )
-    assert out.returncode == 0, (
-        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}")
-    assert out.stdout.count("OK") == 3
+    out = run_forced_devices(_SHARDED_CHUNK_SCRIPT, devices=4)
+    assert out.count("OK") == 3

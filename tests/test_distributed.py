@@ -4,26 +4,9 @@ Device count is locked at first jax init, so these tests run in
 subprocesses with XLA_FLAGS set (the main pytest process stays at 1
 device, as the harness requires)."""
 
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
 
-REPO_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
-
-
-def _run(script: str, devices: int = 8, timeout: int = 560) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = REPO_SRC
-    out = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(script)],
-        capture_output=True, text=True, timeout=timeout, env=env,
-    )
-    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
-    return out.stdout
+from _forced_devices import run_forced_devices as _run
 
 
 def test_moe_shard_map_matches_single_device():

@@ -156,6 +156,60 @@ def test_incremental_matches_scratch_sum(seed):
 # Regression: small batches must win
 # --------------------------------------------------------------------------
 
+# --------------------------------------------------------------------------
+# seg_start refresh: Eq. 3 alignment drift
+# --------------------------------------------------------------------------
+
+def _aligned_zc_req(dc):
+    """The zero-copy request counts of the layout the next
+    merge-compaction would realize: every partition's segments packed
+    dense in vertex order (live-degree prefix-sum) — the drift oracle."""
+    import jax.numpy as jnp
+
+    from repro.core.cost_model import zc_request_counts
+
+    seg = np.empty(dc.n_nodes, np.int64)
+    B = dc.block_size
+    for p in range(dc.n_partitions):
+        v0, v1 = int(dc.vertex_start[p]), int(dc.vertex_start[p + 1])
+        if v1 <= v0:
+            continue
+        deg = dc.out_deg[v0:v1].astype(np.int64)
+        seg[v0:v1] = p * B + np.concatenate(([0], np.cumsum(deg[:-1])))
+    return np.asarray(zc_request_counts(
+        jnp.asarray(dc.out_deg, jnp.int32), jnp.asarray(seg, jnp.int32),
+        dc.config.link,
+    ))
+
+
+def test_seg_start_refresh_removes_cost_model_drift():
+    """Delete-heavy batch sequences drift the frozen seg_start away from
+    the live layout: the Eq. 3 alignment term then mispredicts zero-copy
+    requests.  ``refresh_seg_start=True`` (default) re-derives dirty
+    partitions per patch and must track the aligned oracle exactly;
+    the frozen flag reproduces (and quantifies) the historical drift."""
+    g = rmat_graph(400, 3200, seed=6)
+    cfg = HyTMConfig(n_partitions=6)
+    fresh = DeltaCSR(g, cfg)  # refresh_seg_start=True
+    frozen = DeltaCSR(g, cfg, refresh_seg_start=False)
+    rng_a, rng_b = np.random.default_rng(6), np.random.default_rng(6)
+    drift_fresh = drift_frozen = 0.0
+    for _ in range(4):
+        ba = random_batch(fresh, rng_a, n_insert=2, n_delete=60)
+        bb = random_batch(frozen, rng_b, n_insert=2, n_delete=60)
+        np.testing.assert_array_equal(ba.src, bb.src)  # same sequence
+        ra, rb = fresh.apply(ba), frozen.apply(bb)
+        assert not ra.merged and not rb.merged
+        drift_fresh += float(np.abs(
+            np.asarray(fresh.zc_req) - _aligned_zc_req(fresh)).sum())
+        drift_frozen += float(np.abs(
+            np.asarray(frozen.zc_req) - _aligned_zc_req(frozen)).sum())
+    # identical edge multisets — only the alignment model differs
+    assert _edge_multiset(fresh) == _edge_multiset(frozen)
+    assert drift_fresh == 0.0, drift_fresh
+    assert drift_frozen > 0.0  # the drift the refresh removes
+
+
 def test_incremental_fewer_iterations_on_small_batches():
     """On update batches of <=1% of the edges, the warm-started run must
     take strictly fewer sweep iterations than from-scratch."""

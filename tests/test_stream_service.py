@@ -115,6 +115,36 @@ def test_reports_are_pruned_once_warm_states_catch_up():
     assert len(svc._reports) == 0
 
 
+def test_abandoned_entry_cannot_grow_report_memory():
+    """One stale cache entry that is never re-queried must not pin the
+    report list forever: past ``max_reports`` the oldest reports drop and
+    entries too stale to replay the retained suffix are evicted — their
+    next query falls back to a correct full recompute, while a
+    periodically refreshed entry keeps its incremental path."""
+    g = rmat_graph(300, 2400, seed=8)
+    svc = GraphService(g, CFG, max_lanes=2, max_reports=4)
+    svc.query(SSSP, [0, 7])  # both cached at v0; source 0 then abandoned
+    rng = np.random.default_rng(8)
+    for _ in range(3):
+        svc.update(random_batch(svc.dcsr, rng, n_insert=3, n_delete=3))
+    refreshed = svc.query(SSSP, [7])[0]  # source 7 stays warm (v3)
+    assert refreshed.mode == "incremental"
+    for _ in range(4):  # reports v4..v7; v1..v3 (needed only by v0) age out
+        svc.update(random_batch(svc.dcsr, rng, n_insert=3, n_delete=3))
+    assert len(svc._reports) <= 4
+    assert (SSSP, 0) not in svc._cache   # evicted: floor no longer pinned
+    assert (SSSP, 7) in svc._cache       # still replayable from v3
+
+    g2 = svc.dcsr.to_host_graph()
+    q7 = svc.query(SSSP, [7])[0]
+    assert q7.mode == "incremental"
+    q0 = svc.query(SSSP, [0])[0]
+    assert q0.mode == "batched" and not q0.cache_hit
+    for s, r in ((7, q7), (0, q0)):
+        fs = run_hytm(g2, SSSP, source=s, config=CFG)
+        np.testing.assert_array_equal(r.values, fs.values)
+
+
 def test_incremental_disabled_falls_back_to_full():
     g = rmat_graph(300, 2400, seed=2)
     svc = GraphService(g, CFG, max_lanes=2, incremental=False)
