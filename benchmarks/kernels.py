@@ -1,5 +1,10 @@
 """Per-kernel wall timing (interpret mode on CPU — correctness-path cost,
-not TPU perf; TPU perf comes from the roofline analysis)."""
+not TPU perf; TPU perf comes from the roofline analysis).
+
+``python -m benchmarks.kernels --selfcheck`` runs the per-engine roofline
+gate instead (benchmarks.roofline.engine_gate): kernel-vs-oracle
+equivalence for every Algorithm-1 engine plus the achieved-vs-modeled
+bandwidth check, in interpret mode on CPU — the CI acceptance leg."""
 
 from __future__ import annotations
 
@@ -56,5 +61,30 @@ def run(fast: bool = False):
     emit("kernels/grouped_matmul_8e", us, "interpret")
 
 
+def selfcheck(fast: bool = True) -> None:
+    """Run the per-engine roofline gate; raise (non-zero exit) on failure."""
+    from benchmarks import roofline
+
+    rows = roofline.engine_gate(fast=fast)
+    for r in rows:
+        print(
+            f"selfcheck/{r['engine']}: achieved={r['achieved_gbs']:.3f} GB/s "
+            f"modeled={r['modeled_gbs']:.3f} GB/s ratio={r['ratio']:.2e} "
+            f"({r['points']} points)"
+        )
+    print("kernels --selfcheck OK: engine kernels match oracles; bandwidths sane")
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="single timed repeat / smaller gate grid")
+    ap.add_argument("--selfcheck", action="store_true",
+                    help="run the engine roofline gate instead of the timings")
+    args = ap.parse_args()
+    if args.selfcheck:
+        selfcheck(fast=True)
+    else:
+        run(fast=args.fast)

@@ -9,8 +9,14 @@ For every (arch x shape x mesh) JSON produced by repro.launch.dryrun:
 plus MODEL_FLOPS / (HLO_FLOPs * n_devices) — the useful-compute ratio
 (catching remat/redundancy waste) — and the dominant bottleneck.
 
-No jax required: this module only reads the JSON records, so it runs in
-the 1-device benchmark process.
+The dry-run half needs no jax (it only reads JSON records, so it runs in
+the 1-device benchmark process).  The *engine* half
+(:func:`engine_rooflines` / :func:`engine_gate`) does import jax: it
+wall-probes the kernel-backed Algorithm-1 engines
+(``HyTMConfig.use_kernels``) and gates their achieved bytes/second
+against the cost model's per-engine bandwidth line
+(``cost_model.engine_bandwidths``) — the ``benchmarks.kernels
+--selfcheck`` acceptance run in CI.
 """
 
 from __future__ import annotations
@@ -104,6 +110,152 @@ def run(dryrun_dir: str = "experiments/dryrun", fast: bool = False):
         worst = sorted(ok, key=lambda r: r["roofline_fraction"])[:5]
         emit("roofline/worst5", 0.0,
              ";".join(f"{r['arch']}/{r['shape']}/{r['mesh']}={r['roofline_fraction']:.2f}" for r in worst))
+    return rows
+
+
+# --------------------------------------------------------------------------
+# Per-engine roofline: achieved vs modeled bandwidth of the kernel path
+# --------------------------------------------------------------------------
+
+# On TPU the kernel-backed engines must achieve at least this fraction of
+# the modeled bandwidth line; interpret mode on CPU emulates the kernels
+# lane-by-lane, so there the gate only checks the bandwidths are finite,
+# positive, and self-consistent (the correctness half still runs in full).
+ENGINE_RATIO_FLOOR = 0.02
+
+
+def engine_rooflines(
+    n_points: int = 3,
+    max_edges: int = 4096,
+    repeats: int = 2,
+    link=None,
+    seed: int = 0,
+) -> list[dict]:
+    """Wall-probe the KERNEL-backed engines and compare achieved vs
+    modeled bandwidth, per engine.
+
+    achieved = Table-VI modeled bytes / measured wall seconds (the same
+    byte accounting ``HyTMResult`` reports, over the engine's real
+    execution), aggregated across the probe grid; modeled = the
+    ``cost_model.engine_bandwidths`` line (bytes / Eqs. 1-3 execution
+    seconds) over the same materialized partitions.  The ratio is the
+    per-engine roofline fraction: how much of the bandwidth the cost
+    model *assumes* the engine actually delivers.
+    """
+    import numpy as np
+
+    from repro.autotune.probe import (
+        default_grid,
+        observation_matrix,
+        stats_for,
+        wall_probe,
+    )
+    from repro.core.constants import PCIE3
+    from repro.core.cost_model import (
+        COMPACT,
+        FILTER,
+        ZEROCOPY,
+        ENGINE_NAMES,
+        engine_bandwidths,
+        engine_costs,
+    )
+
+    link = link or PCIE3
+    grid = default_grid(
+        edge_levels=(float(max_edges),), n_ratios=n_points, regimes=("mid",)
+    )
+    realized, obs = wall_probe(
+        grid, max_edges=max_edges, repeats=repeats, seed=seed, use_kernels=True
+    )
+    meas = observation_matrix(realized, obs).T          # (3, N) seconds
+    stats = stats_for(realized, link)
+    costs = engine_costs(stats, link)
+    byt = np.stack([                                    # (3, N) modeled bytes
+        np.asarray(stats.total_edges) * link.d1,
+        np.asarray(stats.active_edges) * link.d1
+        + np.asarray(stats.active_vertices) * link.d2,
+        np.asarray(stats.zc_requests) * link.m,
+    ])
+    modeled_bw = np.asarray(engine_bandwidths(stats, costs, link))  # (3, N)
+    rows = []
+    for eng in (FILTER, COMPACT, ZEROCOPY):
+        wall = float(meas[eng].sum())
+        achieved = float(byt[eng].sum()) / max(wall, 1e-30)
+        # byte-weighted modeled bandwidth over the same grid
+        modeled = float(byt[eng].sum()) / max(
+            float((byt[eng] / np.maximum(modeled_bw[eng], 1e-30)).sum()), 1e-30
+        )
+        rows.append({
+            "engine": ENGINE_NAMES[eng],
+            "wall_us": wall * 1e6 / max(len(realized), 1),
+            "achieved_gbs": achieved / 1e9,
+            "modeled_gbs": modeled / 1e9,
+            "ratio": achieved / modeled if modeled > 0 else 0.0,
+            "points": len(realized),
+        })
+    return rows
+
+
+def engine_gate(fast: bool = True, link=None, seed: int = 0) -> list[dict]:
+    """The kernel-path acceptance gate (``benchmarks.kernels --selfcheck``).
+
+    1. Equivalence: each kernel-backed engine must reproduce its pure-JAX
+       oracle bit-exactly for the MIN combiner on a materialized probe
+       block (the `use_kernels` contract, tests/test_engines.py).
+    2. Bandwidths: every per-engine achieved and modeled bandwidth must
+       be finite and positive; on TPU the achieved/modeled ratio must
+       additionally clear :data:`ENGINE_RATIO_FLOOR` (interpret mode on
+       CPU is an emulator — its wall time says nothing about DMA reality).
+
+    Raises ``AssertionError`` on violation; returns the roofline rows.
+    """
+    import numpy as np
+
+    from repro.autotune.probe import _materialize, ProbePoint
+    from repro.core.engines import ENGINE_FNS
+    from repro.graph.algorithms import SSSP
+    from repro.kernels.runtime import on_tpu
+
+    block, operand, n, _ = _materialize(
+        ProbePoint(total_edges=3000.0, active_edges=900.0, active_vertices=120.0),
+        max_edges=3000, seed=seed,
+    )
+    for fn in ENGINE_FNS:
+        ref = fn(block, operand, n, SSSP, use_kernels=False)
+        ker = fn(block, operand, n, SSSP, use_kernels=True)
+        assert np.array_equal(np.asarray(ref.agg), np.asarray(ker.agg)), (
+            f"{fn.__name__}: kernel path diverged from oracle (MIN must be bit-exact)")
+        assert np.array_equal(np.asarray(ref.touched), np.asarray(ker.touched)), (
+            f"{fn.__name__}: kernel path touched-mask diverged from oracle")
+
+    rows = engine_rooflines(
+        n_points=2 if fast else 3,
+        max_edges=2048 if fast else 8192,
+        repeats=1 if fast else 2,
+        link=link, seed=seed,
+    )
+    for r in rows:
+        for key in ("achieved_gbs", "modeled_gbs"):
+            v = r[key]
+            assert np.isfinite(v) and v > 0, f"{r['engine']}: {key}={v}"
+        if on_tpu():
+            assert r["ratio"] >= ENGINE_RATIO_FLOOR, (
+                f"{r['engine']}: achieved/modeled bandwidth ratio "
+                f"{r['ratio']:.4f} below floor {ENGINE_RATIO_FLOOR}")
+    return rows
+
+
+def run_engines(fast: bool = False, link=None):
+    """Benchmark entry (``benchmarks.run --only kernels-roofline``):
+    run the gate and emit one row per engine."""
+    rows = engine_gate(fast=fast, link=link)
+    for r in rows:
+        emit(
+            f"roofline/engine/{r['engine']}", r["wall_us"],
+            f"achieved_gbs={r['achieved_gbs']:.3f};"
+            f"modeled_gbs={r['modeled_gbs']:.3f};ratio={r['ratio']:.2e};"
+            f"points={r['points']}",
+        )
     return rows
 
 

@@ -42,6 +42,7 @@ def main() -> None:
         "fig9": lambda: fig9_scaling.run(fast=args.fast),
         "fig9-devices": lambda: fig9_scaling.run_devices(fast=args.fast),
         "kernels": lambda: kernels.run(fast=args.fast),
+        "kernels-roofline": lambda: roofline.run_engines(fast=args.fast),
         "roofline": lambda: roofline.run(fast=args.fast),
         "stream": lambda: stream_bench.run(smoke=args.fast),
         "stream-devices": lambda: stream_bench.run_sharded(smoke=args.fast),

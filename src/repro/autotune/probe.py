@@ -197,6 +197,7 @@ def wall_probe(
     max_edges: int = 200_000,
     repeats: int = 3,
     seed: int = 0,
+    use_kernels: bool | str = "auto",
 ) -> tuple[list[ProbePoint], list[Observation]]:
     """Wall-time the three engines over materialized probe partitions.
 
@@ -208,6 +209,11 @@ def wall_probe(
     Returns ``(materialized_points, observations)``; calibrate against
     the returned points, not the requested ones.  Compile time is
     excluded (one warmup call per shape/engine).
+
+    ``use_kernels`` mirrors :class:`HyTMConfig.use_kernels` ("auto"
+    resolves via ``kernels.runtime``): calibration must time the SAME
+    engine implementations the runtime will dispatch, or the fitted
+    profile describes a path that never executes.
     """
     import time as _time
 
@@ -215,12 +221,14 @@ def wall_probe(
 
     from repro.core.engines import ENGINE_FNS
     from repro.graph.algorithms import SSSP
+    from repro.kernels.runtime import resolve_use_kernels
 
+    uk = resolve_use_kernels(use_kernels)
     # one jitted wrapper per engine (n static): points sharing a block
     # shape reuse the compile instead of retracing per (point, engine)
     fns = {
         eng: jax.jit(
-            lambda b, o, n, f=ENGINE_FNS[eng]: f(b, o, n, SSSP),
+            lambda b, o, n, f=ENGINE_FNS[eng]: f(b, o, n, SSSP, use_kernels=uk),
             static_argnums=2,
         )
         for eng in ENGINES

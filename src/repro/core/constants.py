@@ -37,6 +37,15 @@ repro.launch.calibrate`` and loaded via
 ``repro.autotune.registry.load_profile``.  Hardware-topology constants
 (``m``, ``mr``, ``d1``, ``d2``) are never fitted; ``__post_init__``
 validates every profile, shipped or loaded.
+
+Since the ``HyTMConfig.use_kernels`` wiring, wall-probe calibration
+(``wall_probe(..., use_kernels="auto")``) times the engine
+implementations the runtime actually dispatches: on TPU backends the
+fitted ``bandwidth`` / ``compaction_bandwidth`` / ``launch_overhead_s``
+describe the Pallas kernel path (segment_spmm / frontier_compact /
+hyb_gather), not the pure-JAX oracles.  Shipped numbers below predate
+that wiring and remain hand-set; a calibrated registry entry supersedes
+them per device kind.
 """
 
 from __future__ import annotations

@@ -266,6 +266,26 @@ def modeled_transfer_bytes(stats: PartitionStats, engines: jax.Array, link: Link
     return out
 
 
+def engine_bandwidths(
+    stats: PartitionStats, costs: EngineCosts, link: LinkModel
+) -> jax.Array:
+    """(3, P) modeled effective bandwidth (bytes/second) per engine: the
+    Table-VI byte accounting divided by the Eqs. 1-3 *execution* seconds
+    (``tec_full`` for compact — the pass is physically paid).  Row index
+    == engine id.  This is the "modeled" side of the roofline gate
+    (benchmarks.roofline.engine_rooflines): a wall-probed engine whose
+    achieved bytes/second collapses far below this line signals the
+    kernel path stopped saturating the transfer the model charges for.
+    Partitions whose modeled time is zero report zero bandwidth."""
+    bytes_ = jnp.stack([
+        stats.total_edges * link.d1,
+        stats.active_edges * link.d1 + stats.active_vertices * link.d2,
+        stats.zc_requests * link.m,
+    ])  # (3, P) — same accounting as modeled_transfer_bytes, all engines
+    secs = jnp.stack([costs.tef, costs.tec_full, costs.tiz])
+    return jnp.where(secs > 0, bytes_ / jnp.maximum(secs, 1e-30), 0.0)
+
+
 def modeled_time_seconds(costs: EngineCosts, engines: jax.Array) -> jax.Array:
     """Reported (execution) time — charges the compaction pass the
     selection rule deliberately omits (paper Fig. 3(c): the pass is

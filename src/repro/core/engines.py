@@ -14,10 +14,28 @@ the compute units:
   straight from the big memory (`kernels/hyb_gather`): no redundancy, no
   extra pass, but request-granular bandwidth.
 
-The pure-JAX implementations below are the semantic oracles: `filter` is a
-masked dense block, `compact` really sorts active edges to the front and
-relaxes the prefix, `zerocopy` gathers edge ids through a take (random
-access).  ``lax.switch`` executes exactly one path per partition.
+Each engine has TWO implementations behind the static ``use_kernels``
+flag (threaded from ``HyTMConfig.use_kernels`` — ``"auto"`` resolves via
+``kernels.runtime``: on for TPU backends, off elsewhere):
+
+* ``use_kernels=False`` — the pure-JAX *oracles* below: `filter` is a
+  masked dense block, `compact` really sorts active edges to the front
+  and relaxes the prefix, `zerocopy` gathers edge ids through a take
+  (random access).
+* ``use_kernels=True`` — the Pallas kernel path: FILTER combines through
+  the blocked ``segment_spmm`` (one-hot MXU scatter-add / masked-select
+  scatter-min), COMPACT squeezes the active edges through the
+  ``frontier_compact`` stream-compaction kernel and relaxes the dense
+  prefix, ZEROCOPY re-fetches the block as per-window DMA descriptors
+  through ``hyb_gather`` before combining.
+
+Equivalence contract (tests/test_engines.py, tests/test_kernels.py): the
+kernel path is **bit-identical** to the oracle for MIN combiners (min is
+order-independent; the compaction prefix is stable in both paths) and
+tolerance-bounded for SUM (the tiled accumulation reassociates float
+addition).  Both paths trace under ``vmap`` (service lanes),
+``shard_map`` (the mesh sweep), and ``lax.while_loop`` (the chunked
+driver).  ``lax.switch`` executes exactly one engine per partition.
 """
 
 from __future__ import annotations
@@ -65,42 +83,129 @@ def _combine(block: EdgeBlock, msg: jax.Array, n: int, program: VertexProgram) -
     return RelaxOut(agg=agg, touched=touched)
 
 
+def _combine_spmm(block: EdgeBlock, msg: jax.Array, n: int, program: VertexProgram) -> RelaxOut:
+    """Destination combine through the blocked ``segment_spmm`` kernel.
+
+    MIN: the scatter-min kernel over the identity-masked messages —
+    bit-identical to ``jax.ops.segment_min`` (order-free).  SUM: one
+    kernel call over the packed (B, 2) [message, active] columns — the
+    value column is tolerance-bounded (tiled reassociation), the 0/1
+    activity column sums exactly, so ``touched`` stays bit-exact.
+    """
+    from repro.kernels.segment_spmm.ops import segment_spmm
+
+    if program.combine == MIN:
+        agg = segment_spmm(msg, block.dst, n, combine="min")
+        return RelaxOut(agg=agg, touched=jnp.isfinite(agg))
+    packed = jnp.stack([msg, block.active.astype(msg.dtype)], axis=-1)
+    out = segment_spmm(packed, block.dst, n)
+    return RelaxOut(agg=out[:, 0], touched=out[:, 1] > 0)
+
+
 # ------------------------------------------------------------------ engines
 
-def relax_filter(block: EdgeBlock, operand: jax.Array, n: int, program: VertexProgram) -> RelaxOut:
+def relax_filter(
+    block: EdgeBlock, operand: jax.Array, n: int, program: VertexProgram,
+    use_kernels: bool = False,
+) -> RelaxOut:
     """Whole-block masked relax (dense stream)."""
-    return _combine(block, _messages(block, operand, program), n, program)
+    msg = _messages(block, operand, program)
+    if use_kernels:
+        return _combine_spmm(block, msg, n, program)
+    return _combine(block, msg, n, program)
 
 
-def relax_compact(block: EdgeBlock, operand: jax.Array, n: int, program: VertexProgram) -> RelaxOut:
+def relax_compact(
+    block: EdgeBlock, operand: jax.Array, n: int, program: VertexProgram,
+    use_kernels: bool = False,
+) -> RelaxOut:
     """Compact active edges to the front (stable), then relax the prefix.
 
-    The sort is the on-device analogue of the paper's CPU compaction pass:
+    The compaction is the on-device analogue of the paper's CPU pass:
     after it, the active edges occupy a dense prefix, which is what the
     downstream dense kernel would stream.  Correctness is unaffected by
-    the permutation (combiners are commutative).
+    the permutation (combiners are commutative).  The kernel path runs
+    the real ``frontier_compact`` stream-compaction kernel over the
+    packed (src, dst, weight) columns; both paths keep kept lanes in
+    original order (stable), so even the SUM summation order matches the
+    oracle on the dense prefix.
     """
-    order = jnp.argsort(~block.active, stable=True)
-    compacted = EdgeBlock(
-        src=block.src[order],
-        dst=block.dst[order],
-        weight=block.weight[order],
-        active=block.active[order],
-    )
+    if use_kernels:
+        from repro.kernels.frontier_compact.ops import frontier_compact
+
+        B = block.src.shape[0]
+        # int32 ids ride the kernel's one-hot permutation matmul as exact
+        # float32 (ids < 2^24 — partition blocks are far smaller); the
+        # matmul multiplies by exact 0/1, so finite values copy bit-exact.
+        packed = jnp.stack([
+            block.src.astype(jnp.float32),
+            block.dst.astype(jnp.float32),
+            block.weight,
+        ], axis=-1)                                     # (B, 3)
+        comp, cnt = frontier_compact(packed, block.active)
+        lane_valid = jnp.arange(B, dtype=jnp.int32) < cnt
+        compacted = EdgeBlock(
+            src=jnp.where(lane_valid, comp[:, 0].astype(jnp.int32), 0),
+            dst=jnp.where(lane_valid, comp[:, 1].astype(jnp.int32), 0),
+            weight=jnp.where(lane_valid, comp[:, 2], 0.0),
+            active=lane_valid,
+        )
+    else:
+        order = jnp.argsort(~block.active, stable=True)
+        compacted = EdgeBlock(
+            src=block.src[order],
+            dst=block.dst[order],
+            weight=block.weight[order],
+            active=block.active[order],
+        )
     return _combine(compacted, _messages(compacted, operand, program), n, program)
 
 
-def relax_zerocopy(block: EdgeBlock, operand: jax.Array, n: int, program: VertexProgram) -> RelaxOut:
-    """Fine-grained gather relax: edge fields are re-fetched through an
-    explicit random-access ``take`` (per-request access pattern), then
-    combined.  Semantically identical; access pattern is the ZC one."""
-    idx = jnp.arange(block.src.shape[0], dtype=jnp.int32)
-    gathered = EdgeBlock(
-        src=jnp.take(block.src, idx),
-        dst=jnp.take(block.dst, idx),
-        weight=jnp.take(block.weight, idx),
-        active=jnp.take(block.active, idx),
-    )
+def relax_zerocopy(
+    block: EdgeBlock, operand: jax.Array, n: int, program: VertexProgram,
+    use_kernels: bool = False,
+) -> RelaxOut:
+    """Fine-grained gather relax: edge fields are re-fetched through
+    random access (per-request pattern), then combined.  Semantically
+    identical; access pattern is the ZC one.  The kernel path issues the
+    block as per-window ``hyb_gather`` DMA descriptors (one descriptor
+    per PAD-lane window — the fine-grained request stream Eq. 3 charges)
+    instead of the oracle's ``take``; edge ids round-trip through the
+    gather as bit-cast float lanes (pure data movement, no arithmetic),
+    so reconstruction is exact for any int32 and the relax result is
+    bit-identical to the oracle for both combiners.
+    """
+    if use_kernels:
+        from repro.kernels.hyb_gather.hyb_gather import PAD
+        from repro.kernels.hyb_gather.ops import hyb_gather
+
+        B = block.src.shape[0]
+        as_f32 = lambda a: jax.lax.bitcast_convert_type(a, jnp.float32)
+        as_i32 = lambda a: jax.lax.bitcast_convert_type(a, jnp.int32)
+        packed = jnp.stack([
+            as_f32(block.src),
+            as_f32(block.dst),
+            block.weight,
+            as_f32(block.active.astype(jnp.int32)),
+        ], axis=-1)                                     # (B, 4)
+        n_win = -(-B // PAD)
+        starts = jnp.arange(n_win, dtype=jnp.int32) * PAD
+        degs = jnp.minimum(jnp.int32(B) - starts, PAD)
+        flat = hyb_gather(packed, starts, degs).reshape(n_win * PAD, 4)[:B]
+        gathered = EdgeBlock(
+            src=as_i32(flat[:, 0]),
+            dst=as_i32(flat[:, 1]),
+            weight=flat[:, 2],
+            active=as_i32(flat[:, 3]) != 0,
+        )
+    else:
+        idx = jnp.arange(block.src.shape[0], dtype=jnp.int32)
+        gathered = EdgeBlock(
+            src=jnp.take(block.src, idx),
+            dst=jnp.take(block.dst, idx),
+            weight=jnp.take(block.weight, idx),
+            active=jnp.take(block.active, idx),
+        )
     return _combine(gathered, _messages(gathered, operand, program), n, program)
 
 
@@ -113,8 +218,10 @@ def relax_with_engine(
     operand: jax.Array,
     n: int,
     program: VertexProgram,
+    use_kernels: bool = False,
 ) -> RelaxOut:
     return jax.lax.switch(
         jnp.clip(engine_id, 0, 2),
-        [lambda b=b: ENGINE_FNS[b](block, operand, n, program) for b in range(3)],
+        [lambda b=b: ENGINE_FNS[b](block, operand, n, program, use_kernels)
+         for b in range(3)],
     )

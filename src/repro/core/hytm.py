@@ -62,6 +62,7 @@ from repro.core.cost_model import (
     zc_request_counts,
 )
 from repro.core.engines import EdgeBlock, relax_with_engine
+from repro.kernels.runtime import resolve_use_kernels
 from repro.core.partition import (
     DevicePartitions,
     PartitionTable,
@@ -95,6 +96,20 @@ class HyTMConfig:
     # dispatch+sync, small enough that history draining and the online
     # calibrator keep a useful cadence.
     sync_every: int = 8
+    # Engine implementation dispatch: route the FILTER/COMPACT/ZEROCOPY
+    # relaxations through the Pallas kernels (kernels/segment_spmm,
+    # kernels/frontier_compact, kernels/hyb_gather) instead of the
+    # pure-JAX oracle engines.  Tri-state: "auto" (default) resolves via
+    # kernels.runtime.on_tpu() — compiled kernels on TPU backends, the
+    # oracles elsewhere (interpret mode would only add overhead); True
+    # forces the kernel path (interpret mode off-TPU: how the equivalence
+    # tests and the CI roofline gate execute the kernel bodies on CPU);
+    # False forces the oracles.  Contract: the kernel path is
+    # bit-identical for MIN programs (values, iterations, transfer bytes,
+    # engine picks) and tolerance-bounded for SUM, on the single-device,
+    # sharded, chunked, and GraphService paths alike — engine *selection*
+    # and transfer accounting never depend on the flag.
+    use_kernels: bool | str = "auto"
     forced_engine: int | None = None  # force a single engine (baselines)
     hub_fraction: float = 0.08
     # Second transfer-management level (DESIGN.md §2): the link model used
@@ -197,6 +212,7 @@ def _sweep(
     async_sweep: bool,
     consume: str,             # 'all' (pass 1: every partition is visited)
                               # | 'processed' (pass 2: only loaded ones)
+    use_kernels: bool = False,
 ) -> tuple[HyTMState, jax.Array]:
     """Scan partitions in priority order; returns new state + activated."""
     n = rt.csr.n_nodes
@@ -222,7 +238,7 @@ def _sweep(
         else:
             operand = values if async_sweep else values0
 
-        out = relax_with_engine(eng, block, operand, n, program)
+        out = relax_with_engine(eng, block, operand, n, program, use_kernels)
 
         if program.combine == MIN:
             improved = out.touched & (out.agg < values)
@@ -280,6 +296,9 @@ def _iteration_impl(
                  n_hub_partitions=n_hub_partitions)
     n = csr.n_nodes
     frontier = state.frontier
+    # trace-time resolution: config is static under jit, so the kernel
+    # dispatch is a Python-level branch — no runtime cost either way
+    use_kernels = resolve_use_kernels(config.use_kernels)
 
     # (1-3) stats -> costs -> engines -> combined tasks
     stats = partition_stats(frontier, csr.out_degree, zc_req, parts)
@@ -316,7 +335,7 @@ def _iteration_impl(
     # (5) asynchronous sweep in priority order
     state1, activated = _sweep(
         state, rt, program, plan.engines, sched.order, frontier,
-        config.async_sweep, consume="all",
+        config.async_sweep, consume="all", use_kernels=use_kernels,
     )
 
     # (6) recompute-once: loaded priority partitions, zero extra transfer.
@@ -330,7 +349,7 @@ def _iteration_impl(
         frontier2 = jnp.abs(state1.delta) > program.tolerance
     state2, activated2 = _sweep(
         state1, rt, program, engines2, sched.order, frontier2,
-        config.async_sweep, consume="processed",
+        config.async_sweep, consume="processed", use_kernels=use_kernels,
     )
     activated = activated | activated2
 

@@ -67,6 +67,7 @@ from repro.core.cost_model import (
     zc_request_counts,
 )
 from repro.core.engines import EdgeBlock, relax_with_engine
+from repro.kernels.runtime import resolve_use_kernels
 from repro.core.hytm import (
     HyTMConfig,
     HyTMResult,
@@ -243,6 +244,7 @@ def _local_sweep(
     n: int,
     program: VertexProgram,
     axis: str,
+    use_kernels: bool = False,
 ):
     """Relax this device's partitions, then merge across the mesh.
 
@@ -259,7 +261,7 @@ def _local_sweep(
         weight, in_range = blocks.weight[p], blocks.in_range[p]
         active = frontier[src] & in_range & (eng != NONE)
         block = EdgeBlock(src=src, dst=dst, weight=weight, active=active)
-        out = relax_with_engine(eng, block, operand, n, program)
+        out = relax_with_engine(eng, block, operand, n, program, use_kernels)
         if program.combine == MIN:
             agg = jnp.minimum(agg, out.agg)
         else:
@@ -317,6 +319,10 @@ def _make_iteration_impl(
     n_dev = int(mesh.shape[axis])
     P_local = P_total // n_dev
     mode = config.cds_mode
+    # resolved once at trace time, like the single-device sweep; the
+    # shard_mapped local sweep then routes through the same kernel or
+    # oracle engines as every other consumer
+    use_kernels = resolve_use_kernels(config.use_kernels)
 
     def select_local(stats_slice, correction):
         """Algorithm 1 on a (P_local,) stats shard — identical result to
@@ -346,7 +352,7 @@ def _make_iteration_impl(
             )
             agg, touched = _local_sweep(
                 blocks_l, engines_l, sched.order, frontier_, operand_,
-                n, program, axis,
+                n, program, axis, use_kernels,
             )
             return agg, touched
 

@@ -1,14 +1,10 @@
 from __future__ import annotations
 
-import jax
-
 from repro.kernels.embedding_bag.embedding_bag import embedding_bag_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.runtime import interpret_mode
 
 
 def embedding_bag(table, indices, mode="sum"):
     """(V,D) table x (B,L) bags -> (B,D) reduced embeddings, fused."""
-    return embedding_bag_pallas(table, indices, mode=mode, interpret=not _on_tpu())
+    return embedding_bag_pallas(
+        table, indices, mode=mode, interpret=interpret_mode())

@@ -1,12 +1,7 @@
 from __future__ import annotations
 
-import jax
-
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.runtime import interpret_mode
 
 
 def flash_attention(q, k, v, scale=None, window=0, causal=True):
@@ -14,5 +9,6 @@ def flash_attention(q, k, v, scale=None, window=0, causal=True):
     if scale is None:
         scale = 1.0 / (q.shape[-1] ** 0.5)
     return flash_attention_pallas(
-        q, k, v, float(scale), int(window), bool(causal), interpret=not _on_tpu()
+        q, k, v, float(scale), int(window), bool(causal),
+        interpret=interpret_mode(),
     )

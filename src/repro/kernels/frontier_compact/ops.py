@@ -1,19 +1,24 @@
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.frontier_compact.frontier_compact import frontier_compact_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.runtime import interpret_mode
 
 
 def frontier_compact(values: jax.Array, mask: jax.Array):
     """Compact rows of ``values`` where ``mask`` is set to a dense prefix.
-    Returns (compacted (m, c), count)."""
+    Returns (compacted (m, c), count).  ``count == 0`` (empty frontier)
+    is well-defined: the output tail is unspecified, the count is 0."""
     squeeze = False
     if values.ndim == 1:
         values, squeeze = values[:, None], True
-    out, cnt = frontier_compact_pallas(values, mask, interpret=not _on_tpu())
+    if values.shape[0] == 0:
+        # zero rows: the (TILE,)-blocked grid cannot slice an empty
+        # operand, and a 0-step grid would leave the count uninitialized.
+        out, cnt = values, jnp.int32(0)
+    else:
+        out, cnt = frontier_compact_pallas(
+            values, mask, interpret=interpret_mode())
     return (out[:, 0] if squeeze else out), cnt

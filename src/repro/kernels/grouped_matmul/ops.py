@@ -1,16 +1,11 @@
 from __future__ import annotations
 
-import jax
-
 from repro.kernels.grouped_matmul.grouped_matmul import grouped_matmul_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.runtime import interpret_mode
 
 
 def grouped_matmul(x_sorted, weights, starts, counts):
     """Megablocks-style grouped GEMM over expert-sorted tokens."""
     return grouped_matmul_pallas(
-        x_sorted, weights, starts, counts, interpret=not _on_tpu()
+        x_sorted, weights, starts, counts, interpret=interpret_mode()
     )

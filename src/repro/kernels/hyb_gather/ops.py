@@ -1,20 +1,24 @@
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.hyb_gather.hyb_gather import PAD, hyb_gather_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.runtime import interpret_mode
 
 
 def hyb_gather(edges: jax.Array, seg_start: jax.Array, degree: jax.Array):
     """Gather each active vertex's neighbour window (zero-copy engine).
     Returns (a, PAD, c); lanes past the vertex degree are zeroed.
-    Vertices with degree > PAD are split by the scheduler upstream."""
+    Vertices with degree > PAD are split by the scheduler upstream.
+    An empty frontier (``a == 0``) returns the empty (0, PAD, c) tensor
+    without launching the kernel (a 0-step grid has nothing to DMA)."""
     squeeze = False
     if edges.ndim == 1:
         edges, squeeze = edges[:, None], True
-    out = hyb_gather_pallas(edges, seg_start, degree, interpret=not _on_tpu())
+    if seg_start.shape[0] == 0:
+        out = jnp.zeros((0, PAD, edges.shape[1]), edges.dtype)
+    else:
+        out = hyb_gather_pallas(
+            edges, seg_start, degree, interpret=interpret_mode())
     return out[..., 0] if squeeze else out

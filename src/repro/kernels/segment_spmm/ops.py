@@ -1,16 +1,13 @@
 """Public wrapper: interpret=True on CPU (this container), compiled
-Pallas on TPU backends."""
+Pallas on TPU backends (backend policy: ``repro.kernels.runtime``)."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.runtime import interpret_mode
 from repro.kernels.segment_spmm.segment_spmm import segment_spmm_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def segment_spmm(
@@ -18,15 +15,31 @@ def segment_spmm(
     seg_ids: jax.Array,
     n_segments: int,
     valid: jax.Array | None = None,
+    combine: str = "sum",
 ) -> jax.Array:
-    """Segment-sum (m, d) messages into (n_segments, d) — the filter
-    engine's blocked aggregation."""
+    """Segment-combine (m, d) messages into (n_segments, d) — the filter
+    engine's blocked aggregation.
+
+    ``combine``: ``"sum"`` (scatter-add as MXU matmul) or ``"min"``
+    (traversal combiners; segments receiving no valid message hold
+    ``+inf``, the min identity, exactly like ``jax.ops.segment_min``).
+    ``n_segments`` may exceed every observed ``seg_ids`` entry — the
+    extra segments come back as the combiner identity.
+    """
     if valid is None:
         valid = jnp.ones(messages.shape[0], dtype=bool)
     squeeze = False
     if messages.ndim == 1:
         messages, squeeze = messages[:, None], True
-    out = segment_spmm_pallas(
-        messages, seg_ids, valid, n_segments, interpret=not _on_tpu()
-    )
+    if messages.shape[0] == 0:
+        # zero edges: the tiled grid would need a 0-row block slice
+        # (degenerate BlockSpec); the combine identity is the answer.
+        identity = jnp.inf if combine == "min" else 0.0
+        out = jnp.full((n_segments, messages.shape[1]), identity,
+                       messages.dtype)
+    else:
+        out = segment_spmm_pallas(
+            messages, seg_ids, valid, n_segments, combine=combine,
+            interpret=interpret_mode(),
+        )
     return out[:, 0] if squeeze else out

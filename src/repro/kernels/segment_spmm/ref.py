@@ -9,7 +9,12 @@ def segment_spmm_ref(
     seg_ids: jax.Array,   # (m,) destination ids
     n_segments: int,
     valid: jax.Array | None = None,  # (m,) bool
+    combine: str = "sum",
 ) -> jax.Array:
+    if combine == "min":
+        if valid is not None:
+            messages = jnp.where(valid[:, None], messages, jnp.inf)
+        return jax.ops.segment_min(messages, seg_ids, num_segments=n_segments)
     if valid is not None:
         messages = jnp.where(valid[:, None], messages, 0.0)
     return jax.ops.segment_sum(messages, seg_ids, num_segments=n_segments)

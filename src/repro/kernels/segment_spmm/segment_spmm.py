@@ -16,6 +16,16 @@ masks inactive edges in compute.  TPU adaptation (DESIGN.md §2):
 
 Inactive lanes (``valid=False``: filter-engine masked edges / padding)
 contribute zero rows through the same matmul.
+
+Traversal combiners (``combine="min"``) cannot ride the matmul (a sum),
+so the min variant routes each tile through an explicit masked
+select-and-reduce over a (TILE_E_MIN, TILE_N, d) broadcast — VPU, not
+MXU, with a smaller edge tile bounding the 3-D intermediate in VMEM —
+and accumulates with ``minimum`` into a ``+inf``-initialized scratch.
+``min`` of a fixed value multiset is order-independent, which is what
+makes the kernel-backed FILTER engine *bit-identical* to
+``jax.ops.segment_min`` (the engine oracle): segments receiving no valid
+message flush the ``+inf`` identity, exactly like the oracle.
 """
 
 from __future__ import annotations
@@ -27,11 +37,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-TILE_E = 512   # edges per tile
-TILE_N = 128   # output segments per block (lane-aligned)
+TILE_E = 512      # edges per tile (sum mode: one-hot MXU matmul)
+TILE_E_MIN = 128  # edges per tile (min mode: 3-D select bound to VMEM)
+TILE_N = 128      # output segments per block (lane-aligned)
 
 
-def _kernel(seg_ref, valid_ref, msg_ref, out_ref, acc_ref):
+def _kernel_sum(seg_ref, valid_ref, msg_ref, out_ref, acc_ref):
     oi = pl.program_id(0)   # output block index
     ei = pl.program_id(1)   # edge tile index
     n_edge_tiles = pl.num_programs(1)
@@ -63,30 +74,70 @@ def _kernel(seg_ref, valid_ref, msg_ref, out_ref, acc_ref):
         out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("n_segments", "interpret"))
+def _kernel_min(seg_ref, valid_ref, msg_ref, out_ref, acc_ref):
+    oi = pl.program_id(0)
+    ei = pl.program_id(1)
+    n_edge_tiles = pl.num_programs(1)
+
+    @pl.when(ei == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, jnp.inf)
+
+    seg = seg_ref[...]        # (TILE_E_MIN,)
+    valid = valid_ref[...]    # (TILE_E_MIN,)
+    msg = msg_ref[...]        # (TILE_E_MIN, d)
+
+    base = oi * TILE_N
+    local = seg - base
+    in_block = (local >= 0) & (local < TILE_N) & valid
+    route = (
+        (local[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (TILE_E_MIN, TILE_N), 1))
+        & in_block[:, None]
+    )
+    # masked select keeps ±inf messages intact (0 * inf = NaN rules the
+    # matmul idiom out for min); non-routed lanes contribute the identity
+    contrib = jnp.min(
+        jnp.where(route[:, :, None], msg[:, None, :].astype(jnp.float32),
+                  jnp.inf),
+        axis=0,
+    )  # (TILE_N, d)
+    acc_ref[...] = jnp.minimum(acc_ref[...], contrib.astype(acc_ref.dtype))
+
+    @pl.when(ei == n_edge_tiles - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_segments", "combine", "interpret"))
 def segment_spmm_pallas(
     messages: jax.Array,   # (m, d)
     seg_ids: jax.Array,    # (m,) int32
     valid: jax.Array,      # (m,) bool
     n_segments: int,
+    combine: str = "sum",
     interpret: bool = True,
 ) -> jax.Array:
+    if combine not in ("sum", "min"):
+        raise ValueError(f"combine must be 'sum' or 'min', got {combine!r}")
+    tile_e = TILE_E if combine == "sum" else TILE_E_MIN
+    kernel = _kernel_sum if combine == "sum" else _kernel_min
     m, d = messages.shape
-    m_pad = -(-m // TILE_E) * TILE_E
+    m_pad = -(-m // tile_e) * tile_e
     n_pad = -(-n_segments // TILE_N) * TILE_N
     d_pad = -(-d // 128) * 128
     msg = jnp.pad(messages, ((0, m_pad - m), (0, d_pad - d)))
     seg = jnp.pad(seg_ids.astype(jnp.int32), (0, m_pad - m), constant_values=-1)
     val = jnp.pad(valid, (0, m_pad - m), constant_values=False)
 
-    grid = (n_pad // TILE_N, m_pad // TILE_E)
+    grid = (n_pad // TILE_N, m_pad // tile_e)
     out = pl.pallas_call(
-        _kernel,
+        kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((TILE_E,), lambda oi, ei: (ei,)),
-            pl.BlockSpec((TILE_E,), lambda oi, ei: (ei,)),
-            pl.BlockSpec((TILE_E, d_pad), lambda oi, ei: (ei, 0)),
+            pl.BlockSpec((tile_e,), lambda oi, ei: (ei,)),
+            pl.BlockSpec((tile_e,), lambda oi, ei: (ei,)),
+            pl.BlockSpec((tile_e, d_pad), lambda oi, ei: (ei, 0)),
         ],
         out_specs=pl.BlockSpec((TILE_N, d_pad), lambda oi, ei: (oi, 0)),
         out_shape=jax.ShapeDtypeStruct((n_pad, d_pad), messages.dtype),

@@ -132,6 +132,12 @@ def main() -> None:
                     help="multiplicative measurement noise for --mode model")
     ap.add_argument("--max-edges", type=int, default=200_000,
                     help="cap on materialized edges per wall probe point")
+    ap.add_argument("--use-kernels", choices=["auto", "on", "off"],
+                    default="auto",
+                    help="wall-probe the Pallas-kernel-backed engines "
+                         "(mirrors HyTMConfig.use_kernels; 'auto' follows "
+                         "the backend, so the probes time the same path "
+                         "the runtime will dispatch)")
     ap.add_argument("--device-kind", default=None,
                     help="registry key (default: detected device kind)")
     ap.add_argument("--registry", default=None,
@@ -174,7 +180,9 @@ def main() -> None:
         # calibrate against the materialized grid the probe reports —
         # capped points are measured (and fitted) at their real size
         points = default_grid(edge_levels=(3.1e4, 1.1e5, 4.1e5), n_ratios=7)
-        points, obs = wall_probe(points, max_edges=args.max_edges)
+        uk = {"auto": "auto", "on": True, "off": False}[args.use_kernels]
+        points, obs = wall_probe(points, max_edges=args.max_edges,
+                                 use_kernels=uk)
 
     # wall measurements pay real per-call dispatch -> refit the overhead
     rep = calibrate(points, obs, initial, fit_overhead=args.mode == "wall")

@@ -117,6 +117,64 @@ def test_transfer_bytes_ordering():
     assert bytes_by_engine[ZEROCOPY] >= bytes_by_engine[COMPACT]
 
 
+def test_kernel_engines_match_oracles():
+    """Each kernel-backed engine (use_kernels=True) vs its pure-JAX oracle:
+    MIN bit-exact, SUM tolerance-bounded with a bit-exact touched mask —
+    the `HyTMConfig.use_kernels` contract."""
+    for seed in (0, 1, 2):
+        rng = np.random.default_rng(seed)
+        n, b = 64, 300
+        block = EdgeBlock(
+            src=jnp.asarray(rng.integers(0, n, b), jnp.int32),
+            dst=jnp.asarray(rng.integers(0, n, b), jnp.int32),
+            weight=jnp.asarray(rng.random(b), jnp.float32),
+            active=jnp.asarray(rng.random(b) < 0.5),
+        )
+        operand = jnp.asarray(rng.random(n), jnp.float32)
+        for fn in ENGINE_FNS:
+            for prog in (SSSP, PAGERANK):
+                ref = fn(block, operand, n, prog, use_kernels=False)
+                ker = fn(block, operand, n, prog, use_kernels=True)
+                if prog is SSSP:
+                    assert jnp.array_equal(ref.agg, ker.agg), (fn.__name__, seed)
+                else:
+                    assert jnp.allclose(ref.agg, ker.agg, atol=1e-5), (fn.__name__, seed)
+                assert jnp.array_equal(ref.touched, ker.touched), (fn.__name__, seed)
+
+
+def test_use_kernels_end_to_end_bit_exact():
+    """Full MIN runs with use_kernels on vs off: values, iteration count,
+    transfer accounting, and per-iteration engine picks all bit-identical —
+    across the single-dispatch (K=1) and chunked (K=4) drivers."""
+    g = rmat_graph(400, 3000, seed=21)
+    for K in (1, 4):
+        cfg = HyTMConfig(n_partitions=8, sync_every=K)
+        off = run_hytm(g, SSSP, source=0,
+                       config=dataclasses.replace(cfg, use_kernels=False))
+        on = run_hytm(g, SSSP, source=0,
+                      config=dataclasses.replace(cfg, use_kernels=True))
+        np.testing.assert_array_equal(off.values, on.values)
+        assert off.iterations == on.iterations
+        assert off.total_transfer_bytes == on.total_transfer_bytes
+        np.testing.assert_array_equal(
+            off.history["engines"], on.history["engines"])
+
+
+def test_use_kernels_pagerank_tolerance():
+    """SUM combiner: the tiled kernel accumulation reassociates float adds,
+    so values are tolerance-bounded; the engine trajectory stays identical
+    (selection consumes exact activity stats, not the summed values)."""
+    g = rmat_graph(300, 2400, seed=22)
+    prog = dataclasses.replace(PAGERANK, tolerance=1e-7)
+    cfg = HyTMConfig(n_partitions=8, cds_mode="delta")
+    off = run_hytm(g, prog, source=None,
+                   config=dataclasses.replace(cfg, use_kernels=False))
+    on = run_hytm(g, prog, source=None,
+                  config=dataclasses.replace(cfg, use_kernels=True))
+    assert np.max(np.abs(off.values - on.values)) < 1e-4
+    np.testing.assert_array_equal(off.history["engines"], on.history["engines"])
+
+
 def test_hybrid_never_worse_than_worst_engine():
     g = rmat_graph(1500, 12000, seed=14)
     times = {}

@@ -105,3 +105,136 @@ def test_segment_spmm_empty_and_full_valid():
     assert float(jnp.abs(none).sum()) == 0.0
     full = segment_spmm(msg, seg, 4, jnp.ones(64, bool))
     assert float(full[0, 0]) == 64.0
+
+
+# ---------------------------------------------------------------- min mode
+
+@pytest.mark.parametrize("m,d,n", [(100, 8, 40), (513, 1, 129), (1000, 16, 77)])
+def test_segment_spmm_min_sweep(m, d, n):
+    """combine='min' must be BIT-exact vs segment_min (the FILTER-engine
+    contract: min of a fixed multiset is order-independent)."""
+    msg = jnp.asarray(RNG.standard_normal((m, d)), jnp.float32)
+    seg = jnp.asarray(RNG.integers(0, n, m), jnp.int32)
+    valid = jnp.asarray(RNG.random(m) < 0.8)
+    got = segment_spmm(msg, seg, n, valid, combine="min")
+    want = segment_spmm_ref(msg, seg, n, valid, combine="min")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_segment_spmm_min_inf_messages():
+    """±inf messages (the MIN identity rides real frontiers) must survive
+    the masked-select path — the 0*inf=NaN trap that rules out the matmul."""
+    msg = jnp.asarray([jnp.inf, 1.0, -jnp.inf, jnp.inf], jnp.float32)[:, None]
+    seg = jnp.asarray([0, 0, 1, 2], jnp.int32)
+    got = segment_spmm(msg, seg, 4, combine="min")[:, 0]
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray([1.0, -np.inf, np.inf, np.inf], np.float32))
+
+
+# -------------------------------------------- degenerate shapes (regressions)
+
+def test_segment_spmm_empty_edge_stream():
+    """m==0 previously exploded in BlockSpec slicing; it must return the
+    combiner identity for every segment."""
+    out = segment_spmm(jnp.zeros((0, 3), jnp.float32), jnp.zeros((0,), jnp.int32), 5)
+    assert out.shape == (5, 3) and float(jnp.abs(out).sum()) == 0.0
+    out = segment_spmm(jnp.zeros((0,), jnp.float32), jnp.zeros((0,), jnp.int32), 4,
+                       combine="min")
+    assert out.shape == (4,) and bool(jnp.all(jnp.isinf(out)))
+
+
+def test_frontier_compact_empty_input():
+    """m==0 regression: a zero-step grid would leave count uninitialized."""
+    for shape in ((0,), (0, 2)):
+        vals, cnt = frontier_compact(jnp.zeros(shape, jnp.float32),
+                                     jnp.zeros((0,), bool))
+        assert vals.shape == shape and int(cnt) == 0
+
+
+def test_frontier_compact_nothing_survives():
+    vals, cnt = frontier_compact(jnp.arange(8, dtype=jnp.float32),
+                                 jnp.zeros(8, bool))
+    assert int(cnt) == 0 and vals.shape == (8,)
+
+
+def test_hyb_gather_no_requests():
+    """a==0 regression (an iteration with an empty ZC window list)."""
+    out = hyb_gather(jnp.ones((10, 4), jnp.float32),
+                     jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32))
+    assert out.shape[0] == 0 and out.ndim == 3
+
+
+def test_segment_spmm_unobserved_segments():
+    """n_segments far beyond any observed dst: tail segments must hold the
+    identity, not garbage from the padded one-hot tiles."""
+    msg = jnp.ones((4, 2), jnp.float32)
+    seg = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    out = np.asarray(segment_spmm(msg, seg, 300))
+    assert out.shape == (300, 2)
+    np.testing.assert_array_equal(out[:2], np.full((2, 2), 2.0, np.float32))
+    assert not out[2:].any()
+    mn = np.asarray(segment_spmm(msg, seg, 300, combine="min"))
+    np.testing.assert_array_equal(mn[:2], np.ones((2, 2), np.float32))
+    assert np.isinf(mn[2:]).all()
+
+
+def test_segment_spmm_1d_squeeze():
+    """1-D messages route through the (m, 1) kernel and squeeze back."""
+    msg = jnp.asarray(RNG.standard_normal(200), jnp.float32)
+    seg = jnp.asarray(RNG.integers(0, 30, 200), jnp.int32)
+    for combine in ("sum", "min"):
+        got = segment_spmm(msg, seg, 30, combine=combine)
+        assert got.shape == (30,)
+        want = segment_spmm_ref(msg[:, None], seg, 30, combine=combine)[:, 0]
+        tol = {} if combine == "min" else dict(atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol)
+
+
+# ------------------------------------------- tracing contexts (vmap / loop)
+
+def test_segment_spmm_under_vmap():
+    """The engine kernels run inside vmapped service lanes: batched
+    min-SpMM must stay bit-exact vs the batched oracle."""
+    B, m, n = 3, 257, 40
+    msgs = jnp.asarray(RNG.standard_normal((B, m)), jnp.float32)
+    seg = jnp.asarray(RNG.integers(0, n, m), jnp.int32)
+    got = jax.vmap(lambda mm: segment_spmm(mm, seg, n, combine="min"))(msgs)
+    want = jax.vmap(
+        lambda mm: segment_spmm_ref(mm[:, None], seg, n, combine="min")[:, 0]
+    )(msgs)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_frontier_compact_under_vmap():
+    B, m = 3, 300
+    vals = jnp.asarray(RNG.standard_normal((B, m)), jnp.float32)
+    masks = jnp.asarray(RNG.random((B, m)) < 0.4)
+    got, cnt = jax.vmap(frontier_compact)(vals, masks)
+    want, wcnt = jax.vmap(frontier_compact_ref)(vals, masks)
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(wcnt))
+    for i in range(B):
+        k = int(cnt[i])
+        np.testing.assert_array_equal(np.asarray(got[i, :k]),
+                                      np.asarray(want[i, :k]))
+
+
+def test_segment_spmm_inside_while_loop():
+    """The chunked driver calls the kernels from a lax.while_loop body;
+    the loop-carried relaxation must match the oracle's loop bit-exactly."""
+    m, n = 300, 64
+    src = jnp.asarray(RNG.integers(0, n, m), jnp.int32)
+    dst = jnp.asarray(RNG.integers(0, n, m), jnp.int32)
+    w = jnp.asarray(RNG.random(m), jnp.float32) + 0.5
+
+    def step(kernel):
+        def body(state):
+            i, x = state
+            msg = x[src] + w
+            agg = (segment_spmm(msg, dst, n, combine="min") if kernel
+                   else segment_spmm_ref(msg[:, None], dst, n, combine="min")[:, 0])
+            return i + 1, jnp.minimum(x, agg)
+
+        x0 = jnp.full((n,), jnp.inf, jnp.float32).at[0].set(0.0)
+        return jax.lax.while_loop(lambda s: s[0] < 5, body, (jnp.int32(0), x0))[1]
+
+    np.testing.assert_array_equal(np.asarray(step(True)), np.asarray(step(False)))
