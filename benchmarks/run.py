@@ -25,6 +25,7 @@ def main() -> None:
         iterloop,
         kernels,
         roofline,
+        serve_bench,
         stream_bench,
         table5_runtime,
         table6_transfer,
@@ -46,6 +47,7 @@ def main() -> None:
         "roofline": lambda: roofline.run(fast=args.fast),
         "stream": lambda: stream_bench.run(smoke=args.fast),
         "stream-devices": lambda: stream_bench.run_sharded(smoke=args.fast),
+        "serve": lambda: serve_bench.run(smoke=args.fast),
         "autotune": lambda: autotune_bench.run(fast=args.fast),
         "iterloop": lambda: iterloop.run(fast=args.fast),
     }

@@ -45,7 +45,7 @@ from repro.stream import GraphService, random_batch, run_incremental
 def run(smoke: bool = False, n_nodes: int | None = None,
         n_edges: int | None = None, n_partitions: int | None = None,
         n_batches: int | None = None, batch_edges: int | None = None,
-        n_queries: int | None = None, lanes: int = 4):
+        n_queries: int | None = None, lanes: int = 4, seed: int = 21):
     if smoke:
         n_nodes, n_edges, n_partitions = 1000, 8_000, 8
         n_batches, batch_edges, n_queries = 2, 48, 4
@@ -57,10 +57,10 @@ def run(smoke: bool = False, n_nodes: int | None = None,
         batch_edges = batch_edges or 256
         n_queries = n_queries or 16
 
-    g = rmat_graph(n_nodes, n_edges, seed=21)
+    g = rmat_graph(n_nodes, n_edges, seed=seed)
     cfg = HyTMConfig(n_partitions=n_partitions)
     svc = GraphService(g, cfg, max_lanes=lanes)
-    rng = np.random.default_rng(21)
+    rng = np.random.default_rng(seed)
 
     # --- query throughput: lane-batched vs sequential ---------------------
     # vertex 0 (the RMAT hub) leads: it is also the warm-recompute probe,
@@ -144,11 +144,11 @@ _SHARDED_SERVING_SCRIPT = """
 
     n_dev = len(jax.devices())
     n_nodes = {n_nodes}
-    g = rmat_graph(n_nodes, {n_edges}, seed=23)
+    g = rmat_graph(n_nodes, {n_edges}, seed={seed})
     cfg = HyTMConfig(n_partitions={n_partitions}, async_sweep=False,
                      mesh_axis="graph")
     svc = GraphService(g, cfg, max_lanes={lanes})
-    rng = np.random.default_rng(23)
+    rng = np.random.default_rng({seed})
 
     sources = [0] + rng.integers(0, n_nodes, size={n_queries} - 1).tolist()
     t0 = time.monotonic()
@@ -191,7 +191,7 @@ _SHARDED_SERVING_SCRIPT = """
 
 
 def run_sharded(n_devices: int = 4, smoke: bool = False,
-                selfcheck: bool = False) -> dict:
+                selfcheck: bool = False, seed: int = 23) -> dict:
     """Mesh-serving leg on ``n_devices`` forced-host devices (its own
     subprocess — jax locks the device count at first init).  With
     ``selfcheck`` the run exits non-zero unless sharded incremental
@@ -202,6 +202,7 @@ def run_sharded(n_devices: int = 4, smoke: bool = False,
     else:
         kw = dict(n_nodes=4_000, n_edges=64_000, n_partitions=16,
                   n_batches=4, batch_edges=128, n_queries=8, lanes=4)
+    kw["seed"] = seed
     from repro.launch.mesh import forced_host_device_env
 
     out = subprocess.run(
@@ -251,6 +252,9 @@ def main() -> None:
     ap.add_argument("--selfcheck", action="store_true",
                     help="gate the sharded leg: incremental must beat "
                          "the cold sharded restart (requires --devices)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="RNG seed for the graph, the query sources and "
+                         "the update batches (default: 21 local, 23 sharded)")
     args = ap.parse_args()
     if args.selfcheck and not args.devices:
         raise SystemExit("--selfcheck needs --devices N")
@@ -258,11 +262,13 @@ def main() -> None:
     t0 = time.monotonic()
     if args.devices:
         out = run_sharded(n_devices=args.devices, smoke=args.smoke,
-                          selfcheck=args.selfcheck)
+                          selfcheck=args.selfcheck,
+                          **({} if args.seed is None else {"seed": args.seed}))
         emit("stream/sharded_total_wall", (time.monotonic() - t0) * 1e6,
              f"iters_inc={out['iters_inc']} iters_cold={out['iters_cold']}")
         return
-    out = run(smoke=args.smoke)
+    out = run(smoke=args.smoke,
+              **({} if args.seed is None else {"seed": args.seed}))
     emit("stream/total_wall", (time.monotonic() - t0) * 1e6,
          f"iters_inc={out['iters_inc']} iters_full={out['iters_full']}")
 

@@ -487,6 +487,98 @@ def hytm_chunk(
     )
 
 
+@partial(
+    jax.jit,
+    static_argnames=("program", "config", "n_hub_partitions", "chunk"),
+    donate_argnames=("state",),
+)
+def hytm_batched_chunk(
+    state: HyTMState,        # (Q, n) lane-stacked
+    csr: DeviceCSR,
+    parts: DevicePartitions,
+    zc_req: jax.Array,
+    inv_deg: jax.Array,
+    program: VertexProgram,
+    config: HyTMConfig,
+    n_hub_partitions: int,
+    chunk: int,
+    correction: jax.Array | None = None,
+) -> tuple[HyTMState, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Chunked *lane-batched* sweep: up to ``chunk`` vmapped iterations of
+    ``_iteration_impl`` inside one ``lax.while_loop`` dispatch, over a
+    state whose leading dimension stacks Q independent source lanes.
+
+    This is the dispatch unit of the serving stack (``repro.serve``):
+    the carry holds the **per-lane** ``next_active`` vector, so the chunk
+    returns ``lane_active`` — a ``(Q,)`` count of each lane's frontier
+    population after its last executed iteration — instead of collapsing
+    it to a batch total.  A lane whose entry is 0 has converged (its
+    values are already its fixpoint; further iterations are no-ops for
+    it), which is exactly the signal the continuous scheduler uses to
+    free the lane's slot at the chunk boundary and backfill it from the
+    request queue.  The while-condition sums the vector, preserving the
+    chunk/early-exit contract of ``hytm_chunk``: the batch runs while any
+    lane is still active, and stops the moment every frontier drains.
+
+    Lanes never interact — ``jax.vmap`` evaluates the cost model, engine
+    selection, schedule, and sweep per lane — so each lane's trajectory
+    is bit-identical to its standalone ``run_hytm`` run for min-combine
+    programs (tolerance-bounded for sum-combine), whatever the other
+    lanes (including dead, all-``False``-frontier padding lanes) are
+    doing.  The loop carries running reductions instead of history:
+    summed per-engine modeled seconds and mispredictions, the
+    calibrator's chunk-granular observation inputs.
+
+    Returns ``(state, n_done, lane_active, per_engine_sum,
+    mispred_sum)``.
+    """
+    def one(s):
+        return _iteration_impl(
+            s, csr, parts, zc_req, inv_deg, program, config,
+            n_hub_partitions, correction,
+        )
+
+    def cond(carry):
+        _s, i, lane_active, _pe, _mp = carry
+        return (i < chunk) & (jnp.sum(lane_active) != 0)
+
+    def body(carry):
+        s, i, _prev, pe, mp = carry
+        s2, info = jax.vmap(one)(s)
+        return (
+            s2,
+            i + 1,
+            info["next_active"],
+            pe + jnp.sum(info["per_engine_time"], axis=0),
+            mp + jnp.sum(info["mispredictions"]),
+        )
+
+    n_lanes = state.values.shape[0]
+    # sentinel ones: the first iteration always runs, matching the K=1
+    # loop (which runs one iteration even on an empty frontier)
+    init = (state, jnp.int32(0), jnp.ones(n_lanes, jnp.int32),
+            jnp.zeros(3, jnp.float32), jnp.int32(0))
+    state, n_done, lane_active, pe_sum, mp_sum = jax.lax.while_loop(
+        cond, body, init)
+    return state, n_done, lane_active, pe_sum, mp_sum
+
+
+def dead_lane_state(program: VertexProgram, n: int) -> tuple:
+    """The (values, delta, frontier) triple of a *dead* padding lane: an
+    all-``False`` frontier and zero pending Δ, so every iteration is a
+    no-op for it — zero active edges, all engines NONE, no consumption,
+    and a ``next_active`` of 0 from the first chunk on.  Used to pad a
+    partial request batch up to the next static lane bucket
+    (``repro.serve.scheduler``) so admission never changes the traced
+    lane count."""
+    return (
+        jnp.zeros(n, jnp.float32) if program.use_delta
+        else jnp.full(n, jnp.inf, jnp.float32),
+        jnp.zeros(n, jnp.float32),
+        jnp.zeros(n, dtype=bool),
+    )
+
+
 @contextlib.contextmanager
 def count_driver_dispatches():
     """Count convergence-driver dispatches by swapping the module-global

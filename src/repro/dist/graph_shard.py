@@ -558,16 +558,21 @@ def make_sharded_batched_chunk(
     over its own frontier, while the edge blocks stay sharded over the
     mesh axis and every relaxation merges with the same bulk-synchronous
     pmin/psum collectives as the single-lane sweep (one batched
-    collective carries all lanes).  Early exit sums ``next_active``
-    across lanes, mirroring ``service._batched_chunk``: converged lanes
-    idle as no-ops only while a straggler is still inside the chunk.
+    collective carries all lanes).  The carry holds the **per-lane**
+    ``next_active`` vector (the early-exit condition sums it, matching
+    ``core.hytm.hytm_batched_chunk``): converged lanes idle as no-ops
+    only while a straggler is still inside the chunk, and the returned
+    ``lane_active`` is the signal the continuous scheduler
+    (``repro.serve``) uses to free converged lanes at the chunk boundary
+    and backfill their slots on the mesh path.
 
     The service reads no per-iteration history; the loop carries running
     reductions (summed per-engine modeled seconds + mispredictions — the
     calibrator's chunk-granular observation inputs) plus a ``(chunk,)``
     row of lane-summed ``merged_entries`` for the host-side ICI-level
-    accounting.  Returns ``(state, n_done, last_active_total,
-    per_engine_sum, mispred_sum, merged_rows)``."""
+    accounting.  Returns ``(state, n_done, lane_active,
+    per_engine_sum, mispred_sum, merged_rows)`` with ``lane_active`` of
+    shape ``(Q,)``."""
     impl = _make_iteration_impl(rt, program, config)
 
     @partial(jax.jit, donate_argnames=("state",))
@@ -578,8 +583,8 @@ def make_sharded_batched_chunk(
                         correction)
 
         def cond(carry):
-            _s, i, prev_active, _pe, _mp, _me = carry
-            return (i < chunk) & (prev_active != 0)
+            _s, i, lane_active, _pe, _mp, _me = carry
+            return (i < chunk) & (jnp.sum(lane_active) != 0)
 
         def body(carry):
             s, i, _prev, pe, mp, me = carry
@@ -587,13 +592,16 @@ def make_sharded_batched_chunk(
             return (
                 s2,
                 i + 1,
-                jnp.sum(info["next_active"]),
+                info["next_active"],
                 pe + jnp.sum(info["per_engine_time"], axis=0),
                 mp + jnp.sum(info["mispredictions"]),
                 me.at[i].set(jnp.sum(info["merged_entries"])),
             )
 
-        init = (state, jnp.int32(0), jnp.int32(1),
+        n_lanes = state.values.shape[0]
+        # sentinel ones: the first iteration always runs, matching the
+        # K=1 loop (which runs one iteration even on an empty frontier)
+        init = (state, jnp.int32(0), jnp.ones(n_lanes, jnp.int32),
                 jnp.zeros(3, jnp.float32), jnp.int32(0),
                 jnp.zeros(chunk, jnp.int32))
         return jax.lax.while_loop(cond, body, init)

@@ -43,9 +43,23 @@ class VertexProgram:
     damping: float = 0.85
     tolerance: float = 1e-3
     weighted: bool = True
+    # Personalized accumulative programs (PPR): the teleport mass lands on
+    # a single source vertex instead of uniformly, so the program is
+    # *per-source* like a traversal — it multiplexes into the vmapped
+    # lane sweep (many sparse SUM lanes) and caches per source, while the
+    # un-personalized family (PageRank) stays global (source=None key).
+    personalized: bool = False
 
     def init_state(self, n: int, source: int | None):
-        if self.use_delta:
+        if self.use_delta and self.personalized and source is not None:
+            # Δ-PPR: all (1-d) teleport mass starts as pending delta on
+            # the personalization source; fixpoint values solve
+            # r = (1-d)·e_s + d·AᵀD⁻¹·r  (reference_ppr).
+            values = jnp.zeros(n, dtype=jnp.float32)
+            delta = jnp.zeros(n, dtype=jnp.float32).at[source].set(
+                1.0 - self.damping)
+            frontier = jnp.zeros(n, dtype=bool).at[source].set(True)
+        elif self.use_delta:
             values = jnp.zeros(n, dtype=jnp.float32)
             delta = jnp.full(n, 1.0 - self.damping, dtype=jnp.float32)
             frontier = jnp.ones(n, dtype=bool)
@@ -86,8 +100,10 @@ BFS = VertexProgram("bfs", MIN, _bfs_msg, weighted=False)
 CC = VertexProgram("cc", MIN, _cc_msg, weighted=False)
 PAGERANK = VertexProgram("pagerank", SUM, _pr_msg, use_delta=True, weighted=False)
 PHP = VertexProgram("php", SUM, _php_msg, use_delta=True, weighted=True)
+PPR = VertexProgram("ppr", SUM, _pr_msg, use_delta=True, weighted=False,
+                    personalized=True)
 
-ALGORITHMS = {p.name: p for p in (SSSP, BFS, CC, PAGERANK, PHP)}
+ALGORITHMS = {p.name: p for p in (SSSP, BFS, CC, PAGERANK, PHP, PPR)}
 
 
 # --------------------------------------------------------------------------
@@ -143,6 +159,29 @@ def reference_cc(g: CSRGraph) -> np.ndarray:
         changed = not np.array_equal(new, label)
         label = new
     return label
+
+
+def reference_ppr(
+    g: CSRGraph, source: int, damping: float = 0.85, iters: int = 500
+) -> np.ndarray:
+    """Personalized PageRank matching Δ-PPR push semantics:
+    r = (1-d)·e_s + d·AᵀD⁻¹r, dangling mass dropped (same as the
+    push-based program, which pushes along out-edges only)."""
+    n = g.n_nodes
+    deg = np.maximum(g.out_degrees.astype(np.float64), 1)
+    src = g.edge_sources()
+    teleport = np.zeros(n)
+    teleport[source] = 1.0 - damping
+    r = teleport.copy()
+    for _ in range(iters):
+        contrib = damping * r[src] / deg[src]
+        nxt = teleport.copy()
+        np.add.at(nxt, g.indices, contrib)
+        if np.max(np.abs(nxt - r)) < 1e-12:
+            r = nxt
+            break
+        r = nxt
+    return r
 
 
 def reference_pagerank(g: CSRGraph, damping: float = 0.85, iters: int = 200) -> np.ndarray:

@@ -75,8 +75,38 @@ def selfcheck() -> None:
             sharded.values, run_hytm(g2, SSSP, source=0, config=cfg).values
         )
 
+    # 6. multi-tenant scheduler contract (repro.serve): EDF admission
+    # under per-tenant quotas + a device byte budget small enough to
+    # force cache spills — answers must still equal solo runs, the
+    # budget must hold, and no quota may be exceeded mid-flight
+    from repro.graph.algorithms import PPR
+    from repro.serve import Request, RequestQueue
+
+    n = svc.dcsr.n_nodes
+    tiny = GraphService(svc.dcsr.to_host_graph(), cfg, max_lanes=2,
+                        device_budget_bytes=2 * 9 * n)
+    q = RequestQueue(quota=2, tenant_quotas={"bronze": 1})
+    for i, s in enumerate([0, 3, 77, 210, 3, 9]):
+        tenant = ["gold", "silver", "bronze"][i % 3]
+        q.submit(Request(tenant=tenant, program=SSSP, source=s,
+                         deadline=float(i)))
+    served = tiny.scheduler.pump(q)
+    assert len(served) == 6 and q.stats.rejected == 0
+    g3 = tiny.dcsr.to_host_graph()
+    for r in served:
+        solo = run_hytm(g3, SSSP, source=r.request.source, config=cfg)
+        np.testing.assert_array_equal(r.values, solo.values)
+    assert tiny.scheduler.stats.max_device_bytes <= 2 * 9 * n
+
+    # personalized PageRank serves through the same lanes (tolerance
+    # program: oracle comparison lives in tests/test_serve.py)
+    ppr = dataclasses.replace(PPR, tolerance=1e-7)
+    r = tiny.query(ppr, [0])[0]
+    assert r.mode == "batched" and r.iterations > 0
+
     print(f"SELFCHECK OK ({len(jax.devices())} device(s)) — "
-          f"stats: {svc.stats}")
+          f"stats: {svc.stats}; serve: {tiny.scheduler.stats} "
+          f"cache: {tiny.cache.stats.as_dict()}")
 
 
 def main() -> None:
@@ -86,12 +116,20 @@ def main() -> None:
     ap.add_argument("--edges", type=int, default=80_000)
     ap.add_argument("--partitions", type=int, default=32)
     ap.add_argument("--algorithm", default="sssp",
-                    choices=["sssp", "bfs", "cc", "pagerank", "php"])
+                    choices=["sssp", "bfs", "cc", "pagerank", "php", "ppr"])
     ap.add_argument("--queries", type=int, default=16)
     ap.add_argument("--lanes", type=int, default=8)
     ap.add_argument("--update-batches", type=int, default=4)
     ap.add_argument("--update-size", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--device-budget-bytes", type=int, default=None,
+                    help="device byte budget for in-flight lane state + "
+                         "the warm cache's device tier (overflow spills "
+                         "to host RAM; default: unbounded)")
+    ap.add_argument("--lane-buckets", default=None,
+                    help="comma-separated static lane bucket sizes for "
+                         "the serving scheduler (default: powers of two "
+                         "up to --lanes); admission never recompiles")
     args = ap.parse_args()
 
     if args.selfcheck:
@@ -106,7 +144,11 @@ def main() -> None:
     program = ALGORITHMS[args.algorithm]
     g = rmat_graph(args.nodes, args.edges, seed=args.seed)
     cfg = HyTMConfig(n_partitions=args.partitions)
-    svc = GraphService(g, cfg, max_lanes=args.lanes)
+    buckets = (tuple(int(b) for b in args.lane_buckets.split(","))
+               if args.lane_buckets else None)
+    svc = GraphService(g, cfg, max_lanes=args.lanes,
+                       device_budget_bytes=args.device_budget_bytes,
+                       lane_buckets=buckets)
     rng = np.random.default_rng(args.seed)
 
     sources = rng.integers(0, args.nodes, size=args.queries).tolist()
@@ -131,6 +173,8 @@ def main() -> None:
     print(f"stats: hits={s.n_cache_hits} incremental={s.n_incremental} "
           f"full={s.n_full} sweeps={s.sweep_iterations} "
           f"updated_edges={s.update_edges} version={svc.version}")
+    print(f"cache tiers: {svc.cache.stats.as_dict()} "
+          f"(device_bytes={svc.cache.device_bytes})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,40 @@
+"""repro.serve — continuous multi-tenant serving on top of GraphService.
+
+The serving stack splits into three pieces (one file each):
+
+* :mod:`repro.serve.queue` — request queue with per-tenant quotas,
+  deadline-aware ordering, and admission control against the
+  device-resident state budget;
+* :mod:`repro.serve.scheduler` — continuous lane batching over static
+  bucket sizes, freeing converged lanes at chunk boundaries and
+  backfilling them mid-flight;
+* :mod:`repro.serve.warm_cache` — two-tier (device LRU → host RAM)
+  warm-state cache with promote-and-replay.
+
+``GraphService`` owns one :class:`LaneScheduler` and one
+:class:`WarmCache`; ``benchmarks/serve_bench.py`` drives the scheduler
+closed-loop with a multi-tenant trace.
+"""
+
+from repro.serve.queue import QueueStats, Request, RequestQueue
+from repro.serve.scheduler import (
+    LaneScheduler,
+    SchedulerStats,
+    ServedResult,
+    default_buckets,
+)
+from repro.serve.warm_cache import CacheStats, TierPolicy, WarmCache, WarmEntry
+
+__all__ = [
+    "QueueStats",
+    "Request",
+    "RequestQueue",
+    "LaneScheduler",
+    "SchedulerStats",
+    "ServedResult",
+    "default_buckets",
+    "CacheStats",
+    "TierPolicy",
+    "WarmCache",
+    "WarmEntry",
+]

@@ -1,0 +1,237 @@
+"""Tiered warm-state cache for the serving stack (repro.serve).
+
+Converged (values, Δ) states are the serving stack's working set: a
+repeat query at the same graph version is a pure hit, and a stale state
+warm-starts incremental recomputation (repro.stream.incremental) instead
+of a from-scratch sweep.  At multi-tenant scale the states no longer all
+fit on the accelerator, so the cache is **two-tiered**, following
+Totem's hybrid host/device state placement (PAPERS.md — demote cold
+state to host memory instead of dropping it):
+
+* **device tier** — entries held as device arrays (``jax.Array``),
+  immediately usable as warm-start seeds with no transfer.  Bounded by
+  ``TierPolicy.device_budget_bytes`` (LRU): inserting or touching past
+  the budget *spills* the least-recently-used device entries to...
+* **host tier** — the same states demoted to host RAM (``np.ndarray``).
+  A query that hits a host entry *promotes* it back to the device tier
+  (:meth:`WarmCache.promote`) and, if the graph has moved on since the
+  entry's version, replays the retained update reports through the
+  incremental path — the tier policy that generalizes the old
+  ``GraphService.max_reports`` flat bound;
+* entries **too stale to replay** the retained report suffix are evicted
+  outright from either tier (their next query recomputes in full), so an
+  abandoned entry can never grow the report log without limit.
+
+Per-tier hit/miss/spill/promotion counters live in :class:`CacheStats`
+and surface through ``GraphService.stats.extra`` and the serve_bench
+report.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEVICE, HOST = "device", "host"
+
+
+@dataclass(frozen=True)
+class TierPolicy:
+    """The explicit tier policy (generalizing ``GraphService.max_reports``):
+
+    * ``device_budget_bytes`` — LRU byte budget of the device tier
+      (``None`` = unbounded: nothing ever spills, the pre-serve
+      single-tier behavior);
+    * ``max_reports`` — replay horizon: how many update reports are
+      retained for promote-time replay; entries older than the retained
+      suffix are evicted from *both* tiers rather than kept unreplayable.
+    """
+
+    device_budget_bytes: int | None = None
+    max_reports: int = 256
+
+
+@dataclass
+class CacheStats:
+    device_hits: int = 0
+    host_hits: int = 0
+    misses: int = 0
+    spills: int = 0        # device -> host demotions
+    promotions: int = 0    # host -> device
+    evictions: int = 0     # dropped from both tiers (unreplayable / dead)
+
+    def as_dict(self) -> dict:
+        return {
+            "device_hits": self.device_hits, "host_hits": self.host_hits,
+            "misses": self.misses, "spills": self.spills,
+            "promotions": self.promotions, "evictions": self.evictions,
+        }
+
+
+@dataclass
+class WarmEntry:
+    version: int
+    values: object          # jax.Array (device tier) | np.ndarray (host)
+    delta: object
+    tier: str = DEVICE
+    nbytes: int = 0
+    lru: int = 0
+
+
+class WarmCache:
+    """Two-tier LRU warm-state cache.  Dict-like over ``(program, source)``
+    keys so ``GraphService`` bookkeeping (floor computation, staleness
+    eviction) reads it exactly like the flat dict it replaces."""
+
+    def __init__(self, policy: TierPolicy | None = None):
+        self.policy = policy or TierPolicy()
+        self._entries: dict = {}
+        self._clock = 0
+        self.stats = CacheStats()
+
+    # ------------------------------------------------------------- dict-like
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __delitem__(self, key) -> None:
+        self.evict(key)
+
+    def keys(self):
+        return self._entries.keys()
+
+    def values(self):
+        return self._entries.values()
+
+    def items(self):
+        return self._entries.items()
+
+    def __iter__(self) -> Iterator:
+        return iter(self._entries)
+
+    # ------------------------------------------------------------------ core
+    @property
+    def device_bytes(self) -> int:
+        return sum(e.nbytes for e in self._entries.values()
+                   if e.tier == DEVICE)
+
+    def _touch(self, entry: WarmEntry) -> None:
+        self._clock += 1
+        entry.lru = self._clock
+
+    def peek(self, key) -> WarmEntry | None:
+        """Counter-free lookup (still bumps LRU): the ``GraphService``
+        query front end peeks, so a request that then flows into the
+        scheduler is counted exactly once by the scheduler's
+        :meth:`get`."""
+        entry = self._entries.get(key)
+        if entry is not None:
+            self._touch(entry)
+        return entry
+
+    def get(self, key) -> WarmEntry | None:
+        """Look up without tier movement (no promotion): returns the
+        entry whatever its tier, bumping LRU and per-tier hit/miss
+        counters.  Callers that need the state device-resident follow up
+        with :meth:`promote`."""
+        entry = self._entries.get(key)
+        if entry is None:
+            self.stats.misses += 1
+            return None
+        self._touch(entry)
+        if entry.tier == DEVICE:
+            self.stats.device_hits += 1
+        else:
+            self.stats.host_hits += 1
+        return entry
+
+    def put(self, key, version: int, values, delta,
+            reserved_bytes: int = 0) -> WarmEntry:
+        """Insert/refresh ``key`` in the *device* tier, then spill LRU
+        entries to host until the tier fits the budget minus
+        ``reserved_bytes`` (bytes the scheduler has pinned for in-flight
+        lane state — warm states yield to live lanes)."""
+        values = jnp.asarray(values)
+        delta = jnp.asarray(delta)
+        nbytes = int(values.nbytes) + int(delta.nbytes)
+        entry = WarmEntry(version=version, values=values, delta=delta,
+                          tier=DEVICE, nbytes=nbytes)
+        self._touch(entry)
+        self._entries[key] = entry
+        self.shrink_to_budget(reserved_bytes)
+        return entry
+
+    def promote(self, key, reserved_bytes: int = 0) -> WarmEntry | None:
+        """Promote ``key``'s state back to the device tier (host -> device
+        ``jax.device_put``), spilling colder entries if the budget
+        requires.
+
+        Equivalence guarantee: the spill -> promote round trip is exact —
+        ``device_get``/``device_put`` preserve every f32 bit, so the
+        promoted (values, Δ) triple is bit-identical to the state that
+        was demoted.  A stale promoted entry then replays the update
+        reports retained since its version through the incremental path
+        (``GraphService._query_incremental``), which is the *same*
+        replay the never-evicted device-tier entry would run — hence
+        spill -> promote -> replay is bit-identical to never-evicted for
+        MIN programs and tolerance-bounded for SUM programs
+        (property-tested in ``tests/test_serve.py``).
+        """
+        entry = self._entries.get(key)
+        if entry is None:
+            return None
+        if entry.tier == HOST:
+            entry.values = jax.device_put(jnp.asarray(entry.values))
+            entry.delta = jax.device_put(jnp.asarray(entry.delta))
+            entry.tier = DEVICE
+            self.stats.promotions += 1
+            self._touch(entry)
+            self.shrink_to_budget(reserved_bytes, keep=key)
+        return entry
+
+    def _spill(self, key) -> None:
+        entry = self._entries[key]
+        entry.values = np.asarray(entry.values)
+        entry.delta = np.asarray(entry.delta)
+        entry.tier = HOST
+        self.stats.spills += 1
+
+    def shrink_to_budget(self, reserved_bytes: int = 0,
+                         keep=None) -> None:
+        """Spill LRU device entries to host until
+        ``device_bytes <= device_budget_bytes - reserved_bytes``.  The
+        scheduler calls this before pinning lane state for a new batch,
+        so admission never drives the device-resident total (lanes +
+        warm tier) past the budget.  ``keep`` marks one key exempt (the
+        entry just promoted — spilling it back immediately would
+        livelock)."""
+        budget = self.policy.device_budget_bytes
+        if budget is None:
+            return
+        limit = max(0, budget - reserved_bytes)
+        if self.device_bytes <= limit:
+            return
+        device_keys = sorted(
+            (k for k, e in self._entries.items() if e.tier == DEVICE),
+            key=lambda k: self._entries[k].lru,
+        )
+        for k in device_keys:
+            if self.device_bytes <= limit:
+                break
+            if k == keep:
+                continue
+            self._spill(k)
+
+    def evict(self, key) -> None:
+        del self._entries[key]
+        self.stats.evictions += 1
+
+    def clear(self) -> None:
+        self.stats.evictions += len(self._entries)
+        self._entries.clear()

@@ -1,25 +1,27 @@
 """Batched graph-query serving over a live ``DeltaCSR``.
 
 ``GraphService`` multiplexes concurrent vertex queries (SSSP / BFS / CC /
-Δ-PR) over one graph container:
+Δ-PR / Δ-PPR) over one graph container:
 
-* **source-lane batching** — up to ``max_lanes`` pending single-source
-  queries stack into a (Q, n) state and run through ``hytm_iteration``
-  under ``jax.vmap``: each lane carries its own frontier, so the cost
-  model, engine selection, and priority schedule are evaluated *per
-  lane*, making every lane's dataflow identical to its standalone run
-  (bit-exact for MIN programs — converged lanes are no-ops while the
-  stragglers finish).  With ``HyTMConfig.sync_every > 1`` the sweep is
-  chunked (``_batched_chunk``): K vmapped iterations share one
-  ``lax.while_loop`` dispatch, and the host syncs once per chunk instead
-  of once per iteration — the same device-resident driver ``run_hytm``
-  uses, lifted over the lane dimension;
-* **result cache** — converged (values, Δ) keyed by
-  ``(graph_version, program, source)``.  A repeat query at the same
-  version is a pure cache hit: zero sweep iterations.  An update batch
-  invalidates direct hits (the version key moves on) but the stale entry
-  is retained as the *warm state* for incremental recomputation
-  (repro.stream.incremental) against the reports applied since;
+* **source-lane batching** — pending single-source queries run through
+  the continuous lane scheduler (``repro.serve.scheduler``): sources
+  stack into a (Q, n) state padded to a *static lane bucket* and sweep
+  through ``core.hytm.hytm_batched_chunk`` under ``jax.vmap``.  Each
+  lane carries its own frontier, so the cost model, engine selection,
+  and priority schedule are evaluated *per lane*, making every lane's
+  dataflow identical to its standalone run (bit-exact for MIN programs).
+  Converged lanes free their slot at chunk boundaries and the scheduler
+  backfills them from the pending queue mid-flight — the device never
+  waits for the straggler before starting the next source;
+* **tiered result cache** — converged (values, Δ) keyed by
+  ``(program, source)`` in a two-tier warm cache
+  (``repro.serve.warm_cache``): a device tier bounded by
+  ``device_budget_bytes`` (LRU) spilling to a host-RAM tier.  A repeat
+  query at the same version is a pure hit: zero sweep iterations.  An
+  update batch invalidates direct hits (the version key moves on) but
+  the stale entry is retained as the *warm state* for incremental
+  recomputation (repro.stream.incremental) against the reports applied
+  since — promoted back to the device tier first if it was spilled;
 * **updates** — ``update(batch)`` applies an ``EdgeBatch`` through the
   container (device buffers patched in place) and logs the report for
   later warm-starts (bounded by ``max_reports``: overflow evicts the
@@ -31,102 +33,34 @@
   single-device ``async_sweep=False`` counterpart for MIN programs.
 
 Accumulative programs (``use_delta``) are global — their cache key uses
-``source=None`` whatever the caller passed.
+``source=None`` whatever the caller passed — *except* personalized ones
+(Δ-PPR), which key per source and multiplex into the lane sweep like
+traversals.
 
 With ``HyTMConfig.autotune`` the service carries one
 ``repro.autotune.OnlineCalibrator`` for its whole lifetime: every
 multiplexed lane sweep contributes a measured-vs-modeled observation,
 and the resulting per-engine correction biases each lane's engine
 selection (and hence the priority schedule) on subsequent iterations and
-queries.  ``stats.extra`` reports the live correction vector and the
-accumulated misprediction count.
+queries.  ``stats.extra`` reports the live correction vector, the
+accumulated misprediction count, and the warm-cache tier counters.
 """
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
-from functools import partial
 from typing import Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hytm import (
-    HyTMConfig,
-    HyTMState,
-    _consume_warm,
-    _iteration_impl,
-    hytm_iteration,
-    quiet_donation,
-    run_hytm,
-)
+from repro.core.hytm import HyTMConfig, run_hytm
 from repro.graph.algorithms import VertexProgram
 from repro.graph.csr import CSRGraph
+from repro.serve.scheduler import LaneScheduler
+from repro.serve.warm_cache import TierPolicy, WarmCache
 from repro.stream.delta_csr import DeltaCSR, EdgeBatch, UpdateReport
 from repro.stream.incremental import run_incremental
-
-
-@partial(jax.jit, static_argnames=("program", "config", "nhp"))
-def _batched_iteration(state, csr, parts, zc_req, inv_deg, program, config, nhp,
-                       correction=None):
-    """One HyTM iteration vmapped over the source-lane dimension.
-
-    ``correction`` (optional (3,)) is shared across lanes — one
-    machine, one set of per-engine corrections — while each lane still
-    runs its own cost model and selection over its own frontier."""
-    return jax.vmap(
-        lambda s: hytm_iteration(
-            s, csr, parts, zc_req, inv_deg, program, config, nhp, correction
-        )
-    )(state)
-
-
-@partial(
-    jax.jit,
-    static_argnames=("program", "config", "nhp", "chunk"),
-    donate_argnames=("state",),
-)
-def _batched_chunk(state, csr, parts, zc_req, inv_deg, program, config, nhp,
-                   chunk, correction=None):
-    """Chunked lane sweep (``config.sync_every > 1``): up to ``chunk``
-    vmapped iterations inside one ``lax.while_loop`` dispatch, early-
-    exiting once every lane's frontier drains (``core.hytm.hytm_chunk``'s
-    chunk/early-exit contract, lifted over the lane dimension: the
-    while-condition sums ``next_active`` across lanes, so converged lanes
-    idle as no-ops only while a straggler is still inside the chunk).
-    The service never reads per-iteration history, so instead of (K, ...)
-    buffers the loop carries running reductions: summed per-engine
-    modeled seconds and mispredictions (the calibrator's chunk-granular
-    observation inputs).  Returns
-    ``(state, n_done, last_active_total, per_engine_sum, mispred_sum)``.
-    """
-    def one(s):
-        return _iteration_impl(
-            s, csr, parts, zc_req, inv_deg, program, config, nhp, correction
-        )
-
-    def cond(carry):
-        _s, i, prev_active, _pe, _mp = carry
-        return (i < chunk) & (prev_active != 0)
-
-    def body(carry):
-        s, i, _prev, pe, mp = carry
-        s2, info = jax.vmap(one)(s)
-        return (
-            s2,
-            i + 1,
-            jnp.sum(info["next_active"]),
-            pe + jnp.sum(info["per_engine_time"], axis=0),
-            mp + jnp.sum(info["mispredictions"]),
-        )
-
-    init = (state, jnp.int32(0), jnp.int32(1),
-            jnp.zeros(3, jnp.float32), jnp.int32(0))
-    state, n_done, last_active, pe_sum, mp_sum = jax.lax.while_loop(
-        cond, body, init)
-    return state, n_done, last_active, pe_sum, mp_sum
 
 
 @dataclass
@@ -136,13 +70,6 @@ class QueryResult:
     iterations: int        # sweep iterations this query paid for
     cache_hit: bool
     mode: str              # 'cache' | 'incremental' | 'batched'
-
-
-@dataclass
-class _CacheEntry:
-    version: int
-    values: np.ndarray
-    delta: np.ndarray
 
 
 @dataclass
@@ -166,6 +93,8 @@ class GraphService:
         incremental: bool = True,
         max_reports: int = 256,
         mesh=None,
+        device_budget_bytes: int | None = None,
+        lane_buckets: Sequence[int] | None = None,
         **delta_kw,
     ):
         self.config = config if config is not None else HyTMConfig()
@@ -195,8 +124,14 @@ class GraphService:
         self.max_reports = max_reports
         # keyed by the (frozen, hashable) program itself, not its name:
         # variants like dataclasses.replace(PAGERANK, tolerance=1e-8)
-        # must not collide with each other's converged results
-        self._cache: dict[tuple[VertexProgram, int | None], _CacheEntry] = {}
+        # must not collide with each other's converged results.  The
+        # tier policy makes the old flat ``max_reports`` bound explicit
+        # and adds the device-tier LRU byte budget (warm_cache docstring).
+        self.cache = WarmCache(TierPolicy(
+            device_budget_bytes=device_budget_bytes,
+            max_reports=max_reports,
+        ))
+        self._cache = self.cache  # dict-like; historical alias
         self._reports: list[UpdateReport] = []
         self.stats = ServiceStats()
         # online feedback (repro.autotune): one calibrator for the whole
@@ -208,6 +143,11 @@ class GraphService:
             from repro.autotune.feedback import OnlineCalibrator
 
             self._calibrator = OnlineCalibrator(decay=self.config.autotune_decay)
+        # the continuous lane scheduler owns every multiplexed sweep
+        # (degenerate single-tenant mode here; multi-tenant closed-loop
+        # serving drives LaneScheduler.pump directly — serve_bench)
+        self.scheduler = LaneScheduler(
+            self, buckets=tuple(lane_buckets) if lane_buckets else None)
 
     # ----------------------------------------------------------------- update
     @property
@@ -230,13 +170,15 @@ class GraphService:
         or below the oldest cached version (or everything, with no cache
         or incremental disabled) is dead weight.
 
-        Age bound (``max_reports``): a stale entry that is never
-        re-queried pins the floor forever, so past the bound the oldest
-        overflow reports are dropped *and* every cache entry too old to
-        replay the retained suffix is evicted — correctness first: an
-        entry must never warm-start against a gappy report list, so
-        eviction forces its next query onto the full-recompute path."""
-        if not self.incremental or not self._cache:
+        Age bound (``TierPolicy.max_reports``): a stale entry that is
+        never re-queried pins the floor forever, so past the bound the
+        oldest overflow reports are dropped *and* every cache entry too
+        old to replay the retained suffix is evicted — correctness
+        first: an entry must never warm-start against a gappy report
+        list, so eviction forces its next query onto the full-recompute
+        path.  This applies to *both* tiers: a host-spilled entry is as
+        replayable as a device one right up until its reports drop."""
+        if not self.incremental or not len(self._cache):
             self._reports.clear()
             return
         floor = min(e.version for e in self._cache.values())
@@ -259,6 +201,14 @@ class GraphService:
         return [r for r in self._reports if r.version > version]
 
     # ------------------------------------------------------------------ query
+    def key_source(self, program: VertexProgram, s: int | None) -> int | None:
+        """Cache-key source: global accumulative programs collapse to
+        ``None`` (one answer per graph version); traversals and
+        personalized accumulative programs (Δ-PPR) key per source."""
+        if program.use_delta and not program.personalized:
+            return None
+        return s
+
     def query(
         self, program: VertexProgram, sources: Sequence[int | None] | int | None
     ) -> list[QueryResult]:
@@ -266,33 +216,31 @@ class GraphService:
         source, in order.  Duplicate sources share one computation."""
         if sources is None or isinstance(sources, int):
             sources = [sources]
-        keyed = [
-            (None if program.use_delta else s) for s in sources
-        ]
+        keyed = [self.key_source(program, s) for s in sources]
         results: dict[int | None, QueryResult] = {}
         fresh: list[int | None] = []
         for s in dict.fromkeys(keyed):  # dedupe, keep order
-            entry = self._cache.get((program, s))
+            entry = self.cache.peek((program, s))
             if entry is not None and entry.version == self.version:
                 results[s] = QueryResult(
-                    source=s, values=entry.values, iterations=0,
+                    source=s, values=np.asarray(entry.values), iterations=0,
                     cache_hit=True, mode="cache",
                 )
                 self.stats.n_cache_hits += 1
             elif entry is not None and self.incremental:
-                results[s] = self._query_incremental(program, s, entry)
+                results[s] = self._query_incremental(program, s)
             else:
                 fresh.append(s)
         if fresh:
             results.update(self._query_fresh(program, fresh))
         self.stats.n_queries += len(sources)
+        self.stats.extra["warm_cache"] = self.cache.stats.as_dict()
         return [results[k] for k in keyed]
 
     def _store(self, program, s, values, delta) -> None:
-        self._cache[(program, s)] = _CacheEntry(
-            version=self.version,
-            values=np.asarray(values),
-            delta=np.asarray(delta),
+        self.cache.put(
+            (program, s), self.version, values, delta,
+            reserved_bytes=self.scheduler.pinned_bytes,
         )
         self._prune_reports()  # refreshed entries may raise the floor
 
@@ -316,10 +264,15 @@ class GraphService:
     def _absorb_run(self, res) -> None:
         self._record_feedback(res.total_mispredictions)
 
-    def _query_incremental(self, program, s, entry: _CacheEntry) -> QueryResult:
+    def _query_incremental(self, program, s) -> QueryResult:
+        # spilled warm states come back through the device tier first
+        # (bit-exact round trip — warm_cache.promote), then replay the
+        # reports applied since their version
+        entry = self.cache.promote((program, s))
         res = run_incremental(
             self.dcsr, program, self._reports_since(entry.version),
-            entry.values, entry.delta, source=s, config=self.config,
+            np.asarray(entry.values), np.asarray(entry.delta),
+            source=s, config=self.config,
             calibrator=self._calibrator, mesh=self.mesh,
         )
         self._absorb_run(res)
@@ -342,8 +295,8 @@ class GraphService:
 
     def _query_fresh(self, program, sources) -> dict:
         out: dict[int | None, QueryResult] = {}
-        if program.use_delta:
-            # accumulative programs are global: a single full run
+        if program.use_delta and not program.personalized:
+            # global accumulative programs: a single full run
             for s in sources:
                 res = run_hytm(
                     None, program, source=s, config=self.config,
@@ -359,176 +312,24 @@ class GraphService:
                     cache_hit=False, mode="batched",
                 )
             return out
-        for i in range(0, len(sources), self.max_lanes):
-            chunk = sources[i:i + self.max_lanes]
-            values, deltas, iters = self._run_lanes(program, chunk)
-            for j, s in enumerate(chunk):
-                self._store(program, s, values[j], deltas[j])
-                out[s] = QueryResult(
-                    source=s, values=values[j], iterations=iters,
-                    cache_hit=False, mode="batched",
-                )
-            self.stats.n_full += len(chunk)
-            self.stats.sweep_iterations += iters
-        return out
-
-    def _run_lanes(
-        self, program: VertexProgram, sources: Sequence[int]
-    ) -> tuple[np.ndarray, np.ndarray, int]:
-        """One multiplexed sweep: stack Q per-source init states along a
-        lane dimension and iterate until every lane's frontier drains.
-        With ``config.mesh_axis`` set, the whole lane stack runs on the
-        mesh (``_run_lanes_sharded``)."""
-        inits = [program.init_state(self.dcsr.n_nodes, s) for s in sources]
-        state = HyTMState(
-            values=jnp.stack([v for v, _, _ in inits]),
-            delta=jnp.stack([d for _, d, _ in inits]),
-            frontier=jnp.stack([f for _, _, f in inits]),
-        )
-        correction = self._correction
-        if self._calibrator is not None and correction is None:
-            correction = jnp.ones(3, jnp.float32)
-        if self.mesh is not None:
-            return self._run_lanes_sharded(program, state, len(sources),
-                                           correction)
-        rt = self.dcsr.runtime_for(program)
-        iters = 0
-        if self.config.sync_every > 1:
-            # chunked lane sweep: one _batched_chunk dispatch per K
-            # iterations; converged lanes idle inside the chunk only
-            # while a straggler lane is still relaxing (early exit the
-            # moment the summed frontier drains)
-            Q = len(sources)
-            while iters < self.config.max_iters:
-                chunk = min(self.config.sync_every,
-                            self.config.max_iters - iters)
-                # the warm signature mirrors the jit cache key: statics +
-                # every shape the trace specializes on — lane count and
-                # the runtime's node/edge/partition capacities (which move
-                # on merge-compaction), so a recompiling dispatch is never
-                # fed to the calibrator as a measurement
-                warm = _consume_warm((
-                    "lanes", program, self.config, rt.n_hub_partitions,
-                    Q, self.dcsr.n_nodes, rt.csr.edge_src.shape[0],
-                    rt.parts.n_partitions, rt.parts.block_size,
-                    chunk, correction is not None,
-                ))
-                t_chunk = time.monotonic()
-                with quiet_donation():
-                    state, n_done, last_active, pe_sum, mp_sum = \
-                        _batched_chunk(
-                            state, rt.csr, rt.parts, rt.zc_req, rt.inv_deg,
-                            program, self.config, rt.n_hub_partitions,
-                            chunk, correction,
-                        )
-                iters += int(n_done)
-                if self._calibrator is not None:
-                    # lanes share the machine: the chunk's summed modeled
-                    # per-engine times form one observation (skipped when
-                    # this dispatch signature compiled)
-                    refreshed = self._calibrator.observe_chunk(
-                        state.values, np.asarray(pe_sum, dtype=float),
-                        t_chunk, skip=not warm,
-                    )
-                    self._record_feedback(int(mp_sum), refreshed)
-                    correction = self._correction
-                if int(last_active) == 0:
-                    break
-        else:
-            for _ in range(self.config.max_iters):
-                t_iter = time.monotonic()
-                state, info = _batched_iteration(
-                    state, rt.csr, rt.parts, rt.zc_req, rt.inv_deg,
-                    program, self.config, rt.n_hub_partitions, correction,
-                )
-                iters += 1
-                if self._calibrator is not None:
-                    # lanes share the machine: their modeled per-engine
-                    # times sum into one observation per multiplexed
-                    # sweep.  Each sweep's first iteration may pay a
-                    # retrace (new lane count or program), so never count
-                    # it as a measurement.
-                    refreshed = self._calibrator.observe_iteration(
-                        state.values,
-                        np.asarray(info["per_engine_time"], dtype=float).sum(axis=0),
-                        t_iter, skip=iters == 1,
-                    )
-                    self._record_feedback(
-                        np.asarray(info["mispredictions"]).sum(), refreshed)
-                    correction = self._correction
-                if int(np.asarray(info["next_active"]).sum()) == 0:
-                    break
-        return np.asarray(state.values), np.asarray(state.delta), iters
-
-    def _run_lanes_sharded(
-        self, program: VertexProgram, state: HyTMState, n_lanes: int,
-        correction,
-    ) -> tuple[np.ndarray, np.ndarray, int]:
-        """Multiplexed lane sweep on the mesh: the sharded iteration
-        (per-lane cost model / engine selection / schedule, edge blocks
-        sharded over the mesh axis, bulk-synchronous pmin/psum merges)
-        vmapped over the lane dimension inside one chunked
-        ``lax.while_loop`` dispatch
-        (``graph_shard.make_sharded_batched_chunk``).  Each lane is
-        bit-identical to its standalone single-device
-        ``async_sweep=False`` run for MIN programs.  The cross-device
-        merge is charged per executed iteration over ``config.ici_link``
-        (lane-summed entries, Q·(n,) dense payload) into
-        ``stats.extra['ici_bytes'/'ici_time']``."""
-        from repro.dist.graph_shard import (
-            ici_level_cost,
-            make_sharded_batched_chunk,
-        )
-
-        rt = self._runtime_for(program)
-        n_dev = int(self.mesh.shape[self.config.mesh_axis])
-        iters = 0
-        while iters < self.config.max_iters:
-            chunk = min(max(self.config.sync_every, 1),
-                        self.config.max_iters - iters)
-            key = ("lanes", program, self.config, chunk, n_lanes)
-            cached = rt.iteration_cache.get(key)
-            if cached is None:
-                cached = {"fn": make_sharded_batched_chunk(
-                    rt, program, self.config, chunk), "seen": set()}
-                rt.iteration_cache[key] = cached
-            # warm iff THIS chunk_fn already dispatched THESE shapes —
-            # scoped to the cached entry, which a DeltaCSR
-            # merge-compaction drops (see graph_shard: a rebuilt fn's
-            # recompile must never feed the calibrator)
-            warm = _consume_warm(
-                (rt.blocks.src.shape, rt.parts.n_partitions,
-                 rt.parts.block_size, correction is not None),
-                registry=cached["seen"],
+        # per-source programs (traversals + personalized accumulative):
+        # the continuous scheduler stacks them into bucketed lanes —
+        # admission pads partial batches with dead lanes up to a static
+        # bucket (never a recompile), converged lanes free their slot at
+        # chunk boundaries, and freed slots backfill from the remaining
+        # sources mid-flight
+        served = self.scheduler.run_batch(program, sources)
+        for s in sources:
+            r = served[s]
+            if r.mode == "rejected":
+                # only possible when device_budget_bytes cannot hold even
+                # one lane — a misconfiguration, not a serving decision
+                raise RuntimeError(
+                    f"device_budget_bytes={self.cache.policy.device_budget_bytes} "
+                    f"cannot fit one lane "
+                    f"({self.scheduler.lane_bytes} bytes) — query rejected")
+            out[s] = QueryResult(
+                source=s, values=r.values, iterations=r.iterations,
+                cache_hit=False, mode=r.mode,
             )
-            t_chunk = time.monotonic()
-            with quiet_donation():
-                state, n_done, last_active, pe_sum, mp_sum, merged = \
-                    cached["fn"](state, rt.blocks, rt.parts, rt.out_degree,
-                                 rt.zc_req, rt.inv_deg, correction)
-            n_done = int(n_done)
-            iters += n_done
-            if self._calibrator is not None:
-                refreshed = self._calibrator.observe_chunk(
-                    state.values, np.asarray(pe_sum, dtype=float),
-                    t_chunk, skip=not warm,
-                )
-                self._record_feedback(int(mp_sum), refreshed)
-                correction = self._correction
-            # second-level accounting: all lanes merge in one batched
-            # collective, so the dense candidate payload is Q stacked
-            # (n,) vectors and the compacted one the lane-summed entries
-            corr_np = (np.asarray(correction, dtype=float)
-                       if correction is not None else None)
-            for me in np.asarray(merged)[:n_done]:
-                ib, it_, _ie = ici_level_cost(
-                    n_lanes * self.dcsr.n_nodes, float(me), n_dev,
-                    self.config.ici_link, corr_np,
-                )
-                self.stats.extra["ici_bytes"] = (
-                    self.stats.extra.get("ici_bytes", 0.0) + ib)
-                self.stats.extra["ici_time"] = (
-                    self.stats.extra.get("ici_time", 0.0) + it_)
-            if int(last_active) == 0:
-                break
-        return np.asarray(state.values), np.asarray(state.delta), iters
+        return out

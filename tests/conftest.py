@@ -30,6 +30,7 @@ except ImportError:
             "test_cost_model.py",
             "test_engines.py",
             "test_graph.py",
+            "test_serve.py",
             "test_stream.py",
         ]
 

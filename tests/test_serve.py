@@ -1,0 +1,302 @@
+"""repro.serve acceptance contract.
+
+The serving stack's invariants, property-tested where cheap:
+
+* admission respects per-tenant quotas and orders by deadline
+  (queue-level, no engine);
+* partial batches pad to static lane buckets — one compile per bucket,
+  never one per request count (the recompile regression the bucket set
+  exists to prevent);
+* lane backfill never changes any result vs the standalone run
+  (``jax.vmap`` lane independence);
+* spill → promote → replay is bit-identical to never-evicted for MIN
+  programs and tolerance-bounded for SUM programs (the warm-cache tier
+  equivalence guarantee).
+"""
+
+import dataclasses
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.hytm import HyTMConfig, hytm_batched_chunk, run_hytm
+from repro.graph.algorithms import BFS, PPR, SSSP
+from repro.graph.generators import rmat_graph
+from repro.serve import (
+    LaneScheduler,
+    Request,
+    RequestQueue,
+    TierPolicy,
+    WarmCache,
+    default_buckets,
+)
+from repro.stream import GraphService, random_batch
+
+CFG = HyTMConfig(n_partitions=8, sync_every=4)
+
+
+# --------------------------------------------------------------------------
+# queue: quotas + deadline order (no engine)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=30)
+@given(
+    n_requests=st.integers(min_value=1, max_value=24),
+    n_tenants=st.integers(min_value=1, max_value=4),
+    quota=st.integers(min_value=0, max_value=3),
+    n_slots=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=999),
+)
+def test_admission_respects_quotas(n_requests, n_tenants, quota, n_slots, seed):
+    """However requests arrive, no admission pass ever pushes a tenant
+    past its quota (counting lanes already in flight), and zero-quota
+    tenants are rejected rather than deferred forever."""
+    rng = np.random.default_rng(seed)
+    q = RequestQueue(quota=quota)
+    for _ in range(n_requests):
+        q.submit(Request(
+            tenant=f"t{rng.integers(n_tenants)}", program=SSSP,
+            source=int(rng.integers(100)),
+            deadline=float(rng.integers(1000)),
+        ))
+    in_flight: dict[str, int] = {}
+    rejected: list = []
+    while q:
+        before = len(q)
+        admitted = q.admit(n_slots, in_flight, program=SSSP,
+                           on_reject=rejected.append)
+        for r in admitted:
+            in_flight[r.tenant] = in_flight.get(r.tenant, 0) + 1
+            assert in_flight[r.tenant] <= quota or quota == 0
+        if len(q) == before:
+            break
+        # model lanes converging: one tenant's lane frees per round
+        for t in list(in_flight):
+            in_flight[t] -= 1
+            if in_flight[t] == 0:
+                del in_flight[t]
+    assert q.stats.quota_violations == 0
+    if quota == 0:
+        assert len(rejected) == n_requests  # never admissible -> rejected
+    else:
+        assert not rejected
+
+
+@settings(max_examples=30)
+@given(
+    n_requests=st.integers(min_value=1, max_value=24),
+    n_slots=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=999),
+)
+def test_admission_is_deadline_ordered(n_requests, n_slots, seed):
+    """With no quota/budget constraint the admitted prefix is exactly the
+    (deadline, arrival)-sorted head of the pending set."""
+    rng = np.random.default_rng(seed)
+    q = RequestQueue()
+    reqs = [Request(tenant="t", program=SSSP, source=i,
+                    deadline=float(rng.integers(10)))
+            for i in range(n_requests)]
+    for r in reqs:
+        q.submit(r)
+    admitted = q.admit(n_slots, {})
+    expected = sorted(reqs, key=lambda r: (r.deadline, r.arrival))
+    assert admitted == expected[:min(n_slots, n_requests)]
+    keys = [(r.deadline, r.arrival) for r in admitted]
+    assert keys == sorted(keys)
+
+
+def test_admission_rejects_unfittable_and_defers_over_budget():
+    q = RequestQueue()
+    for i in range(3):
+        q.submit(Request(tenant="t", program=SSSP, source=i))
+    rejected = []
+    # lane bigger than the whole budget: reject outright, never defer
+    out = q.admit(8, {}, bytes_per_lane=100, total_budget=50,
+                  on_reject=rejected.append)
+    assert out == [] and len(rejected) == 3 and len(q) == 0
+    # lane fits the budget but not the current free bytes: defer, keep
+    for i in range(3):
+        q.submit(Request(tenant="t", program=SSSP, source=i))
+    out = q.admit(8, {}, free_bytes=150, bytes_per_lane=100,
+                  total_budget=1000)
+    assert len(out) == 1 and len(q) == 2
+    assert q.stats.deferred == 2
+
+
+# --------------------------------------------------------------------------
+# scheduler: static buckets — one compile per bucket, results solo-exact
+# --------------------------------------------------------------------------
+
+def test_lane_buckets_one_compile_per_bucket():
+    """Partial batches pad up to a static bucket: driving every request
+    count 1..5 through a max_lanes=4 service compiles the batched chunk
+    at most once per bucket {1, 2, 4} — NOT once per request count (the
+    regression the old ``sources[i:i+max_lanes]`` chunking had)."""
+    g = rmat_graph(300, 2400, seed=13)
+    svc = GraphService(g, CFG, max_lanes=4)
+    assert svc.scheduler.buckets == (1, 2, 4)
+    c0 = hytm_batched_chunk._cache_size()
+    all_sources = [[0], [1, 2], [3, 4, 5], [6, 7, 8, 9], [10, 11, 12, 13, 14]]
+    for sources in all_sources:
+        res = svc.query(SSSP, sources)
+        for s, r in zip(sources, res):
+            solo = run_hytm(g, SSSP, source=s, config=CFG)
+            np.testing.assert_array_equal(r.values, solo.values)
+    compiles = hytm_batched_chunk._cache_size() - c0
+    assert compiles <= len(svc.scheduler.buckets), (
+        f"{compiles} compiles for buckets {svc.scheduler.buckets}")
+
+
+def test_backfill_never_changes_results():
+    """7 sources through 2 lanes: converged lanes are backfilled
+    mid-flight, and every lane's result stays bit-identical to its
+    standalone run (vmap lane independence + dead-lane padding)."""
+    g = rmat_graph(400, 3200, seed=17)
+    svc = GraphService(g, CFG, max_lanes=2)
+    sources = [0, 11, 42, 123, 250, 301, 77]
+    res = svc.query(SSSP, sources)
+    assert svc.scheduler.stats.backfills > 0
+    for s, r in zip(sources, res):
+        solo = run_hytm(g, SSSP, source=s, config=CFG)
+        np.testing.assert_array_equal(r.values, solo.values)
+
+
+def test_default_buckets():
+    assert default_buckets(1) == (1,)
+    assert default_buckets(3) == (1, 2, 3)
+    assert default_buckets(8) == (1, 2, 4, 8)
+    assert default_buckets(12) == (1, 2, 4, 8, 12)
+
+
+# --------------------------------------------------------------------------
+# scheduler: multi-tenant pump — quotas honored end to end
+# --------------------------------------------------------------------------
+
+def test_pump_honors_quotas_and_serves_everyone():
+    g = rmat_graph(300, 2400, seed=19)
+    svc = GraphService(g, CFG, max_lanes=4)
+    sched = svc.scheduler
+    q = RequestQueue(quota=1)   # each tenant: at most one lane in flight
+    for i, t in enumerate(["a", "b", "a", "c", "b", "a"]):
+        q.submit(Request(tenant=t, program=BFS, source=i,
+                         deadline=float(i)))
+
+    peak: dict[str, int] = {}
+    orig = LaneScheduler._dispatch
+
+    def spying(self, *a, **k):
+        for t, c in self.in_flight.items():
+            peak[t] = max(peak.get(t, 0), c)
+        return orig(self, *a, **k)
+
+    LaneScheduler._dispatch = spying
+    try:
+        served = sched.pump(q)
+    finally:
+        LaneScheduler._dispatch = orig
+    assert len(served) == 6 and not q
+    assert all(c <= 1 for c in peak.values()), peak
+    assert q.stats.quota_violations == 0
+    by_src = {r.request.source: r for r in served}
+    for i in range(6):
+        solo = run_hytm(g, BFS, source=i, config=CFG)
+        np.testing.assert_array_equal(by_src[i].values, solo.values)
+
+
+# --------------------------------------------------------------------------
+# warm cache: tiers, budget, spill -> promote -> replay equivalence
+# --------------------------------------------------------------------------
+
+def test_warm_cache_lru_spill_and_promote_roundtrip():
+    cache = WarmCache(TierPolicy(device_budget_bytes=2 * 80))
+    a = np.arange(10, dtype=np.float32)
+    z = np.zeros(10, dtype=np.float32)
+    cache.put("k1", 0, a, z)          # 80 bytes
+    cache.put("k2", 0, a + 1, z)      # 160 total: at budget
+    cache.get("k1")                   # k1 now hotter than k2
+    cache.put("k3", 0, a + 2, z)      # over budget -> spill LRU (k2)
+    tiers = {k: e.tier for k, e in cache.items()}
+    assert tiers == {"k1": "device", "k2": "host", "k3": "device"}
+    assert cache.device_bytes <= 160
+    assert isinstance(cache._entries["k2"].values, np.ndarray)
+    promoted = cache.promote("k2")
+    assert promoted.tier == "device"
+    np.testing.assert_array_equal(np.asarray(promoted.values), a + 1)
+    assert cache.device_bytes <= 160  # someone else spilled to make room
+    assert cache.stats.spills >= 2 and cache.stats.promotions == 1
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=99),
+    budget_lanes=st.integers(min_value=1, max_value=2),
+)
+def test_spill_promote_replay_equals_never_evicted_min(seed, budget_lanes):
+    """MIN programs: a service whose warm states bounce through the host
+    tier answers every query bit-identically to one whose device tier is
+    unbounded.  (The entry state round-trips exactly; the replay is the
+    same incremental path either way.)  The budget must hold at least one
+    in-flight lane (9n bytes) — below that admission rejects."""
+    g = rmat_graph(200, 1400, seed=5)
+    lane_bytes = 9 * 200
+    tiny = GraphService(g, CFG, max_lanes=2,
+                        device_budget_bytes=budget_lanes * lane_bytes)
+    unbounded = GraphService(g, CFG, max_lanes=2)
+    rng_t = np.random.default_rng(seed)
+    rng_u = np.random.default_rng(seed)
+    sources = [0, 7, 19, 33]
+    for round_ in range(3):
+        for svc, rng in ((tiny, rng_t), (unbounded, rng_u)):
+            svc.update(random_batch(svc.dcsr, rng, n_insert=5, n_delete=5))
+        qs = [int(rng_t.integers(len(sources)))]
+        rs_t = tiny.query(SSSP, [sources[i] for i in qs])
+        rng_u.integers(len(sources))  # keep generators aligned
+        rs_u = unbounded.query(SSSP, [sources[i] for i in qs])
+        for a, b in zip(rs_t, rs_u):
+            np.testing.assert_array_equal(a.values, b.values)
+        # refresh the rest so there are warm states to spill
+        rs_t = tiny.query(SSSP, sources)
+        rs_u = unbounded.query(SSSP, sources)
+        for a, b in zip(rs_t, rs_u):
+            np.testing.assert_array_equal(a.values, b.values)
+    assert tiny.cache.stats.spills > 0
+
+
+def test_spill_promote_replay_tolerance_sum():
+    """SUM programs (Δ-PPR): the spilled-and-promoted service tracks the
+    unbounded one within the program tolerance after updates."""
+    ppr = dataclasses.replace(PPR, tolerance=1e-7)
+    g = rmat_graph(200, 1400, seed=7)
+    # exactly one lane fits: serving works, but the cache always spills
+    tiny = GraphService(g, CFG, max_lanes=2, device_budget_bytes=9 * 200)
+    unbounded = GraphService(g, CFG, max_lanes=2)
+    rng_t = np.random.default_rng(3)
+    rng_u = np.random.default_rng(3)
+    sources = [0, 11, 23]
+    tiny.query(ppr, sources)
+    unbounded.query(ppr, sources)
+    for _ in range(2):
+        tiny.update(random_batch(tiny.dcsr, rng_t, n_insert=4, n_delete=4))
+        unbounded.update(random_batch(unbounded.dcsr, rng_u,
+                                      n_insert=4, n_delete=4))
+        rs_t = tiny.query(ppr, sources)
+        rs_u = unbounded.query(ppr, sources)
+        for a, b in zip(rs_t, rs_u):
+            assert np.max(np.abs(a.values - b.values)) < 1e-4
+    assert tiny.cache.stats.spills > 0
+    assert tiny.cache.stats.promotions > 0
+
+
+def test_device_budget_is_never_exceeded():
+    """Peak device-resident bytes (in-flight lanes + device tier) stay
+    under the budget whenever the budget can hold the bucket at all."""
+    g = rmat_graph(300, 2400, seed=23)
+    lane = 9 * 300
+    budget = 2 * lane + 4 * 300 * 2  # 2 lanes + about one cached entry
+    svc = GraphService(g, CFG, max_lanes=4, device_budget_bytes=budget)
+    svc.query(SSSP, [0, 7, 19, 33, 41])
+    assert svc.scheduler.stats.max_device_bytes <= budget
+    # bucket 4 would not fit: admission degrades to bucket 2
+    assert svc.scheduler.stats.batches >= 1
+    assert svc.cache.device_bytes + svc.scheduler.pinned_bytes <= budget
