@@ -1,10 +1,33 @@
 """Benchmark harness entry point: one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit);
 ``--json <path>`` additionally writes the rows machine-readably so perf
-trajectories (``BENCH_*.json``) can be recorded across revisions."""
+trajectories (``BENCH_*.json``) can be recorded across revisions.
+``--compare <baseline.json>`` checks the freshly emitted rows against a
+prior ``--json`` dump and exits non-zero when any matching row regressed
+past ``--compare-ratio`` (default 2.0x — a coarse tripwire for CI, not a
+microbenchmark gate)."""
 
 import argparse
 import json
+import sys
+
+
+def compare_rows(rows, baseline_doc: dict, ratio: float) -> list[str]:
+    """Rows regressed past ``ratio``x their baseline ``us_per_call``.
+    Rows are matched by name; names present on only one side are skipped
+    (benchmarks come and go across revisions)."""
+    base = {r["name"]: float(r["us_per_call"])
+            for r in baseline_doc.get("rows", [])}
+    failures = []
+    for name, us, _ in rows:
+        b = base.get(name)
+        # sub-ms rows are dominated by dispatch noise on shared CI
+        if b is None or b <= 0 or max(us, b) < 1_000:
+            continue
+        if us > ratio * b:
+            failures.append(
+                f"{name}: {us:.1f}us > {ratio:.1f}x baseline {b:.1f}us")
+    return failures
 
 
 def main() -> None:
@@ -13,6 +36,13 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true", help="smaller graphs / fewer repeats")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the emitted rows as JSON to PATH")
+    ap.add_argument("--compare", default=None, metavar="BASELINE",
+                    help="compare the emitted rows against a prior --json "
+                         "dump; exit non-zero on any regression past "
+                         "--compare-ratio")
+    ap.add_argument("--compare-ratio", type=float, default=2.0,
+                    help="regression threshold for --compare "
+                         "(default: 2.0x the baseline us_per_call)")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -24,6 +54,7 @@ def main() -> None:
         fig9_scaling,
         iterloop,
         kernels,
+        obs_bench,
         roofline,
         serve_bench,
         stream_bench,
@@ -50,6 +81,7 @@ def main() -> None:
         "serve": lambda: serve_bench.run(smoke=args.fast),
         "autotune": lambda: autotune_bench.run(fast=args.fast),
         "iterloop": lambda: iterloop.run(fast=args.fast),
+        "obs": lambda: obs_bench.run(fast=args.fast),
     }
     print("name,us_per_call,derived")
     for name, fn in mods.items():
@@ -70,6 +102,18 @@ def main() -> None:
             json.dump(doc, f, indent=2)
             f.write("\n")
         print(f"# wrote {len(common.ROWS)} rows -> {args.json}")
+
+    if args.compare:
+        with open(args.compare) as f:
+            baseline = json.load(f)
+        failures = compare_rows(common.ROWS, baseline, args.compare_ratio)
+        if failures:
+            print("# REGRESSIONS vs", args.compare)
+            for line in failures:
+                print("#   " + line)
+            sys.exit(1)
+        print(f"# compare OK: no row regressed past "
+              f"{args.compare_ratio:.1f}x {args.compare}")
 
 
 if __name__ == "__main__":

@@ -21,6 +21,12 @@ wall-clock QPS reported alongside.  Reported per run: p50/p99 virtual
 and wall latency, QPS, lane occupancy, cache-tier hit/spill/promotion
 counters, and admission counters.
 
+``--arrival poisson:<rate>`` paces submissions with seeded exponential
+inter-arrival gaps (open-loop wall-clock arrivals) instead of the
+default instantaneous per-step bursts; ``--trace <path>`` records the
+continuous run through ``repro.obs`` and writes a Chrome trace-event
+JSON (tenant/scheduler/cache tracks, chrome://tracing / Perfetto).
+
 ``--selfcheck`` gates (CI):
   1. equal answers — every request served by the continuous stack
      matches the baseline bit-exactly (MIN) / within tolerance (SUM),
@@ -80,12 +86,36 @@ def _make_trace(rng: np.random.Generator, n_steps: int, n_nodes: int,
     return trace
 
 
+def _parse_arrival(spec: str) -> float | None:
+    """``burst`` (default: a whole step's burst arrives at once) or
+    ``poisson:<rate>`` — seeded exponential inter-arrival gaps at
+    ``<rate>`` requests/second pace the submissions on the wall clock."""
+    if spec == "burst":
+        return None
+    if spec.startswith("poisson:"):
+        rate = float(spec.split(":", 1)[1])
+        if rate <= 0:
+            raise argparse.ArgumentTypeError(
+                f"poisson rate must be > 0, got {rate}")
+        return rate
+    raise argparse.ArgumentTypeError(
+        f"--arrival must be 'burst' or 'poisson:<rate>', got {spec!r}")
+
+
 def _replay(svc: GraphService, sched: LaneScheduler, trace: list[dict],
-            update_rng: np.random.Generator, ppr, deadlines: bool) -> list:
+            update_rng: np.random.Generator, ppr, deadlines: bool,
+            arrival_rate: float | None = None,
+            arrival_rng: np.random.Generator | None = None) -> list:
     """Run the trace through one scheduler closed-loop: submit each
     step's burst (deadline = now + slack on the virtual clock, or FIFO
     when ``deadlines`` is off), apply the step's update, pump to
-    completion.  Returns all ServedResults in completion order."""
+    completion.  Returns all ServedResults in completion order.
+
+    With ``arrival_rate`` set, submissions within a step are paced by
+    seeded Poisson wall-clock arrivals (exponential inter-arrival gaps
+    from ``arrival_rng``) instead of landing as one instantaneous burst.
+    Answers and the virtual-clock latency gates are arrival-independent;
+    only the wall-clock latency distribution moves."""
     queue = RequestQueue(tenant_quotas=dict(TENANTS))
     programs = {"sssp": SSSP, "ppr": ppr}
     served = []
@@ -96,6 +126,8 @@ def _replay(svc: GraphService, sched: LaneScheduler, trace: list[dict],
                 n_insert=step["update_edges"] // 2,
                 n_delete=step["update_edges"] // 2))
         for r in step["requests"]:
+            if arrival_rate is not None:
+                time.sleep(float(arrival_rng.exponential(1.0 / arrival_rate)))
             queue.submit(Request(
                 tenant=r["tenant"], program=programs[r["program"]],
                 source=r["source"],
@@ -116,7 +148,8 @@ def _percentiles(served, clock: str) -> tuple[float, float]:
 def run(smoke: bool = False, seed: int = 0, scenario: str = "mixed",
         selfcheck: bool = False, n_nodes: int | None = None,
         n_edges: int | None = None, lanes: int | None = None,
-        n_steps: int | None = None) -> dict:
+        n_steps: int | None = None, arrival_rate: float | None = None,
+        trace_path: str | None = None) -> dict:
     if smoke:
         n_nodes, n_edges, lanes, n_steps = 600, 4_800, 4, 5
         burst_lo, burst_hi, update_edges = 5, 11, 24
@@ -136,10 +169,19 @@ def run(smoke: bool = False, seed: int = 0, scenario: str = "mixed",
     # rest of the warm set lives in (and returns from) the host tier
     budget = lanes * lane_bytes + 4 * 8 * n_nodes
 
+    rec = None
+    if trace_path is not None:
+        from repro.obs import TraceRecorder
+
+        rec = TraceRecorder()
+
     def build(backfill: bool):
         g = rmat_graph(n_nodes, n_edges, seed=seed + 1)
+        # only the continuous run is traced — the baseline replay would
+        # interleave its events onto the same tracks
         svc = GraphService(g, cfg, max_lanes=lanes,
-                           device_budget_bytes=budget)
+                           device_budget_bytes=budget,
+                           obs=rec if backfill else None)
         if not backfill:
             svc.scheduler = LaneScheduler(svc, buckets=(lanes,),
                                           backfill=False)
@@ -153,7 +195,9 @@ def run(smoke: bool = False, seed: int = 0, scenario: str = "mixed",
     c0 = hytm_batched_chunk._cache_size()
     t0 = time.monotonic()
     served = _replay(svc, svc.scheduler, trace,
-                     np.random.default_rng(seed + 2), ppr, deadlines=True)
+                     np.random.default_rng(seed + 2), ppr, deadlines=True,
+                     arrival_rate=arrival_rate,
+                     arrival_rng=np.random.default_rng(seed + 3))
     wall = time.monotonic() - t0
     compiles = hytm_batched_chunk._cache_size() - c0
 
@@ -162,7 +206,8 @@ def run(smoke: bool = False, seed: int = 0, scenario: str = "mixed",
     t0 = time.monotonic()
     base_served = _replay(base, base.scheduler, trace,
                           np.random.default_rng(seed + 2), ppr,
-                          deadlines=False)
+                          deadlines=False, arrival_rate=arrival_rate,
+                          arrival_rng=np.random.default_rng(seed + 3))
     base_wall = time.monotonic() - t0
 
     sched, q = svc.scheduler, served
@@ -204,6 +249,11 @@ def run(smoke: bool = False, seed: int = 0, scenario: str = "mixed",
 
     if selfcheck:
         _selfcheck(svc, served, base_served, rows, ppr, cfg)
+    if rec is not None:
+        from repro.obs import write_chrome_trace
+
+        write_chrome_trace(rec, trace_path)
+        print(f"# trace: {len(rec)} events -> {trace_path}")
     return rows
 
 
@@ -272,11 +322,24 @@ def main() -> None:
     ap.add_argument("--selfcheck", action="store_true",
                     help="gate: equal answers, p99 < fixed-batch "
                          "baseline, budget held, one compile per bucket")
+    ap.add_argument("--arrival", type=_parse_arrival, default="burst",
+                    metavar="burst|poisson:<rate>",
+                    help="request arrival process: 'burst' (default, a "
+                         "step's requests land at once) or "
+                         "'poisson:<rate>' — seeded exponential "
+                         "inter-arrival gaps at <rate> req/s pace "
+                         "submissions on the wall clock")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON (repro.obs) of "
+                         "the continuous run to PATH — one track per "
+                         "tenant/scheduler/cache, loadable in "
+                         "chrome://tracing or Perfetto")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     t0 = time.monotonic()
     rows = run(smoke=args.smoke, seed=args.seed, scenario=args.scenario,
-               selfcheck=args.selfcheck)
+               selfcheck=args.selfcheck, arrival_rate=args.arrival,
+               trace_path=args.trace)
     emit("serve/total_wall", (time.monotonic() - t0) * 1e6,
          f"served={rows['served']} occupancy={rows['occupancy']:.2f}")
 

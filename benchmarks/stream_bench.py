@@ -45,7 +45,8 @@ from repro.stream import GraphService, random_batch, run_incremental
 def run(smoke: bool = False, n_nodes: int | None = None,
         n_edges: int | None = None, n_partitions: int | None = None,
         n_batches: int | None = None, batch_edges: int | None = None,
-        n_queries: int | None = None, lanes: int = 4, seed: int = 21):
+        n_queries: int | None = None, lanes: int = 4, seed: int = 21,
+        trace_path: str | None = None):
     if smoke:
         n_nodes, n_edges, n_partitions = 1000, 8_000, 8
         n_batches, batch_edges, n_queries = 2, 48, 4
@@ -57,9 +58,15 @@ def run(smoke: bool = False, n_nodes: int | None = None,
         batch_edges = batch_edges or 256
         n_queries = n_queries or 16
 
+    rec = None
+    if trace_path is not None:
+        from repro.obs import TraceRecorder
+
+        rec = TraceRecorder()
+
     g = rmat_graph(n_nodes, n_edges, seed=seed)
     cfg = HyTMConfig(n_partitions=n_partitions)
-    svc = GraphService(g, cfg, max_lanes=lanes)
+    svc = GraphService(g, cfg, max_lanes=lanes, obs=rec)
     rng = np.random.default_rng(seed)
 
     # --- query throughput: lane-batched vs sequential ---------------------
@@ -127,6 +134,11 @@ def run(smoke: bool = False, n_nodes: int | None = None,
     emit("stream/recompute_full", t_full * 1e6 / max(n_batches, 1),
          f"iters={iters_full} iter_savings="
          f"{(1 - iters_inc / max(iters_full, 1)) * 100:.0f}%")
+    if rec is not None:
+        from repro.obs import write_chrome_trace
+
+        write_chrome_trace(rec, trace_path)
+        print(f"# trace: {len(rec)} events -> {trace_path}")
     return {
         "batched_s": t_batched, "sequential_s": t_seq,
         "iters_inc": iters_inc, "iters_full": iters_full,
@@ -255,6 +267,10 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=None,
                     help="RNG seed for the graph, the query sources and "
                          "the update batches (default: 21 local, 23 sharded)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON (repro.obs) of "
+                         "the local serving run to PATH (chrome://tracing "
+                         "/ Perfetto); local leg only")
     args = ap.parse_args()
     if args.selfcheck and not args.devices:
         raise SystemExit("--selfcheck needs --devices N")
@@ -267,7 +283,7 @@ def main() -> None:
         emit("stream/sharded_total_wall", (time.monotonic() - t0) * 1e6,
              f"iters_inc={out['iters_inc']} iters_cold={out['iters_cold']}")
         return
-    out = run(smoke=args.smoke,
+    out = run(smoke=args.smoke, trace_path=args.trace,
               **({} if args.seed is None else {"seed": args.seed}))
     emit("stream/total_wall", (time.monotonic() - t0) * 1e6,
          f"iters_inc={out['iters_inc']} iters_full={out['iters_full']}")

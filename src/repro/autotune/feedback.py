@@ -38,7 +38,7 @@ class OnlineCalibrator:
     """EWMA recursive least squares for per-engine correction factors."""
 
     def __init__(self, decay: float = 0.25, ridge: float = 0.05,
-                 clip: tuple[float, float] = (0.05, 20.0)):
+                 clip: tuple[float, float] = (0.05, 20.0), obs=None):
         assert 0.0 < decay <= 1.0, decay
         self.decay = decay
         self.ridge = ridge
@@ -46,6 +46,10 @@ class OnlineCalibrator:
         self._A = np.zeros((N_ENGINES, N_ENGINES))
         self._b = np.zeros(N_ENGINES)
         self.n_updates = 0
+        # optional repro.obs.TraceRecorder: each folded observation emits
+        # one correction-update event (host-side; obs=None records nothing
+        # and skips even the correction re-solve)
+        self.obs = obs
 
     def update(self, modeled: np.ndarray, measured_seconds: float) -> None:
         """Fold in one iteration: (3,) modeled per-engine seconds + the
@@ -63,6 +67,19 @@ class OnlineCalibrator:
         self._A = f * self._A + np.outer(u, u)
         self._b = f * self._b + u * (measured_seconds / norm)
         self.n_updates += 1
+        if self.obs is not None:
+            c = self.correction()
+            m = self.obs.metrics
+            m.counter("autotune.updates", "calibrator observations").inc(1)
+            for e, name in enumerate(("filter", "compact", "zerocopy")):
+                m.gauge("autotune.correction",
+                        "per-engine cost correction").set(float(c[e]),
+                                                          engine=name)
+            self.obs.instant(
+                "correction_update", cat="autotune", track="autotune",
+                vt=float(self.n_updates), measured_seconds=float(measured_seconds),
+                modeled=[float(x) for x in t], correction=[float(x) for x in c],
+            )
 
     def observed(self) -> np.ndarray:
         """(3,) bool — engines with accumulated evidence."""

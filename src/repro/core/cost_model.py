@@ -210,6 +210,37 @@ def selection_diagnostics(
 
 
 # --------------------------------------------------------------------------
+# Telemetry key constants
+# --------------------------------------------------------------------------
+
+# The single definition of every stringly-typed history / stats key the
+# runtime emits and the observability layer (repro.obs) consumes.  Every
+# producer (core.hytm, dist.graph_shard, stream.service, serve.scheduler)
+# and every consumer (repro.obs, benchmarks, tests) imports these instead
+# of re-spelling the literal, so the accounting and the traces cannot
+# silently drift apart.
+
+# HyTMResult.history rows (see HISTORY_KEYS below).
+KEY_ENGINES = "engines"
+KEY_TRANSFER_BYTES = "transfer_bytes"
+KEY_TRANSFER_TIME = "transfer_time"
+KEY_ACTIVE_VERTICES = "active_vertices"
+KEY_ACTIVE_EDGES = "active_edges"
+KEY_N_TASKS = "n_tasks"
+KEY_MISPREDICTIONS = "mispredictions"
+KEY_PER_ENGINE_TIME = "per_engine_time"
+# Sharded-run extension: per-iteration ICI exchange accounting
+# (dist.graph_shard.run_hytm_sharded / charge_ici).
+KEY_MERGED_ENTRIES = "merged_entries"
+KEY_ICI_BYTES = "ici_bytes"
+KEY_ICI_TIME = "ici_time"
+KEY_ICI_ENGINE = "ici_engine"
+# ServiceStats.extra side-channel names (stream.service / serve.scheduler).
+KEY_WARM_CACHE = "warm_cache"
+KEY_ENGINE_CORRECTIONS = "engine_corrections"
+
+
+# --------------------------------------------------------------------------
 # Per-iteration history layout (shared by the chunked drivers)
 # --------------------------------------------------------------------------
 
@@ -226,8 +257,8 @@ def selection_diagnostics(
 # it lives in the while-loop carry as the early-exit condition and is
 # returned separately.
 HISTORY_KEYS = (
-    "engines", "transfer_bytes", "transfer_time", "active_vertices",
-    "active_edges", "n_tasks", "mispredictions", "per_engine_time",
+    KEY_ENGINES, KEY_TRANSFER_BYTES, KEY_TRANSFER_TIME, KEY_ACTIVE_VERTICES,
+    KEY_ACTIVE_EDGES, KEY_N_TASKS, KEY_MISPREDICTIONS, KEY_PER_ENGINE_TIME,
 )
 
 

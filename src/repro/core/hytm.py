@@ -54,6 +54,14 @@ from repro.core.cost_model import (
     COMPACT,
     FILTER,
     HISTORY_KEYS,
+    KEY_ACTIVE_EDGES,
+    KEY_ACTIVE_VERTICES,
+    KEY_ENGINES,
+    KEY_MISPREDICTIONS,
+    KEY_N_TASKS,
+    KEY_PER_ENGINE_TIME,
+    KEY_TRANSFER_BYTES,
+    KEY_TRANSFER_TIME,
     NONE,
     ZEROCOPY,
     init_history_buffers,
@@ -365,16 +373,16 @@ def _iteration_impl(
     )
 
     info = {
-        "engines": plan.engines,
-        "transfer_bytes": plan.transfer_bytes,
-        "transfer_time": jnp.sum(plan.transfer_time)
+        KEY_ENGINES: plan.engines,
+        KEY_TRANSFER_BYTES: plan.transfer_bytes,
+        KEY_TRANSFER_TIME: jnp.sum(plan.transfer_time)
         + plan.n_tasks.astype(jnp.float32) * config.link.launch_overhead_s,
-        "n_tasks": plan.n_tasks,
-        "active_vertices": jnp.sum(frontier.astype(jnp.int32)),
-        "active_edges": jnp.sum(stats.active_edges),
+        KEY_N_TASKS: plan.n_tasks,
+        KEY_ACTIVE_VERTICES: jnp.sum(frontier.astype(jnp.int32)),
+        KEY_ACTIVE_EDGES: jnp.sum(stats.active_edges),
         "next_active": jnp.sum(next_frontier.astype(jnp.int32)),
-        "per_engine_time": per_engine_time,
-        "mispredictions": mispredictions,
+        KEY_PER_ENGINE_TIME: per_engine_time,
+        KEY_MISPREDICTIONS: mispredictions,
     }
     return new_state, info
 
@@ -664,6 +672,7 @@ def run_hytm(
     mesh=None,
     initial_state: HyTMState | None = None,
     calibrator=None,
+    obs=None,
 ) -> HyTMResult:
     """``runtime`` lets callers amortize preprocessing across runs; with
     ``config.mesh_axis`` set it must be a ``graph_shard.ShardedRuntime``
@@ -686,6 +695,14 @@ def run_hytm(
     learn into (and start from) instead of a fresh per-run one — how
     ``GraphService`` keeps one feedback loop across queries.  Only read
     when ``config.autotune`` is set.
+
+    ``obs``: an optional ``repro.obs.TraceRecorder``.  Per-iteration
+    events and per-chunk spans are emitted host-side from the drained
+    history rows (after the existing ``device_get`` syncs) plus one
+    run-summary span whose totals equal the returned ``HyTMResult``
+    fields exactly.  ``obs=None`` (the default) records nothing and runs
+    the identical jit programs — the traced and untraced paths are
+    bit-identical.
     """
     if config.mesh_axis is not None:
         # late import: graph_shard depends on this module's dataclasses
@@ -694,10 +711,14 @@ def run_hytm(
         return run_hytm_sharded(
             g, program, source=source, config=config, n_hubs=n_hubs,
             mesh=mesh, runtime=runtime, calibrator=calibrator,
-            initial_state=initial_state,
+            initial_state=initial_state, obs=obs,
         )
     if g is None and runtime is None:
         raise ValueError("run_hytm needs a graph or a prebuilt runtime")
+    if runtime is None and program.symmetrize:
+        # WCC-family programs are defined on the underlying undirected
+        # graph; a prebuilt runtime is assumed already symmetrized
+        g = g.symmetrize()
     rt = runtime if runtime is not None else build_runtime(
         g, config, n_hubs=n_hubs,
         weighted_norm=program.use_delta and program.weighted,
@@ -786,6 +807,16 @@ def run_hytm(
             drained = jax.device_get(history)
             for k in rows:
                 rows[k].append(drained[k][:n_done])
+            if obs is not None:
+                from repro.obs.record import record_chunk, record_history_rows
+
+                record_history_rows(obs, drained, n_done, iters - n_done)
+                record_chunk(
+                    obs, track="device0",
+                    wall_start=obs.wall_at(t_chunk),
+                    wall_dur=obs.wall() - obs.wall_at(t_chunk),
+                    start_iter=iters - n_done, n_done=n_done, warm=warm,
+                )
             if int(last_active) == 0:
                 break
         history = {k: np.concatenate(v) for k, v in rows.items()}
@@ -812,18 +843,30 @@ def run_hytm(
                 break
         staged = jax.device_get(rows)  # one host conversion, post-hoc
         history = {k: np.stack(v) for k, v in staged.items()}
+        if obs is not None:
+            from repro.obs.record import record_history_rows
+
+            record_history_rows(obs, history, iters, 0)
     jax.block_until_ready(state.values)
     wall = time.monotonic() - t0
-    return HyTMResult(
+    result = HyTMResult(
         values=np.asarray(state.values),
         delta=np.asarray(state.delta),
         iterations=iters,
         wall_seconds=wall,
-        modeled_seconds=float(np.sum(history["transfer_time"])),
-        total_transfer_bytes=float(np.sum(history["transfer_bytes"])),
+        modeled_seconds=float(np.sum(history[KEY_TRANSFER_TIME])),
+        total_transfer_bytes=float(np.sum(history[KEY_TRANSFER_BYTES])),
         history=history,
-        total_mispredictions=int(np.sum(history["mispredictions"])),
+        total_mispredictions=int(np.sum(history[KEY_MISPREDICTIONS])),
         engine_corrections=(
             calib.correction() if calib is not None else None
         ),
     )
+    if obs is not None:
+        from repro.obs.record import record_run
+
+        record_run(
+            obs, result, track="device0", wall_start=obs.wall_at(t0),
+            wall_dur=wall, program=program.name,
+        )
+    return result

@@ -58,6 +58,18 @@ from repro.core.cost_model import (
     COMPACT,
     FILTER,
     HISTORY_KEYS,
+    KEY_ACTIVE_EDGES,
+    KEY_ACTIVE_VERTICES,
+    KEY_ENGINES,
+    KEY_ICI_BYTES,
+    KEY_ICI_ENGINE,
+    KEY_ICI_TIME,
+    KEY_MERGED_ENTRIES,
+    KEY_MISPREDICTIONS,
+    KEY_N_TASKS,
+    KEY_PER_ENGINE_TIME,
+    KEY_TRANSFER_BYTES,
+    KEY_TRANSFER_TIME,
     NONE,
     engine_costs,
     init_history_buffers,
@@ -475,17 +487,17 @@ def _make_iteration_impl(
             plan.engines, plan.transfer_time, stats, plan.costs, correction,
         )
         info = {
-            "engines": plan.engines,
-            "transfer_bytes": plan.transfer_bytes,
-            "transfer_time": jnp.sum(plan.transfer_time)
+            KEY_ENGINES: plan.engines,
+            KEY_TRANSFER_BYTES: plan.transfer_bytes,
+            KEY_TRANSFER_TIME: jnp.sum(plan.transfer_time)
             + plan.n_tasks.astype(jnp.float32) * config.link.launch_overhead_s,
-            "n_tasks": plan.n_tasks,
-            "active_vertices": jnp.sum(frontier.astype(jnp.int32)),
-            "active_edges": jnp.sum(stats.active_edges),
+            KEY_N_TASKS: plan.n_tasks,
+            KEY_ACTIVE_VERTICES: jnp.sum(frontier.astype(jnp.int32)),
+            KEY_ACTIVE_EDGES: jnp.sum(stats.active_edges),
             "next_active": jnp.sum(next_frontier.astype(jnp.int32)),
-            "per_engine_time": per_engine_time,
-            "mispredictions": mispredictions,
-            "merged_entries": merged_entries,
+            KEY_PER_ENGINE_TIME: per_engine_time,
+            KEY_MISPREDICTIONS: mispredictions,
+            KEY_MERGED_ENTRIES: merged_entries,
         }
         return new_state, info
 
@@ -524,7 +536,7 @@ def make_sharded_chunk(
     ``_make_iteration_impl``), so warm-started reruns over a patched
     ``DeltaCSR`` view reuse this compiled chunk."""
     impl = _make_iteration_impl(rt, program, config)
-    keys = HISTORY_KEYS + ("merged_entries",)
+    keys = HISTORY_KEYS + (KEY_MERGED_ENTRIES,)
 
     @partial(jax.jit, donate_argnames=("state", "history"))
     def chunk_fn(state: HyTMState, history: dict, blocks, parts, out_degree,
@@ -593,9 +605,9 @@ def make_sharded_batched_chunk(
                 s2,
                 i + 1,
                 info["next_active"],
-                pe + jnp.sum(info["per_engine_time"], axis=0),
-                mp + jnp.sum(info["mispredictions"]),
-                me.at[i].set(jnp.sum(info["merged_entries"])),
+                pe + jnp.sum(info[KEY_PER_ENGINE_TIME], axis=0),
+                mp + jnp.sum(info[KEY_MISPREDICTIONS]),
+                me.at[i].set(jnp.sum(info[KEY_MERGED_ENTRIES])),
             )
 
         n_lanes = state.values.shape[0]
@@ -697,6 +709,7 @@ def run_hytm_sharded(
     runtime: ShardedRuntime | None = None,
     calibrator=None,
     initial_state: HyTMState | None = None,
+    obs=None,
 ) -> HyTMResult:
     """Drop-in ``run_hytm`` over a 1-D device mesh.
 
@@ -727,6 +740,9 @@ def run_hytm_sharded(
             from repro.launch.mesh import make_graph_mesh
 
             mesh = make_graph_mesh(axis=config.mesh_axis)
+        if program.symmetrize:
+            # WCC-family programs sweep the underlying undirected graph
+            g = g.symmetrize()
         rt = build_sharded_runtime(
             g, config, mesh, n_hubs=n_hubs,
             weighted_norm=program.use_delta and program.weighted,
@@ -762,15 +778,24 @@ def run_hytm_sharded(
     rows: dict[str, list] = {k: [] for k in HISTORY_KEYS}
     # second-level accounting (per iteration: the exchange mode depends on
     # the live active-vertex count, and feedback can reweigh the choice)
-    ici_hist: dict[str, list] = {"ici_bytes": [], "ici_time": [], "ici_engine": []}
+    ici_hist: dict[str, list] = {
+        KEY_ICI_BYTES: [], KEY_ICI_TIME: [], KEY_ICI_ENGINE: []}
 
     def charge_ici(merged_entries: float) -> None:
         ib, it_, ie = ici_level_cost(
             rt.n_nodes, float(merged_entries), n_dev, config.ici_link, corr_np,
         )
-        ici_hist["ici_bytes"].append(ib)
-        ici_hist["ici_time"].append(it_)
-        ici_hist["ici_engine"].append(ie)
+        it = len(ici_hist[KEY_ICI_BYTES])  # global iteration index
+        ici_hist[KEY_ICI_BYTES].append(ib)
+        ici_hist[KEY_ICI_TIME].append(it_)
+        ici_hist[KEY_ICI_ENGINE].append(ie)
+        if obs is not None:
+            from repro.obs.record import record_ici
+
+            record_ici(
+                obs, track="ici", it=it, bytes_=ib, seconds=it_, engine=ie,
+                merged_entries=float(merged_entries),
+            )
 
     t0 = time.monotonic()
     iters = 0
@@ -823,12 +848,22 @@ def run_hytm_sharded(
                 )
             # drain BEFORE the next dispatch donates these buffers
             drained = jax.device_get(history)
-            for me in drained["merged_entries"][:n_done]:
+            for me in drained[KEY_MERGED_ENTRIES][:n_done]:
                 charge_ici(me)  # charged under the chunk's correction
             if calib is not None:
                 corr_np = np.asarray(corr_arr, dtype=float)
             for k in rows:
                 rows[k].append(drained[k][:n_done])
+            if obs is not None:
+                from repro.obs.record import record_chunk, record_history_rows
+
+                record_history_rows(
+                    obs, drained, n_done, iters - n_done, track="mesh")
+                record_chunk(
+                    obs, track="mesh", wall_start=obs.wall_at(t_chunk),
+                    wall_dur=obs.wall() - obs.wall_at(t_chunk),
+                    start_iter=iters - n_done, n_done=n_done, warm=warm,
+                )
             if int(last_active) == 0:
                 break
         history = {k: np.concatenate(v) for k, v in rows.items()}
@@ -846,10 +881,10 @@ def run_hytm_sharded(
             # iteration's HBM-level selection ran with (the update below
             # only steers the next iteration, exactly as on the
             # single-device path)
-            charge_ici(info["merged_entries"])
+            charge_ici(info[KEY_MERGED_ENTRIES])
             if calib is not None:
                 correction = calib.observe_iteration(
-                    state.values, info["per_engine_time"], t_iter,
+                    state.values, info[KEY_PER_ENGINE_TIME], t_iter,
                     skip=iters == 1,  # iteration 1 measures compile
                 )
                 corr_np = np.asarray(correction, dtype=float)
@@ -860,23 +895,35 @@ def run_hytm_sharded(
         # history stayed on device during the loop; one pull post-hoc
         staged = jax.device_get(rows)
         history = {k: np.stack(v) for k, v in staged.items()}
+        if obs is not None:
+            from repro.obs.record import record_history_rows
+
+            record_history_rows(obs, history, iters, 0, track="mesh")
     jax.block_until_ready(state.values)
     wall = time.monotonic() - t0
 
     for k, v in ici_hist.items():
         history[k] = np.asarray(v)
-    return HyTMResult(
+    result = HyTMResult(
         values=np.asarray(state.values),
         delta=np.asarray(state.delta),
         iterations=iters,
         wall_seconds=wall,
-        modeled_seconds=float(np.sum(history["transfer_time"])),
-        total_transfer_bytes=float(np.sum(history["transfer_bytes"])),
+        modeled_seconds=float(np.sum(history[KEY_TRANSFER_TIME])),
+        total_transfer_bytes=float(np.sum(history[KEY_TRANSFER_BYTES])),
         history=history,
-        total_ici_bytes=float(np.sum(history["ici_bytes"])),
-        modeled_ici_seconds=float(np.sum(history["ici_time"])),
-        total_mispredictions=int(np.sum(history["mispredictions"])),
+        total_ici_bytes=float(np.sum(history[KEY_ICI_BYTES])),
+        modeled_ici_seconds=float(np.sum(history[KEY_ICI_TIME])),
+        total_mispredictions=int(np.sum(history[KEY_MISPREDICTIONS])),
         engine_corrections=(
             calib.correction() if calib is not None else None
         ),
     )
+    if obs is not None:
+        from repro.obs.record import record_run
+
+        record_run(
+            obs, result, track="mesh", wall_start=obs.wall_at(t0),
+            wall_dur=wall, program=program.name, label=f"run[{n_dev}dev]",
+        )
+    return result

@@ -49,6 +49,12 @@ class VertexProgram:
     # lane sweep (many sparse SUM lanes) and caches per source, while the
     # un-personalized family (PageRank) stays global (source=None key).
     personalized: bool = False
+    # WCC-family programs are defined on the *underlying undirected*
+    # graph: run_hytm / run_hytm_sharded symmetrize the input graph
+    # before building the runtime, so the caller can hand the directed
+    # graph directly (CC, by contrast, sweeps whatever edges it's given
+    # and callers symmetrize explicitly).
+    symmetrize: bool = False
 
     def init_state(self, n: int, source: int | None):
         if self.use_delta and self.personalized and source is not None:
@@ -63,7 +69,7 @@ class VertexProgram:
             values = jnp.zeros(n, dtype=jnp.float32)
             delta = jnp.full(n, 1.0 - self.damping, dtype=jnp.float32)
             frontier = jnp.ones(n, dtype=bool)
-        elif self.name == "cc":
+        elif self.name in ("cc", "wcc"):
             values = jnp.arange(n, dtype=jnp.float32)
             delta = jnp.zeros(n, dtype=jnp.float32)
             frontier = jnp.ones(n, dtype=bool)
@@ -98,12 +104,16 @@ def _php_msg(src_delta_over_deg, w):
 SSSP = VertexProgram("sssp", MIN, _sssp_msg, weighted=True)
 BFS = VertexProgram("bfs", MIN, _bfs_msg, weighted=False)
 CC = VertexProgram("cc", MIN, _cc_msg, weighted=False)
+# weakly connected components: the same min-label propagation as CC, but
+# over the symmetrized edge set — run directly on the directed graph
+# (labels = min vertex id reachable ignoring edge direction)
+WCC = VertexProgram("wcc", MIN, _cc_msg, weighted=False, symmetrize=True)
 PAGERANK = VertexProgram("pagerank", SUM, _pr_msg, use_delta=True, weighted=False)
 PHP = VertexProgram("php", SUM, _php_msg, use_delta=True, weighted=True)
 PPR = VertexProgram("ppr", SUM, _pr_msg, use_delta=True, weighted=False,
                     personalized=True)
 
-ALGORITHMS = {p.name: p for p in (SSSP, BFS, CC, PAGERANK, PHP, PPR)}
+ALGORITHMS = {p.name: p for p in (SSSP, BFS, CC, WCC, PAGERANK, PHP, PPR)}
 
 
 # --------------------------------------------------------------------------
@@ -159,6 +169,35 @@ def reference_cc(g: CSRGraph) -> np.ndarray:
         changed = not np.array_equal(new, label)
         label = new
     return label
+
+
+def reference_wcc(g: CSRGraph) -> np.ndarray:
+    """Weakly connected components by union-find over the directed edge
+    list (direction ignored), roots relabeled to the min vertex id of
+    each component so the labels match the device program's min-label
+    fixpoint exactly."""
+    n = g.n_nodes
+    parent = np.arange(n, dtype=np.int64)
+
+    def find(x: int) -> int:
+        root = x
+        while parent[root] != root:
+            root = parent[root]
+        while parent[x] != root:   # path compression
+            parent[x], x = root, parent[x]
+        return root
+
+    for u, v in zip(g.edge_sources(), g.indices):
+        ru, rv = find(int(u)), find(int(v))
+        if ru != rv:
+            parent[max(ru, rv)] = min(ru, rv)
+
+    roots = np.array([find(i) for i in range(n)], dtype=np.int64)
+    # min vertex id per component (roots are already component minima
+    # given the min-directed unions above, but don't rely on it)
+    comp_min = np.full(n, n, dtype=np.int64)
+    np.minimum.at(comp_min, roots, np.arange(n, dtype=np.int64))
+    return comp_min[roots]
 
 
 def reference_ppr(

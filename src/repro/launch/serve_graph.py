@@ -10,6 +10,12 @@ by a synthetic query/update trace.
 (batched == independent runs, cached repeat == zero sweeps, incremental
 after updates == from-scratch) and exits non-zero on any violation —
 CI runs it on 8 forced-host CPU devices.
+
+``--trace <path>`` threads a ``repro.obs.TraceRecorder`` through the
+service (engine iterations, cache tier transitions, scheduler spans)
+and writes a Chrome trace-event JSON viewable in chrome://tracing or
+Perfetto.  ``--algorithm wcc`` runs weakly connected components — the
+graph is symmetrized up front (``VertexProgram.symmetrize``).
 """
 
 from __future__ import annotations
@@ -116,7 +122,8 @@ def main() -> None:
     ap.add_argument("--edges", type=int, default=80_000)
     ap.add_argument("--partitions", type=int, default=32)
     ap.add_argument("--algorithm", default="sssp",
-                    choices=["sssp", "bfs", "cc", "pagerank", "php", "ppr"])
+                    choices=["sssp", "bfs", "cc", "wcc", "pagerank", "php",
+                             "ppr"])
     ap.add_argument("--queries", type=int, default=16)
     ap.add_argument("--lanes", type=int, default=8)
     ap.add_argument("--update-batches", type=int, default=4)
@@ -130,6 +137,10 @@ def main() -> None:
                     help="comma-separated static lane bucket sizes for "
                          "the serving scheduler (default: powers of two "
                          "up to --lanes); admission never recompiles")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record the run through repro.obs and write a "
+                         "Chrome trace-event JSON to PATH "
+                         "(chrome://tracing / Perfetto)")
     args = ap.parse_args()
 
     if args.selfcheck:
@@ -143,12 +154,21 @@ def main() -> None:
 
     program = ALGORITHMS[args.algorithm]
     g = rmat_graph(args.nodes, args.edges, seed=args.seed)
+    if program.symmetrize:
+        # WCC sweeps the undirected edge set; the streaming runtime is
+        # built straight from this graph, so symmetrize before serving
+        g = g.symmetrize()
     cfg = HyTMConfig(n_partitions=args.partitions)
     buckets = (tuple(int(b) for b in args.lane_buckets.split(","))
                if args.lane_buckets else None)
+    rec = None
+    if args.trace:
+        from repro.obs import TraceRecorder
+
+        rec = TraceRecorder()
     svc = GraphService(g, cfg, max_lanes=args.lanes,
                        device_budget_bytes=args.device_budget_bytes,
-                       lane_buckets=buckets)
+                       lane_buckets=buckets, obs=rec)
     rng = np.random.default_rng(args.seed)
 
     sources = rng.integers(0, args.nodes, size=args.queries).tolist()
@@ -175,6 +195,11 @@ def main() -> None:
           f"updated_edges={s.update_edges} version={svc.version}")
     print(f"cache tiers: {svc.cache.stats.as_dict()} "
           f"(device_bytes={svc.cache.device_bytes})")
+    if rec is not None:
+        from repro.obs import write_chrome_trace
+
+        write_chrome_trace(rec, args.trace)
+        print(f"trace: {len(rec)} events -> {args.trace}")
 
 
 if __name__ == "__main__":

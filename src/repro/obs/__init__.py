@@ -1,0 +1,48 @@
+"""repro.obs — unified tracing, metrics, and trace export.
+
+One observability layer across the engine (``core.hytm``), mesh
+(``dist.graph_shard``), streaming (``stream.service``), and serving
+(``serve.scheduler`` / ``serve.warm_cache``) stacks:
+
+* :class:`TraceRecorder` — host-side span/event ring with virtual-clock
+  *and* wall-clock timestamps (``trace.py``);
+* :class:`MetricsRegistry` — labeled counter/gauge/histogram registry
+  unifying the per-engine bytes/time, ICI pick, misprediction,
+  admission, cache-tier and lane-occupancy counters (``metrics.py``);
+* ``export`` — Chrome trace-event JSON (``chrome://tracing`` /
+  Perfetto), JSONL streaming, and a ``summary()``/``reconcile()`` that
+  cross-checks the trace against ``HyTMResult`` totals exactly.
+
+Contract: host-side only (events come from drained chunk history and
+scheduler/cache callbacks, never from inside jit-traced code);
+zero-overhead when disabled (every instrumentation site guards on
+``obs is not None``, so the untraced path is bit-identical); every event
+carries both clocks.  Gated by ``benchmarks/obs_bench.py --selfcheck``.
+"""
+
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import NullRecorder, TraceEvent, TraceRecorder
+from repro.obs.export import (
+    reconcile,
+    summary,
+    to_chrome_trace,
+    validate_chrome_trace,
+    write_chrome_trace,
+    write_jsonl,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NullRecorder",
+    "TraceEvent",
+    "TraceRecorder",
+    "reconcile",
+    "summary",
+    "to_chrome_trace",
+    "validate_chrome_trace",
+    "write_chrome_trace",
+    "write_jsonl",
+]

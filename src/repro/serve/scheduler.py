@@ -53,6 +53,7 @@ from typing import TYPE_CHECKING
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cost_model import KEY_ICI_BYTES, KEY_ICI_TIME
 from repro.core.hytm import (
     HyTMState,
     _consume_warm,
@@ -223,11 +224,33 @@ class LaneScheduler:
 
     def _finish(self, req: Request, values, delta, iters: int,
                 mode: str) -> ServedResult:
-        return ServedResult(
+        done_wall = time.monotonic()
+        res = ServedResult(
             request=req, values=values, delta=delta, iterations=iters,
             mode=mode, submit_vt=req.submit_vt, done_vt=self.vt,
-            submit_wall=req.submit_wall, done_wall=time.monotonic(),
+            submit_wall=req.submit_wall, done_wall=done_wall,
         )
+        obs = self.svc.obs
+        if obs is not None:
+            # one span per served request on its tenant's track: wall
+            # coordinates are submit->done monotonic stamps, vt rides in
+            # args (submit_vt -> the scheduler's virtual clock)
+            wall0 = (obs.wall_at(req.submit_wall)
+                     if req.submit_wall else obs.wall())
+            obs.span(
+                f"request:{mode}", cat="serve",
+                track=f"tenant:{req.tenant}",
+                wall=wall0,
+                wall_dur=max(obs.wall_at(done_wall) - wall0, 0.0),
+                vt=float(req.submit_vt),
+                vt_dur=float(self.vt - req.submit_vt),
+                iterations=iters, program=req.program.name,
+                source=-1 if req.source is None else int(req.source),
+            )
+            obs.metrics.counter(
+                "serve.requests", "served requests by mode/tenant").inc(
+                1, mode=mode, tenant=req.tenant)
+        return res
 
     def _admit_jobs(
         self, queue: RequestQueue, program: VertexProgram, n_slots: int,
@@ -239,6 +262,9 @@ class LaneScheduler:
         admissible left.  Rejections (could never run) and instant cache
         resolutions land directly in ``results``."""
         budget = self.svc.cache.policy.device_budget_bytes
+        obs = self.svc.obs
+        qs = queue.stats
+        before = (qs.admitted, qs.deferred, qs.rejected)
         jobs: list[_LaneJob] = []
         while True:
             admitted = queue.admit(
@@ -260,6 +286,14 @@ class LaneScheduler:
                         self.in_flight.get(req.tenant, 0) + 1)
             if len(jobs) >= n_slots:
                 break
+        if obs is not None:
+            m = obs.metrics
+            for name, prev, cur in zip(
+                    ("admitted", "deferred", "rejected"), before,
+                    (qs.admitted, qs.deferred, qs.rejected)):
+                if cur > prev:
+                    m.counter(f"admission.{name}",
+                              "queue admission outcomes").inc(cur - prev)
         return jobs
 
     # ------------------------------------------------------------- dispatch
@@ -334,15 +368,23 @@ class LaneScheduler:
         # collective per iteration (lane-summed entries, Q·(n,) dense)
         corr_np = (np.asarray(correction, dtype=float)
                    if correction is not None else None)
-        for me in np.asarray(merged)[:n_done]:
-            ib, it_, _ie = ici_level_cost(
+        obs = svc.obs
+        base = self.stats.engine_iterations
+        for k, me in enumerate(np.asarray(merged)[:n_done]):
+            ib, it_, ie = ici_level_cost(
                 bucket * svc.dcsr.n_nodes, float(me), n_dev,
                 svc.config.ici_link, corr_np,
             )
-            svc.stats.extra["ici_bytes"] = (
-                svc.stats.extra.get("ici_bytes", 0.0) + ib)
-            svc.stats.extra["ici_time"] = (
-                svc.stats.extra.get("ici_time", 0.0) + it_)
+            svc.stats.extra[KEY_ICI_BYTES] = (
+                svc.stats.extra.get(KEY_ICI_BYTES, 0.0) + ib)
+            svc.stats.extra[KEY_ICI_TIME] = (
+                svc.stats.extra.get(KEY_ICI_TIME, 0.0) + it_)
+            if obs is not None:
+                from repro.obs.record import record_ici
+
+                record_ici(obs, track="ici", it=base + k, bytes_=ib,
+                           seconds=it_, engine=ie,
+                           merged_entries=float(me))
         return state, n_done, np.asarray(lane_active), correction
 
     def _observe(self, pe_sum, mp_sum, t_chunk, warm, correction):
@@ -362,6 +404,7 @@ class LaneScheduler:
         Returns every request served this call (including instant cache
         resolutions and rejections), in completion order."""
         svc = self.svc
+        obs = svc.obs
         results: list[ServedResult] = []
         while queue:
             program = queue.peek_program()
@@ -386,6 +429,15 @@ class LaneScheduler:
                 self.stats.max_device_bytes,
                 self.pinned_bytes + svc.cache.device_bytes)
             self.stats.batches += 1
+            if obs is not None:
+                obs.metrics.gauge(
+                    "serve.device_bytes",
+                    "in-flight lanes + device-tier cache bytes").set(
+                    float(self.pinned_bytes + svc.cache.device_bytes))
+                obs.counter("device_bytes",
+                            self.pinned_bytes + svc.cache.device_bytes,
+                            cat="serve", track="scheduler",
+                            vt=float(self.vt))
             lane_jobs: list[_LaneJob | None] = list(jobs) + [None] * (
                 bucket - len(jobs))
             state = self._stack_state(program, lane_jobs, bucket)
@@ -401,6 +453,14 @@ class LaneScheduler:
                 self.stats.engine_iterations += n_done
                 self.stats.lane_iterations += live * n_done
                 self.stats.slot_iterations += bucket * n_done
+                if obs is not None:
+                    obs.metrics.gauge(
+                        "serve.occupancy",
+                        "live-lane fraction of dispatched slots").set(
+                        self.stats.occupancy)
+                    obs.counter("lane_occupancy", live / bucket,
+                                cat="serve", track="scheduler",
+                                vt=float(self.vt))
                 for j in lane_jobs:
                     if j is not None:
                         j.iters += n_done
@@ -450,6 +510,14 @@ class LaneScheduler:
                             frontier=state.frontier.at[slot].set(f),
                         )
                         self.stats.backfills += 1
+                        if obs is not None:
+                            obs.metrics.counter(
+                                "serve.backfills",
+                                "mid-flight lane refills").inc(1)
+                            obs.instant(
+                                "backfill", cat="serve", track="scheduler",
+                                vt=float(self.vt), slot=slot,
+                                tenant=job.request.tenant, mode=job.mode)
             self.pinned_bytes = 0
         return results
 

@@ -87,11 +87,25 @@ class WarmCache:
     keys so ``GraphService`` bookkeeping (floor computation, staleness
     eviction) reads it exactly like the flat dict it replaces."""
 
-    def __init__(self, policy: TierPolicy | None = None):
+    def __init__(self, policy: TierPolicy | None = None, obs=None):
         self.policy = policy or TierPolicy()
         self._entries: dict = {}
         self._clock = 0
         self.stats = CacheStats()
+        # optional repro.obs.TraceRecorder: tier transitions (spill /
+        # promote / evict) and per-tier hits emit events + counters on the
+        # "cache" track; obs=None records nothing
+        self.obs = obs
+
+    def _obs_event(self, name: str, key=None, **args) -> None:
+        if self.obs is None:
+            return
+        self.obs.metrics.counter(f"cache.{name}", "warm-cache tier events").inc(
+            1, **({"tier": args["tier"]} if "tier" in args else {}))
+        if key is not None:
+            args["key"] = repr(key)
+        self.obs.instant(name, cat="cache", track="cache",
+                         vt=float(self._clock), **args)
 
     # ------------------------------------------------------------- dict-like
     def __contains__(self, key) -> bool:
@@ -143,12 +157,14 @@ class WarmCache:
         entry = self._entries.get(key)
         if entry is None:
             self.stats.misses += 1
+            self._obs_event("miss", key)
             return None
         self._touch(entry)
         if entry.tier == DEVICE:
             self.stats.device_hits += 1
         else:
             self.stats.host_hits += 1
+        self._obs_event("hit", key, tier=entry.tier)
         return entry
 
     def put(self, key, version: int, values, delta,
@@ -191,6 +207,7 @@ class WarmCache:
             entry.delta = jax.device_put(jnp.asarray(entry.delta))
             entry.tier = DEVICE
             self.stats.promotions += 1
+            self._obs_event("promote", key, nbytes=entry.nbytes)
             self._touch(entry)
             self.shrink_to_budget(reserved_bytes, keep=key)
         return entry
@@ -201,6 +218,7 @@ class WarmCache:
         entry.delta = np.asarray(entry.delta)
         entry.tier = HOST
         self.stats.spills += 1
+        self._obs_event("spill", key, nbytes=entry.nbytes)
 
     def shrink_to_budget(self, reserved_bytes: int = 0,
                          keep=None) -> None:
@@ -231,6 +249,7 @@ class WarmCache:
     def evict(self, key) -> None:
         del self._entries[key]
         self.stats.evictions += 1
+        self._obs_event("evict", key)
 
     def clear(self) -> None:
         self.stats.evictions += len(self._entries)

@@ -186,6 +186,7 @@ def run_incremental(
     config: HyTMConfig | None = None,
     calibrator=None,
     mesh=None,
+    obs=None,
 ) -> HyTMResult:
     """Converge the post-update graph from the warm (values, Δ) state of a
     previous converged run, seeding only update-affected vertices.
@@ -224,10 +225,10 @@ def run_incremental(
         return run_hytm(
             None, program, source=source, config=config,
             runtime=runtime, mesh=runtime.mesh, initial_state=state,
-            calibrator=calibrator,
+            calibrator=calibrator, obs=obs,
         )
     return run_hytm(
         None, program, source=source, config=config,
         runtime=dcsr.runtime_for(program), initial_state=state,
-        calibrator=calibrator,
+        calibrator=calibrator, obs=obs,
     )

@@ -54,6 +54,11 @@ from typing import Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cost_model import (
+    KEY_ENGINE_CORRECTIONS,
+    KEY_MISPREDICTIONS,
+    KEY_WARM_CACHE,
+)
 from repro.core.hytm import HyTMConfig, run_hytm
 from repro.graph.algorithms import VertexProgram
 from repro.graph.csr import CSRGraph
@@ -95,8 +100,15 @@ class GraphService:
         mesh=None,
         device_budget_bytes: int | None = None,
         lane_buckets: Sequence[int] | None = None,
+        obs=None,
         **delta_kw,
     ):
+        # optional repro.obs.TraceRecorder threaded through every consumer
+        # the service owns: lane sweeps (scheduler), warm-cache tier
+        # transitions, calibrator correction updates, and the
+        # run_hytm/run_incremental dispatches.  obs=None (default) records
+        # nothing anywhere — the untraced service is bit-identical.
+        self.obs = obs
         self.config = config if config is not None else HyTMConfig()
         self.dcsr = DeltaCSR(graph, self.config, **delta_kw)
         # With config.mesh_axis set, the service serves *from the mesh*:
@@ -130,7 +142,7 @@ class GraphService:
         self.cache = WarmCache(TierPolicy(
             device_budget_bytes=device_budget_bytes,
             max_reports=max_reports,
-        ))
+        ), obs=obs)
         self._cache = self.cache  # dict-like; historical alias
         self._reports: list[UpdateReport] = []
         self.stats = ServiceStats()
@@ -142,7 +154,8 @@ class GraphService:
         if self.config.autotune:
             from repro.autotune.feedback import OnlineCalibrator
 
-            self._calibrator = OnlineCalibrator(decay=self.config.autotune_decay)
+            self._calibrator = OnlineCalibrator(
+                decay=self.config.autotune_decay, obs=obs)
         # the continuous lane scheduler owns every multiplexed sweep
         # (degenerate single-tenant mode here; multi-tenant closed-loop
         # serving drives LaneScheduler.pump directly — serve_bench)
@@ -234,7 +247,7 @@ class GraphService:
         if fresh:
             results.update(self._query_fresh(program, fresh))
         self.stats.n_queries += len(sources)
-        self.stats.extra["warm_cache"] = self.cache.stats.as_dict()
+        self.stats.extra[KEY_WARM_CACHE] = self.cache.stats.as_dict()
         return [results[k] for k in keyed]
 
     def _store(self, program, s, values, delta) -> None:
@@ -256,10 +269,10 @@ class GraphService:
             correction = jnp.asarray(
                 self._calibrator.correction(), jnp.float32)
         self._correction = correction
-        self.stats.extra["engine_corrections"] = (
+        self.stats.extra[KEY_ENGINE_CORRECTIONS] = (
             np.asarray(self._correction).tolist())
-        self.stats.extra["mispredictions"] = (
-            self.stats.extra.get("mispredictions", 0) + int(mispredictions))
+        self.stats.extra[KEY_MISPREDICTIONS] = (
+            self.stats.extra.get(KEY_MISPREDICTIONS, 0) + int(mispredictions))
 
     def _absorb_run(self, res) -> None:
         self._record_feedback(res.total_mispredictions)
@@ -273,7 +286,7 @@ class GraphService:
             self.dcsr, program, self._reports_since(entry.version),
             np.asarray(entry.values), np.asarray(entry.delta),
             source=s, config=self.config,
-            calibrator=self._calibrator, mesh=self.mesh,
+            calibrator=self._calibrator, mesh=self.mesh, obs=self.obs,
         )
         self._absorb_run(res)
         self._store(program, s, res.values, res.delta)
@@ -301,7 +314,7 @@ class GraphService:
                 res = run_hytm(
                     None, program, source=s, config=self.config,
                     runtime=self._runtime_for(program), mesh=self.mesh,
-                    calibrator=self._calibrator,
+                    calibrator=self._calibrator, obs=self.obs,
                 )
                 self._absorb_run(res)
                 self._store(program, s, res.values, res.delta)

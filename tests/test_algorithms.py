@@ -4,6 +4,7 @@ import dataclasses
 
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core.hytm import HyTMConfig, run_hytm
 from repro.graph.algorithms import (
@@ -12,10 +13,12 @@ from repro.graph.algorithms import (
     PAGERANK,
     PHP,
     SSSP,
+    WCC,
     reference_bfs,
     reference_cc,
     reference_pagerank,
     reference_sssp,
+    reference_wcc,
 )
 from repro.graph.generators import grid_mesh_graph, rmat_graph, uniform_graph
 from repro.graph.hub_sort import hub_sort
@@ -46,6 +49,33 @@ def test_cc(name, make):
     g = make()
     res = run_hytm(g.symmetrize(), CC, source=None, config=HyTMConfig(n_partitions=12))
     assert np.allclose(res.values, reference_cc(g))
+
+
+@pytest.mark.parametrize("name,make", GRAPHS)
+def test_wcc(name, make):
+    """WCC runs on the *directed* graph directly (program.symmetrize
+    makes run_hytm build the runtime over the undirected edge set) and
+    matches the union-find oracle."""
+    g = make()
+    res = run_hytm(g, WCC, source=None, config=HyTMConfig(n_partitions=12))
+    ref = reference_wcc(g)
+    assert np.array_equal(np.asarray(res.values, np.int64), ref)
+    # labels are the min vertex id of each component
+    assert np.all(ref <= np.arange(g.n_nodes))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(4, 120),
+    m=st.integers(0, 600),
+    seed=st.integers(0, 10_000),
+)
+def test_wcc_oracle_matches_label_propagation(n, m, seed):
+    """Property: the union-find WCC oracle agrees with the independent
+    min-label-propagation CC oracle (which symmetrizes internally) on
+    random graphs — two different fixpoint constructions, same labels."""
+    g = uniform_graph(n, max(m, 1), seed=seed)
+    assert np.array_equal(reference_wcc(g), reference_cc(g))
 
 
 @pytest.mark.parametrize("name,make", GRAPHS)

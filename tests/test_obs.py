@@ -1,0 +1,232 @@
+"""repro.obs: recorder semantics, chrome-trace schema, zero-overhead
+no-op contract, and exact metrics-vs-HyTMResult reconciliation."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.hytm import HyTMConfig, run_hytm
+from repro.graph.algorithms import SSSP
+from repro.graph.generators import rmat_graph
+from repro.obs import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NullRecorder,
+    TraceRecorder,
+    reconcile,
+    summary,
+    to_chrome_trace,
+    validate_chrome_trace,
+    write_chrome_trace,
+    write_jsonl,
+)
+
+CFG = HyTMConfig(n_partitions=8, sync_every=4)
+CFG1 = HyTMConfig(n_partitions=8, sync_every=1)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return rmat_graph(600, 4_800, seed=9)
+
+
+# --------------------------------------------------------------------------
+# recorder primitives
+# --------------------------------------------------------------------------
+
+def test_recorder_ring_is_bounded():
+    rec = TraceRecorder(capacity=4)
+    for i in range(10):
+        rec.instant("e", vt=float(i))
+    assert len(rec) == 4
+    assert rec.dropped == 6
+    # oldest events fell off the ring; the survivors are the newest
+    assert [e.vt for e in rec.events] == [6.0, 7.0, 8.0, 9.0]
+
+
+def test_recorder_drain_empties_and_preserves_order():
+    rec = TraceRecorder()
+    rec.span("s", wall=0.1, wall_dur=0.2)
+    rec.instant("i", vt=1.0)
+    rec.counter("c", 3.0)
+    drained = rec.drain()
+    assert [e.name for e in drained] == ["s", "i", "c"]
+    assert [e.ph for e in drained] == ["X", "i", "C"]
+    assert len(rec) == 0
+
+
+def test_null_recorder_is_inert():
+    rec = NullRecorder()
+    rec.span("s", wall=0.0)
+    rec.instant("i")
+    rec.counter("c", 1.0)
+    with rec.timed("t"):
+        pass
+    assert len(rec) == 0 and not rec.enabled
+    assert rec.drain() == []
+
+
+def test_metrics_registry():
+    m = MetricsRegistry()
+    c = m.counter("bytes", "transferred bytes")
+    c.inc(10, engine="filter")
+    c.inc(5, engine="filter")
+    c.inc(7, engine="compact")
+    assert c.value(engine="filter") == 15
+    assert c.total() == 22
+    g = m.gauge("occ", "occupancy")
+    g.set(0.5)
+    g.set(0.25)
+    assert g.value() == 0.25 and g.max() == 0.5
+    h = m.histogram("frontier", "active vertices")
+    for v in (1, 10, 100):
+        h.observe(v)
+    assert h.count() == 3 and h.sum() == 111
+    # same name resolves to the same instrument; type mismatch raises
+    assert m.counter("bytes", "") is c
+    with pytest.raises(TypeError):
+        m.gauge("bytes", "")
+    snap = m.snapshot()
+    assert set(snap) == {"bytes", "occ", "frontier"}
+    assert isinstance(Counter("x", ""), Counter)
+    assert isinstance(Gauge("x", ""), Gauge)
+    assert isinstance(Histogram("x", ""), Histogram)
+
+
+# --------------------------------------------------------------------------
+# chrome trace schema
+# --------------------------------------------------------------------------
+
+def test_chrome_trace_schema_and_tracks():
+    rec = TraceRecorder()
+    rec.span("run", cat="run", track="device0", wall=0.0, wall_dur=1.0,
+             vt=0.0, vt_dur=5.0)
+    rec.instant("it", cat="iteration", track="device0", vt=1.0)
+    rec.counter("frontier", 42.0, track="device0", vt=1.0)
+    rec.span("request:batched", cat="serve", track="tenant:gold",
+             wall=0.1, wall_dur=0.2)
+    doc = to_chrome_trace(rec)
+    validate_chrome_trace(doc)
+    events = doc["traceEvents"]
+    # per-track thread metadata + stable tid assignment
+    meta = [e for e in events if e["ph"] == "M"]
+    names = {m["args"]["name"] for m in meta if m["name"] == "thread_name"}
+    assert {"device0", "tenant:gold"} <= names
+    tids = {e["tid"] for e in events if e["ph"] != "M"}
+    assert len(tids) == 2
+    # ts is microseconds of the wall clock; vt rides in args
+    run_ev = next(e for e in events if e["name"] == "run")
+    assert run_ev["ts"] == 0.0 and run_ev["dur"] == pytest.approx(1e6)
+    assert run_ev["args"]["vt_dur"] == 5.0
+    # serialized form is valid JSON end to end
+    json.loads(json.dumps(doc))
+
+
+def test_validate_rejects_malformed():
+    doc = to_chrome_trace(TraceRecorder())
+    doc["traceEvents"].append({"name": "bad", "ph": "Z", "pid": 1,
+                               "tid": 1, "ts": 0.0})
+    with pytest.raises(ValueError):
+        validate_chrome_trace(doc)
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"traceEvents": [
+            {"name": "x", "ph": "X", "pid": 1, "tid": 1,
+             "ts": float("nan"), "dur": 0.0}]})
+
+
+def test_write_chrome_trace_and_jsonl(tmp_path):
+    rec = TraceRecorder()
+    rec.instant("e", vt=1.0, note="hello")
+    p = tmp_path / "trace.json"
+    write_chrome_trace(rec, str(p))
+    doc = json.loads(p.read_text())
+    validate_chrome_trace(doc)
+    pj = tmp_path / "trace.jsonl"
+    write_jsonl(rec, str(pj))
+    lines = [json.loads(l) for l in pj.read_text().splitlines()]
+    assert lines and lines[0]["name"] == "e"
+
+
+# --------------------------------------------------------------------------
+# engine integration: no-op exactness, nesting, reconciliation
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg", [CFG, CFG1], ids=["chunked", "K=1"])
+def test_traced_run_bit_identical_and_reconciles(graph, cfg):
+    base = run_hytm(graph, SSSP, source=0, config=cfg)
+    rec = TraceRecorder()
+    traced = run_hytm(graph, SSSP, source=0, config=cfg, obs=rec)
+    # obs=None vs obs=recorder: identical jit programs, identical outputs
+    np.testing.assert_array_equal(base.values, traced.values)
+    assert base.iterations == traced.iterations
+    assert base.total_transfer_bytes == traced.total_transfer_bytes
+    np.testing.assert_array_equal(base.history["engines"],
+                                  traced.history["engines"])
+    # exact reconciliation: trace totals == HyTMResult accounting
+    rep = reconcile(rec, traced)
+    assert rep["ok"], rep
+    assert rep["checks"]["iterations"]["trace"] == traced.iterations
+    assert (rep["checks"]["transfer_bytes"]["trace"]
+            == traced.total_transfer_bytes)
+
+
+def test_null_recorder_matches_none(graph):
+    a = run_hytm(graph, SSSP, source=0, config=CFG, obs=None)
+    b = run_hytm(graph, SSSP, source=0, config=CFG, obs=NullRecorder())
+    np.testing.assert_array_equal(a.values, b.values)
+    assert a.iterations == b.iterations
+
+
+def test_span_nesting_invariants(graph):
+    """Chunk spans nest inside the run span on both clocks, and the
+    per-iteration instants tile the run's virtual-clock interval."""
+    rec = TraceRecorder()
+    res = run_hytm(graph, SSSP, source=0, config=CFG, obs=rec)
+    runs = [e for e in rec.events if e.name == "hytm_run"]
+    assert len(runs) == 1
+    run_ev = runs[0]
+    eps = 1e-9
+    chunks = [e for e in rec.events if e.name == "chunk"]
+    assert chunks and all(c.track == run_ev.track for c in chunks)
+    for c in chunks:
+        assert c.wall >= run_ev.wall - eps
+        assert c.wall + c.wall_dur <= run_ev.wall + run_ev.wall_dur + eps
+        assert c.vt >= run_ev.vt
+        assert c.vt + c.vt_dur <= run_ev.vt + run_ev.vt_dur
+    # chunk vt intervals are disjoint and cover exactly [0, iterations)
+    ivs = sorted((c.vt, c.vt + c.vt_dur) for c in chunks)
+    assert ivs[0][0] == 0 and ivs[-1][1] == res.iterations
+    for (_, a_end), (b_start, _) in zip(ivs, ivs[1:]):
+        assert a_end == b_start
+    its = sorted(e.vt for e in rec.events if e.cat == "iteration")
+    assert its == list(np.arange(res.iterations, dtype=float))
+
+
+def test_metrics_match_result_accounting(graph):
+    rec = TraceRecorder()
+    res = run_hytm(graph, SSSP, source=0, config=CFG, obs=rec)
+    m = rec.metrics
+    assert m.get("engine.iterations").total() == res.iterations
+    # per-engine byte counters sum to the result's transfer total
+    # (float64 row-sum accumulation; exact for these magnitudes)
+    assert m.get("engine.bytes").total() == res.total_transfer_bytes
+    assert (m.get("engine.mispredictions").total()
+            == res.total_mispredictions)
+    picks = m.get("engine.picks")
+    assert picks.total() == np.sum(
+        np.asarray(res.history["engines"]) >= 0)
+    s = summary(rec)
+    assert s["events"] == len(rec) and s["dropped"] == 0
+    assert "device0" in s["tracks"]
+
+
+def test_reconcile_detects_mismatch(graph):
+    rec = TraceRecorder()
+    res = run_hytm(graph, SSSP, source=0, config=CFG, obs=rec)
+    # a second run into the same recorder doubles the trace-side totals
+    run_hytm(graph, SSSP, source=0, config=CFG, obs=rec)
+    rep = reconcile(rec, res)
+    assert not rep["ok"]
