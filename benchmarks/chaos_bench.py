@@ -1,0 +1,304 @@
+"""Chaos benchmark + exactness-under-faults gate (repro.resilience).
+
+Replays one multi-tenant serving trace (queries -> update batch ->
+queries) against a ``GraphService`` under seeded :class:`FaultPlan`\\ s
+and measures what recovery costs:
+
+* ``chaos/replay_clean``  — wall time of the fault-free trace replay
+  (the baseline every faulted replay is compared against);
+* ``chaos/replay_faulted``— the same trace under injected dispatch
+  failures/timeouts with retry (recovery overhead is the difference);
+* ``chaos/checkpoint``    — one ``HyTMState`` checkpoint save at a chunk
+  boundary (the per-chunk price of crash recoverability);
+* ``chaos/resume``        — kill at a seeded chunk boundary + restore +
+  converge the remainder.
+
+``--selfcheck`` gates (CI):
+  1. **exactness under faults** — under three seeded fault plans
+     (dispatch fail/timeout + retry; allocation OOM + tiered load
+     shedding; host-spill corruption + promote OOM + update
+     drop/duplicate), every *completed* request is bit-identical to the
+     fault-free replay of the same trace, ``quota_violations == 0``, and
+     the device byte budget holds;
+  2. **crash recovery** — a run killed mid-flight by an injected
+     dispatch fault resumes from its last checkpoint bit-identically:
+     values, iterations, transfer bytes, and per-iteration engine picks
+     all equal the uninterrupted run;
+  3. **zero overhead** — a service threaded with an *empty* fault plan
+     (every guarded path taken, nothing fired) replays the trace
+     bit-identically to the plain PR-8 service;
+  4. **observability** — fault injections, retries, and degradations
+     appear on the ``faults`` obs track and the exported Chrome trace
+     validates.
+
+``--trace <path>`` writes the faulted replay's trace for artifact upload.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.hytm import HyTMConfig, run_hytm
+from repro.graph.algorithms import SSSP
+from repro.graph.generators import rmat_graph
+from repro.resilience import (
+    CheckpointHook,
+    FaultSpec,
+    RetriesExhausted,
+    RetryPolicy,
+    Supervisor,
+    deliver_update,
+    plan_of,
+    resume_run,
+    save,
+)
+from repro.serve import Request, RequestQueue
+from repro.stream import GraphService, random_batch
+
+TIERS = {"gold": 2, "silver": 1, "bronze": 0}
+
+
+def _submit(queue, program, specs):
+    for i, (tenant, source) in enumerate(specs):
+        queue.submit(Request(tenant=tenant, program=program, source=source,
+                             deadline=float(i)))
+
+
+def _replay(g, cfg, budget, trace, update_seed, *, faults=None,
+            supervisor=None, policy=None, obs=None):
+    """Replay the canonical trace: pump phase-1 queries, deliver one
+    update batch exactly-once, pump phase-2 queries.  Returns completed
+    (phase, tenant, source) -> values plus the service for stats."""
+    svc = GraphService(g, cfg, max_lanes=4, device_budget_bytes=budget,
+                       faults=faults, supervisor=supervisor, obs=obs)
+    completed: dict[tuple, np.ndarray] = {}
+    shed: list[tuple] = []
+    for phase, specs in enumerate(trace):
+        q = RequestQueue(quota=2, tenant_quotas={"bronze": 1})
+        _submit(q, SSSP, specs)
+        for r in svc.scheduler.pump(q):
+            key = (phase, r.request.tenant, r.request.source)
+            if r.mode == "shed":
+                shed.append(key)
+            elif r.mode != "rejected":
+                completed[key] = np.asarray(r.values)
+        assert q.stats.quota_violations == 0, q.stats
+        if phase == 0:
+            batch = random_batch(svc.dcsr, np.random.default_rng(update_seed),
+                                 n_insert=12, n_delete=12)
+            deliver_update(svc, batch, batch_id=f"trace-{update_seed}",
+                           faults=faults, policy=policy, obs=obs)
+    return completed, shed, svc
+
+
+def _assert_completed_exact(clean, faulted, shed, label):
+    assert set(faulted) <= set(clean), (label, set(faulted) - set(clean))
+    missing = set(clean) - set(faulted) - set(shed)
+    assert not missing, (label, "lost without shed record", missing)
+    for key, vals in faulted.items():
+        np.testing.assert_array_equal(
+            vals, clean[key], err_msg=f"{label}: {key} diverged under faults")
+
+
+def run(fast: bool = False, selfcheck: bool = False, seed: int = 7,
+        trace_path: str | None = None) -> dict:
+    n_nodes, n_edges = (300, 2_400) if fast else (800, 6_400)
+    g = rmat_graph(n_nodes, n_edges, seed=seed)
+    cfg = HyTMConfig(n_partitions=6 if fast else 8, sync_every=2)
+    budget = 6 * 9 * n_nodes
+    trace = (
+        [("gold", 0), ("silver", 3), ("bronze", 77), ("gold", 210),
+         ("bronze", 9), ("silver", 15)],
+        [("gold", 0), ("bronze", 3), ("silver", 77)],
+    )
+    policy = RetryPolicy(max_attempts=6, backoff_s=0.0)
+
+    t0 = time.monotonic()
+    clean, _, svc_clean = _replay(g, cfg, budget, trace, seed)
+    t_clean = time.monotonic() - t0
+    emit("chaos/replay_clean", t_clean * 1e6,
+         f"requests={len(clean)} version={svc_clean.version}")
+
+    # scenario 1: dispatch failures + timeouts, recovered by retry
+    plan1 = plan_of(
+        FaultSpec("chunk_dispatch", "fail", p=0.4, max_fires=6),
+        FaultSpec("lane_dispatch", "fail", p=0.3, max_fires=6),
+        FaultSpec("lane_dispatch", "timeout", p=0.2, max_fires=4),
+        seed=seed,
+    )
+    sup1 = Supervisor(policy=policy, faults=plan1, tenant_tiers=TIERS)
+    t0 = time.monotonic()
+    faulted1, shed1, svc1 = _replay(
+        g, cfg, budget, trace, seed, faults=plan1, supervisor=sup1,
+        policy=policy)
+    t_faulted = time.monotonic() - t0
+    emit("chaos/replay_faulted", t_faulted * 1e6,
+         f"injected={sum(plan1.counts().values())} "
+         f"retries={sup1.counters['retries']} "
+         f"overhead={t_faulted - t_clean:+.3f}s")
+
+    # checkpoint + kill/resume micro-costs (gate asserts bit-identity)
+    tmp = tempfile.mkdtemp(prefix="chaos_bench_")
+    ckpt = os.path.join(tmp, "run.ckpt.npz")
+    base = run_hytm(g, SSSP, source=0, config=cfg)
+    hook = CheckpointHook(ckpt, program=SSSP.name, anchor=(0, 0))
+    kill_plan = plan_of(FaultSpec("chunk_dispatch", "fail", at=(2,)),
+                        seed=seed + 1)
+    try:
+        run_hytm(g, SSSP, source=0, config=cfg, faults=kill_plan,
+                 on_chunk=hook)
+        raise AssertionError("injected kill did not fire")
+    except RetriesExhausted:
+        pass
+    t0 = time.monotonic()
+    resumed = resume_run(ckpt, g, SSSP, config=cfg, source=0,
+                         expect_anchor=(0, 0))
+    emit("chaos/resume", (time.monotonic() - t0) * 1e6,
+         f"total_iterations={resumed.iterations}")
+    t0 = time.monotonic()
+    save_ckpt_path = os.path.join(tmp, "timing.ckpt.npz")
+    from repro.resilience import RunCheckpoint
+
+    save(RunCheckpoint(program=SSSP.name, iterations=base.iterations,
+                       values=np.asarray(base.values),
+                       delta=np.asarray(base.delta)), save_ckpt_path)
+    emit("chaos/checkpoint", (time.monotonic() - t0) * 1e6,
+         f"bytes={os.path.getsize(save_ckpt_path)}")
+
+    rows = {
+        "requests": len(clean),
+        "injected": sum(plan1.counts().values()),
+        "retries": sup1.counters["retries"],
+        "resume_iterations": resumed.iterations,
+    }
+    if selfcheck:
+        _selfcheck(g, cfg, budget, trace, seed, policy, clean, svc_clean,
+                   faulted1, shed1, svc1, base, resumed, ckpt, rows,
+                   trace_path)
+    elif trace_path is not None:
+        _write_trace(g, cfg, budget, trace, seed, policy, trace_path)
+    return rows
+
+
+def _write_trace(g, cfg, budget, trace, seed, policy, trace_path):
+    from repro.obs import TraceRecorder, write_chrome_trace
+
+    rec = TraceRecorder()
+    plan = plan_of(FaultSpec("lane_dispatch", "fail", p=0.5, max_fires=4),
+                   FaultSpec("lane_alloc", "oom", p=1.0, max_fires=8),
+                   seed=seed)
+    sup = Supervisor(policy=policy, faults=plan, obs=rec,
+                     tenant_tiers=TIERS, shed_after=2)
+    _replay(g, cfg, budget, trace, seed, faults=plan, supervisor=sup,
+            policy=policy, obs=rec)
+    write_chrome_trace(rec, trace_path)
+    print(f"# trace: {len(rec)} events -> {trace_path}")
+    return rec
+
+
+def _selfcheck(g, cfg, budget, trace, seed, policy, clean, svc_clean,
+               faulted1, shed1, svc1, base, resumed, ckpt, rows,
+               trace_path) -> None:
+    from repro.core.cost_model import KEY_ENGINES
+    from repro.obs import TraceRecorder, to_chrome_trace, validate_chrome_trace
+    from repro.resilience import FaultPlan
+
+    # 1a. scenario 1 (dispatch fail/timeout + retry): exactness
+    _assert_completed_exact(clean, faulted1, shed1, "dispatch-faults")
+    assert svc1.version == svc_clean.version, "update lost or duplicated"
+    assert svc1.scheduler.stats.max_device_bytes <= budget
+
+    # 1b. scenario 2: allocation OOM pressure -> narrower batches +
+    # tiered shedding; completed answers still exact, budget still holds
+    plan2 = plan_of(FaultSpec("lane_alloc", "oom", p=1.0, max_fires=100),
+                    FaultSpec("cache_promote", "oom", p=0.5, max_fires=10),
+                    seed=seed + 2)
+    sup2 = Supervisor(policy=policy, faults=plan2, tenant_tiers=TIERS,
+                      shed_after=2)
+    faulted2, shed2, svc2 = _replay(
+        g, cfg, budget, trace, seed, faults=plan2, supervisor=sup2,
+        policy=policy)
+    _assert_completed_exact(clean, faulted2, shed2, "alloc-oom")
+    assert svc2.version == svc_clean.version
+    assert svc2.scheduler.stats.max_device_bytes <= budget
+    for phase, tenant, _src in shed2:
+        waiting = {t for t, _ in trace[phase]}
+        assert TIERS[tenant] < max(TIERS[t] for t in waiting), (
+            "shed a top-tier tenant", tenant)
+
+    # 1c. scenario 3: host-spill corruption + update drop/duplicate —
+    # corruption is detected (never served), delivery is exactly-once
+    plan3 = plan_of(FaultSpec("host_spill", "corrupt", at=(0, 1)),
+                    FaultSpec("update_delivery", "drop", at=(0,)),
+                    FaultSpec("update_redeliver", "duplicate", at=(0,)),
+                    seed=seed + 3)
+    tight = 2 * 9 * g.n_nodes  # force spills so corruption has a target
+    faulted3, shed3, svc3 = _replay(
+        g, cfg, budget=tight, trace=trace, update_seed=seed, faults=plan3,
+        policy=policy)
+    _assert_completed_exact(clean, faulted3, shed3, "corrupt-spill")
+    assert svc3.version == svc_clean.version, "drop/duplicate broke updates"
+    counts3 = plan3.counts()
+    assert counts3.get(("host_spill", "corrupt"), 0) >= 1, counts3
+    assert svc3.cache.stats.corrupt >= 1 or svc3.cache.stats.spills == 0, (
+        svc3.cache.stats.as_dict())
+
+    # 2. crash recovery: killed run resumed from checkpoint bit-identical
+    np.testing.assert_array_equal(base.values, resumed.values)
+    assert resumed.iterations == base.iterations
+    assert resumed.total_transfer_bytes == base.total_transfer_bytes
+    np.testing.assert_array_equal(
+        base.history[KEY_ENGINES], resumed.history[KEY_ENGINES])
+
+    # 3. zero overhead: an empty plan takes every guarded path but fires
+    # nothing — the replay must be bit-identical to the plain service
+    empty, shed0, svc0 = _replay(g, cfg, budget, trace, seed,
+                                 faults=FaultPlan(seed=seed))
+    assert not shed0
+    _assert_completed_exact(clean, empty, [], "empty-plan")
+    assert set(empty) == set(clean)
+    assert svc0.version == svc_clean.version
+
+    # 4. observability: injections land on the faults track; trace valid
+    rec = _write_trace(g, cfg, budget, trace, seed, policy,
+                       trace_path or os.path.join(
+                           tempfile.mkdtemp(prefix="chaos_bench_"),
+                           "chaos_trace.json"))
+    tracks = {e.track for e in rec.events}
+    assert "faults" in tracks, tracks
+    validate_chrome_trace(to_chrome_trace(rec))
+
+    print(f"# SELFCHECK OK: {len(clean)} completed requests bit-identical "
+          f"under 3 fault plans ({rows['injected']}+ injections, "
+          f"{len(shed2)} shed, corrupt={svc3.cache.stats.corrupt}); "
+          f"kill+resume bit-identical over {base.iterations} iterations; "
+          f"empty-plan replay == plain; faults track valid")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller graph (CI mode)")
+    ap.add_argument("--selfcheck", action="store_true",
+                    help="gate: completed requests bit-identical under "
+                         "seeded fault plans, quotas/budgets hold, "
+                         "kill+restore resumes bit-identically, empty "
+                         "plan is zero-overhead")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the faulted replay's chrome trace-event "
+                         "JSON (with the faults track) to PATH")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(fast=args.fast, selfcheck=args.selfcheck, seed=args.seed,
+        trace_path=args.trace)
+
+
+if __name__ == "__main__":
+    main()

@@ -47,6 +47,7 @@ def main() -> None:
 
     from benchmarks import (
         autotune_bench,
+        chaos_bench,
         common,
         fig3_analysis,
         fig7_execution_path,
@@ -82,6 +83,7 @@ def main() -> None:
         "autotune": lambda: autotune_bench.run(fast=args.fast),
         "iterloop": lambda: iterloop.run(fast=args.fast),
         "obs": lambda: obs_bench.run(fast=args.fast),
+        "chaos": lambda: chaos_bench.run(fast=args.fast),
     }
     print("name,us_per_call,derived")
     for name, fn in mods.items():

@@ -40,6 +40,7 @@ from repro.autotune.registry import (
     has_profile,
     list_profiles,
     load_profile,
+    load_profile_or_default,
     profile_from_dict,
     profile_path,
     profile_to_dict,
@@ -54,6 +55,7 @@ __all__ = [
     "Observation", "ProbePoint", "default_grid", "model_probe",
     "observation_matrix", "stats_for", "wall_probe",
     "default_device_kind", "has_profile", "list_profiles", "load_profile",
+    "load_profile_or_default",
     "profile_from_dict", "profile_path", "profile_to_dict", "registry_dir",
     "save_profile",
 ]

@@ -115,6 +115,40 @@ def load_profile(
     return (link, doc.get("meta", {})) if with_meta else link
 
 
+def load_profile_or_default(
+    device_kind: str | None = None,
+    base: str | os.PathLike | None = None,
+    default: LinkModel | None = None,
+) -> LinkModel:
+    """Load the calibrated profile, falling back to shipped constants.
+
+    Degradation contract (repro.resilience satellite): a *missing*
+    profile is the normal cold-start case and falls back silently; a
+    *corrupt* one — invalid JSON, wrong schema, truncated or alien field
+    set, values rejected by ``LinkModel.__post_init__`` — emits a
+    ``RuntimeWarning`` naming the file and falls back, so a damaged
+    registry degrades the cost model to the shipped ``PCIE3`` constants
+    instead of taking the launcher down."""
+    import warnings
+
+    from repro.core.constants import PCIE3
+
+    fallback = default if default is not None else PCIE3
+    try:
+        return load_profile(device_kind, base)
+    except FileNotFoundError:
+        return fallback
+    except (ValueError, KeyError, TypeError, AttributeError) as exc:
+        warnings.warn(
+            f"ignoring corrupt autotune profile "
+            f"({profile_path(device_kind, base)}): {exc}; "
+            f"falling back to shipped {fallback.name!r} constants",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+        return fallback
+
+
 def has_profile(device_kind: str | None = None,
                 base: str | os.PathLike | None = None) -> bool:
     return profile_path(device_kind, base).exists()

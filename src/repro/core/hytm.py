@@ -673,6 +673,9 @@ def run_hytm(
     initial_state: HyTMState | None = None,
     calibrator=None,
     obs=None,
+    faults=None,
+    retry=None,
+    on_chunk=None,
 ) -> HyTMResult:
     """``runtime`` lets callers amortize preprocessing across runs; with
     ``config.mesh_axis`` set it must be a ``graph_shard.ShardedRuntime``
@@ -703,6 +706,20 @@ def run_hytm(
     fields exactly.  ``obs=None`` (the default) records nothing and runs
     the identical jit programs — the traced and untraced paths are
     bit-identical.
+
+    ``faults``/``retry``: an optional ``repro.resilience.FaultPlan`` and
+    ``RetryPolicy``.  Injected chunk-dispatch faults (site
+    ``"chunk_dispatch"``) fire *before* the jit dispatch — donated
+    buffers are still intact, so a retried dispatch is bit-identical.
+    ``faults=None`` (the default) takes the unhooked code path exactly,
+    mirroring the ``obs=None`` zero-overhead contract.
+
+    ``on_chunk``: called at every chunk boundary (after the history
+    drain, before the convergence check) with ``state`` (live device
+    state), ``iterations``, ``rows`` (drained host history so far),
+    ``calibrator``, and ``last_active`` — the attachment point for
+    ``repro.resilience.CheckpointHook``.  Chunked driver only
+    (``sync_every > 1``).
     """
     if config.mesh_axis is not None:
         # late import: graph_shard depends on this module's dataclasses
@@ -711,7 +728,8 @@ def run_hytm(
         return run_hytm_sharded(
             g, program, source=source, config=config, n_hubs=n_hubs,
             mesh=mesh, runtime=runtime, calibrator=calibrator,
-            initial_state=initial_state, obs=obs,
+            initial_state=initial_state, obs=obs, faults=faults,
+            retry=retry, on_chunk=on_chunk,
         )
     if g is None and runtime is None:
         raise ValueError("run_hytm needs a graph or a prebuilt runtime")
@@ -745,6 +763,10 @@ def run_hytm(
     # zero/negative chunk size would silently run the wrong driver
     if config.sync_every < 1:
         raise ValueError(f"sync_every must be >= 1, got {config.sync_every}")
+    if on_chunk is not None and config.sync_every == 1:
+        raise ValueError(
+            "on_chunk (checkpointing) requires the chunked driver — "
+            "set sync_every >= 2")
     rows: dict[str, list] = {k: [] for k in HISTORY_KEYS}
     t0 = time.monotonic()
     iters = 0
@@ -786,12 +808,34 @@ def run_hytm(
                 correction is not None,
             ))
             t_chunk = time.monotonic()
-            with quiet_donation():
-                state, history, n_done, last_active, pe_sum = hytm_chunk(
-                    state, history, rt.csr, rt.parts, rt.zc_req,
-                    rt.inv_deg, program, config, rt.n_hub_partitions,
-                    chunk, correction,
-                )
+            if faults is None:
+                with quiet_donation():
+                    state, history, n_done, last_active, pe_sum = hytm_chunk(
+                        state, history, rt.csr, rt.parts, rt.zc_req,
+                        rt.inv_deg, program, config, rt.n_hub_partitions,
+                        chunk, correction,
+                    )
+            else:
+                # injected faults fire BEFORE the dispatch (see
+                # resilience.supervisor) so the donated buffers of the
+                # previous chunk are intact and a retry is bit-identical
+                from repro.kernels.runtime import resolve_use_kernels
+                from repro.resilience.supervisor import guarded_dispatch
+
+                def _attempt(st=state, h=history, corr=correction):
+                    with quiet_donation():
+                        return hytm_chunk(
+                            st, h, rt.csr, rt.parts, rt.zc_req,
+                            rt.inv_deg, program, config,
+                            rt.n_hub_partitions, chunk, corr,
+                        )
+
+                state, history, n_done, last_active, pe_sum = (
+                    guarded_dispatch(
+                        _attempt, site="chunk_dispatch", faults=faults,
+                        policy=retry, obs=obs, mesh=False,
+                        kernels=resolve_use_kernels(config.use_kernels),
+                    ))
             n_done = int(n_done)
             iters += n_done
             if calib is not None:
@@ -817,6 +861,12 @@ def run_hytm(
                     wall_dur=obs.wall() - obs.wall_at(t_chunk),
                     start_iter=iters - n_done, n_done=n_done, warm=warm,
                 )
+            if on_chunk is not None:
+                # chunk boundary: the drained rows are on host and the
+                # next dispatch has not donated the state yet — the one
+                # point a checkpoint can capture a resumable snapshot
+                on_chunk(state=state, iterations=iters, rows=rows,
+                         calibrator=calib, last_active=int(last_active))
             if int(last_active) == 0:
                 break
         history = {k: np.concatenate(v) for k, v in rows.items()}
@@ -827,10 +877,26 @@ def run_hytm(
         # left is the loop condition itself.
         for _ in range(config.max_iters):
             t_iter = time.monotonic()
-            state, info = hytm_iteration(
-                state, rt.csr, rt.parts, rt.zc_req, rt.inv_deg,
-                program, config, rt.n_hub_partitions, correction,
-            )
+            if faults is None:
+                state, info = hytm_iteration(
+                    state, rt.csr, rt.parts, rt.zc_req, rt.inv_deg,
+                    program, config, rt.n_hub_partitions, correction,
+                )
+            else:
+                from repro.kernels.runtime import resolve_use_kernels
+                from repro.resilience.supervisor import guarded_dispatch
+
+                def _attempt(st=state, corr=correction):
+                    return hytm_iteration(
+                        st, rt.csr, rt.parts, rt.zc_req, rt.inv_deg,
+                        program, config, rt.n_hub_partitions, corr,
+                    )
+
+                state, info = guarded_dispatch(
+                    _attempt, site="chunk_dispatch", faults=faults,
+                    policy=retry, obs=obs, mesh=False,
+                    kernels=resolve_use_kernels(config.use_kernels),
+                )
             iters += 1
             if calib is not None:
                 correction = calib.observe_iteration(

@@ -710,6 +710,9 @@ def run_hytm_sharded(
     calibrator=None,
     initial_state: HyTMState | None = None,
     obs=None,
+    faults=None,
+    retry=None,
+    on_chunk=None,
 ) -> HyTMResult:
     """Drop-in ``run_hytm`` over a 1-D device mesh.
 
@@ -728,6 +731,12 @@ def run_hytm_sharded(
     single-device ``async_sweep=False`` warm, bit-for-bit for
     min-combine).  With ``runtime`` and ``initial_state`` both given,
     ``g`` may be ``None``.
+
+    ``faults``/``retry``/``on_chunk`` mirror ``run_hytm``: injected
+    ``"chunk_dispatch"`` faults fire before the shard_mapped dispatch
+    (donated buffers intact, retries bit-identical), and ``on_chunk``
+    observes every chunk boundary for checkpointing — all zero-overhead
+    when absent.
     """
     if runtime is not None:
         rt = runtime
@@ -775,6 +784,10 @@ def run_hytm_sharded(
 
     if config.sync_every < 1:
         raise ValueError(f"sync_every must be >= 1, got {config.sync_every}")
+    if on_chunk is not None and config.sync_every == 1:
+        raise ValueError(
+            "on_chunk (checkpointing) requires the chunked driver — "
+            "set sync_every >= 2")
     rows: dict[str, list] = {k: [] for k in HISTORY_KEYS}
     # second-level accounting (per iteration: the exchange mode depends on
     # the live active-vertex count, and feedback can reweigh the choice)
@@ -834,9 +847,29 @@ def run_hytm_sharded(
                 registry=cached["seen"],
             )
             t_chunk = time.monotonic()
-            with quiet_donation():
-                state, history, n_done, last_active, pe_sum = cached["fn"](
-                    state, history, *_runtime_args(rt), corr_arr)
+            if faults is None:
+                with quiet_donation():
+                    state, history, n_done, last_active, pe_sum = (
+                        cached["fn"](
+                            state, history, *_runtime_args(rt), corr_arr))
+            else:
+                # faults fire BEFORE the shard_mapped dispatch — donated
+                # buffers from the previous chunk stay intact, so a
+                # retried dispatch is bit-identical
+                from repro.kernels.runtime import resolve_use_kernels
+                from repro.resilience.supervisor import guarded_dispatch
+
+                def _attempt(st=state, h=history, ca=corr_arr,
+                             fn=cached["fn"]):
+                    with quiet_donation():
+                        return fn(st, h, *_runtime_args(rt), ca)
+
+                state, history, n_done, last_active, pe_sum = (
+                    guarded_dispatch(
+                        _attempt, site="chunk_dispatch", faults=faults,
+                        policy=retry, obs=obs, mesh=True,
+                        kernels=resolve_use_kernels(config.use_kernels),
+                    ))
             n_done = int(n_done)
             iters += n_done
             if calib is not None:
@@ -864,6 +897,9 @@ def run_hytm_sharded(
                     wall_dur=obs.wall() - obs.wall_at(t_chunk),
                     start_iter=iters - n_done, n_done=n_done, warm=warm,
                 )
+            if on_chunk is not None:
+                on_chunk(state=state, iterations=iters, rows=rows,
+                         calibrator=calib, last_active=int(last_active))
             if int(last_active) == 0:
                 break
         history = {k: np.concatenate(v) for k, v in rows.items()}
@@ -875,7 +911,21 @@ def run_hytm_sharded(
             rt.iteration_cache[cache_key] = iteration
         for _ in range(config.max_iters):
             t_iter = time.monotonic()
-            state, info = iteration(state, *_runtime_args(rt), correction)
+            if faults is None:
+                state, info = iteration(
+                    state, *_runtime_args(rt), correction)
+            else:
+                from repro.kernels.runtime import resolve_use_kernels
+                from repro.resilience.supervisor import guarded_dispatch
+
+                def _attempt(st=state, corr=correction):
+                    return iteration(st, *_runtime_args(rt), corr)
+
+                state, info = guarded_dispatch(
+                    _attempt, site="chunk_dispatch", faults=faults,
+                    policy=retry, obs=obs, mesh=True,
+                    kernels=resolve_use_kernels(config.use_kernels),
+                )
             iters += 1
             # charge the ICI level under the SAME correction this
             # iteration's HBM-level selection ran with (the update below

@@ -141,6 +141,11 @@ def main() -> None:
                     help="record the run through repro.obs and write a "
                          "Chrome trace-event JSON to PATH "
                          "(chrome://tracing / Perfetto)")
+    ap.add_argument("--calibrated", action="store_true",
+                    help="use the calibrated LinkModel profile from the "
+                         "autotune registry if one exists; a corrupt "
+                         "profile warns and falls back to the shipped "
+                         "constants (never fatal)")
     args = ap.parse_args()
 
     if args.selfcheck:
@@ -159,6 +164,10 @@ def main() -> None:
         # built straight from this graph, so symmetrize before serving
         g = g.symmetrize()
     cfg = HyTMConfig(n_partitions=args.partitions)
+    if args.calibrated:
+        from repro.autotune.registry import load_profile_or_default
+
+        cfg = dataclasses.replace(cfg, link=load_profile_or_default())
     buckets = (tuple(int(b) for b in args.lane_buckets.split(","))
                if args.lane_buckets else None)
     rec = None

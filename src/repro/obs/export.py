@@ -34,6 +34,7 @@ from repro.obs.trace import PH_COUNTER, PH_INSTANT, PH_SPAN, TraceRecorder
 CAT_ITERATION = "iteration"
 CAT_RUN = "run"
 CAT_ICI = "ici"
+CAT_FAULTS = "faults"  # resilience plane: injections/retries/degrades
 EV_ITERATION = "iteration"
 EV_RUN = "hytm_run"
 EV_ICI_MERGE = "ici_merge"

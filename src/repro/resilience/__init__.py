@@ -1,0 +1,57 @@
+"""Resilience plane: fault injection, checkpoint/recovery, supervision.
+
+Exactness-under-faults contract: under any seeded
+:class:`~repro.resilience.faults.FaultPlan`, every request that
+completes returns answers bit-identical to the fault-free run for
+MIN-combine programs (tolerance-bounded for SUM), quota and device-byte
+budgets still hold, and recovery cost is bounded and observable (obs
+``faults`` track + ``faults.*`` counters).  With ``faults=None`` every
+hook is zero-overhead — bit-identical to a build without this package.
+Gate: ``benchmarks/chaos_bench.py --selfcheck``.
+"""
+
+from repro.resilience.checkpoint import (
+    CheckpointError,
+    CheckpointHook,
+    RunCheckpoint,
+    calibrator_state,
+    load_reports,
+    restore,
+    restore_calibrator,
+    resume_run,
+    save,
+    save_reports,
+    stitch,
+)
+from repro.resilience.faults import (
+    DeviceOOM,
+    DispatchFault,
+    DispatchTimeout,
+    FaultError,
+    FaultEvent,
+    FaultPlan,
+    FaultSpec,
+    UpdateLost,
+    plan_of,
+)
+from repro.resilience.supervisor import (
+    RetriesExhausted,
+    RetryPolicy,
+    Supervisor,
+    deliver_update,
+    guarded_dispatch,
+    next_rung,
+    record_fault_event,
+    run_supervised,
+)
+
+__all__ = [
+    "CheckpointError", "CheckpointHook", "RunCheckpoint",
+    "calibrator_state", "load_reports", "restore", "restore_calibrator",
+    "resume_run", "save", "save_reports", "stitch",
+    "DeviceOOM", "DispatchFault", "DispatchTimeout", "FaultError",
+    "FaultEvent", "FaultPlan", "FaultSpec", "UpdateLost", "plan_of",
+    "RetriesExhausted", "RetryPolicy", "Supervisor", "deliver_update",
+    "guarded_dispatch", "next_rung", "record_fault_event",
+    "run_supervised",
+]

@@ -64,6 +64,7 @@ class QueueStats:
     admitted: int = 0
     deferred: int = 0          # admit() passes that left the request queued
     rejected: int = 0          # could never fit the device budget
+    shed: int = 0              # withdrawn under sustained pressure
     quota_violations: int = 0  # stays 0 by construction (selfcheck gate)
 
 
@@ -94,6 +95,21 @@ class RequestQueue:
     def submit(self, req: Request) -> None:
         self._pending.append(req)
         self.stats.submitted += 1
+
+    def pending(self) -> list[Request]:
+        """Snapshot of the queued requests (shedding candidates)."""
+        return list(self._pending)
+
+    def withdraw(self, req: Request) -> bool:
+        """Remove a pending request without serving it (load shedding —
+        the supervisor's last degradation rung).  Counted in
+        ``stats.shed``; returns False if ``req`` was not pending."""
+        try:
+            self._pending.remove(req)
+        except ValueError:
+            return False
+        self.stats.shed += 1
+        return True
 
     def peek_program(self) -> VertexProgram | None:
         """Program of the deadline-first pending request (the scheduler

@@ -94,7 +94,7 @@ class ServedResult:
     values: np.ndarray | None
     delta: np.ndarray | None
     iterations: int            # engine iterations this request's lane ran
-    mode: str                  # 'cache' | 'incremental' | 'batched' | 'rejected'
+    mode: str   # 'cache' | 'incremental' | 'batched' | 'rejected' | 'shed'
     submit_vt: float = 0.0
     done_vt: float = 0.0
     submit_wall: float = 0.0
@@ -145,8 +145,12 @@ class LaneScheduler:
 
     def __init__(self, service: "GraphService",
                  buckets: tuple[int, ...] | None = None,
-                 backfill: bool = True):
+                 backfill: bool = True, supervisor=None):
         self.svc = service
+        # optional repro.resilience.Supervisor: retry policy for lane
+        # dispatches, OOM-streak tracking, and tiered load shedding.
+        # None (the default) disables all of it with zero overhead.
+        self.supervisor = supervisor
         # backfill=False degrades to the fixed-batch baseline: a batch
         # runs to full convergence before the queue is consulted again
         # (serve_bench's comparison point — answers are identical either
@@ -208,15 +212,21 @@ class LaneScheduler:
             # spilled (bit-exact round trip — warm_cache.promote), then
             # seed the replay-from-reports state.  The lane then runs the
             # identical residual convergence a solo run_incremental would.
+            # promote() returns None when the entry failed integrity
+            # verification (corrupt spill — evicted) or an injected
+            # device OOM refused the transfer: the degradation rung is
+            # cache-promote -> full recompute, i.e. fall through to the
+            # fresh-seed path below instead of serving garbage.
             entry = svc.cache.promote(key)
-            state = incremental_state(
-                req.program, np.asarray(entry.values),
-                np.asarray(entry.delta),
-                svc._reports_since(entry.version), svc.dcsr, key[1],
-            )
-            svc.stats.n_incremental += 1
-            return _LaneJob(req, "incremental",
-                            (state.values, state.delta, state.frontier))
+            if entry is not None:
+                state = incremental_state(
+                    req.program, np.asarray(entry.values),
+                    np.asarray(entry.delta),
+                    svc._reports_since(entry.version), svc.dcsr, key[1],
+                )
+                svc.stats.n_incremental += 1
+                return _LaneJob(req, "incremental",
+                                (state.values, state.delta, state.frontier))
         values, delta, frontier = req.program.init_state(
             svc.dcsr.n_nodes, key[1])
         svc.stats.n_full += 1
@@ -328,10 +338,34 @@ class LaneScheduler:
             chunk, correction is not None,
         ))
         t_chunk = time.monotonic()
-        with quiet_donation():
-            state, n_done, lane_active, pe_sum, mp_sum = hytm_batched_chunk(
-                state, rt.csr, rt.parts, rt.zc_req, rt.inv_deg,
-                program, cfg, rt.n_hub_partitions, chunk, correction,
+        faults = svc.faults
+        if faults is None:
+            with quiet_donation():
+                state, n_done, lane_active, pe_sum, mp_sum = (
+                    hytm_batched_chunk(
+                        state, rt.csr, rt.parts, rt.zc_req, rt.inv_deg,
+                        program, cfg, rt.n_hub_partitions, chunk,
+                        correction,
+                    ))
+        else:
+            # faults fire BEFORE the dispatch (donated lane state from
+            # the previous chunk intact), so retries are bit-identical
+            from repro.resilience.supervisor import guarded_dispatch
+
+            def _attempt(st=state, corr=correction):
+                with quiet_donation():
+                    return hytm_batched_chunk(
+                        st, rt.csr, rt.parts, rt.zc_req, rt.inv_deg,
+                        program, cfg, rt.n_hub_partitions, chunk, corr,
+                    )
+
+            sup = self.supervisor
+            state, n_done, lane_active, pe_sum, mp_sum = guarded_dispatch(
+                _attempt, site="lane_dispatch", faults=faults,
+                policy=sup.policy if sup is not None else None,
+                obs=svc.obs,
+                stats=sup.counters if sup is not None else None,
+                bucket=bucket,
             )
         correction = self._observe(pe_sum, mp_sum, t_chunk, warm, correction)
         return state, int(n_done), np.asarray(lane_active), correction
@@ -396,6 +430,33 @@ class LaneScheduler:
         svc._record_feedback(int(mp_sum), refreshed)
         return svc._correction
 
+    def _alloc_pressure(self, queue: RequestQueue, slots: int,
+                        results: list, floor: int) -> int:
+        """Fire the ``lane_alloc`` fault site for one batch (or backfill)
+        formation.  An injected OOM halves the slot count for this round
+        — lanes are independent, so a narrower batch defers work without
+        changing any lane's answer.  Sustained OOM streaks trip the
+        supervisor's load-shed rung: pending requests of tenants below
+        the top waiting tier are withdrawn and finished as mode
+        ``"shed"``.  No-op (returns ``slots``) without a fault plan."""
+        svc = self.svc
+        if svc.faults is None:
+            return slots
+        from repro.resilience.supervisor import record_fault_event
+
+        oom = svc.faults.fire("lane_alloc") == "oom"
+        if oom:
+            slots = max(slots // 2, floor)
+            record_fault_event(svc.obs, "injected", site="lane_alloc",
+                               kind="oom")
+        sup = self.supervisor
+        if sup is not None and sup.note_alloc_pressure(oom):
+            for req in sup.shed_candidates(queue.pending()):
+                if queue.withdraw(req):
+                    sup.record_shed(req)
+                    results.append(self._finish(req, None, None, 0, "shed"))
+        return slots
+
     # ------------------------------------------------------------ main loop
     def pump(self, queue: RequestQueue) -> list[ServedResult]:
         """Drain ``queue``: form program-homogeneous bucketed lane
@@ -406,10 +467,15 @@ class LaneScheduler:
         svc = self.svc
         obs = svc.obs
         results: list[ServedResult] = []
+        sup = self.supervisor
         while queue:
-            program = queue.peek_program()
             cap = self._budget_bucket_cap()
             max_slots = self.buckets[-1] if cap is None else cap
+            max_slots = self._alloc_pressure(queue, max_slots, results,
+                                             floor=1)
+            if not queue:
+                break  # everything pending was shed
+            program = queue.peek_program()
             pending_before = len(queue)
             jobs = self._admit_jobs(queue, program, max(max_slots, 0),
                                     results)
@@ -498,6 +564,13 @@ class LaneScheduler:
                 # freed slots cannot run anything else) — deadline order
                 # applies within the program here, and across programs
                 # at the next batch formation
+                if self.backfill and queue:
+                    # backfill is a batch formation too: the fault plane
+                    # can refuse the refill allocation (floor 0 — the
+                    # outer loop re-forms batches, so admitting nothing
+                    # here cannot deadlock)
+                    freed = self._alloc_pressure(queue, freed, results,
+                                                 floor=0)
                 if self.backfill and queue:
                     refill = self._admit_jobs(queue, program, freed, results)
                     slots = [i for i, j in enumerate(lane_jobs) if j is None]

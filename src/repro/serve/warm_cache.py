@@ -29,6 +29,7 @@ report.
 
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field
 from typing import Iterator
 
@@ -37,6 +38,15 @@ import jax.numpy as jnp
 import numpy as np
 
 DEVICE, HOST = "device", "host"
+
+
+def state_checksum(values, delta) -> int:
+    """crc32 over the (values, Δ) byte images — computed at spill time,
+    re-verified at promote time, so a host-tier entry corrupted in RAM
+    (or by an injected ``host_spill`` fault) is detected instead of
+    served as a warm-start seed."""
+    crc = zlib.crc32(np.ascontiguousarray(values).tobytes())
+    return zlib.crc32(np.ascontiguousarray(delta).tobytes(), crc)
 
 
 @dataclass(frozen=True)
@@ -63,12 +73,16 @@ class CacheStats:
     spills: int = 0        # device -> host demotions
     promotions: int = 0    # host -> device
     evictions: int = 0     # dropped from both tiers (unreplayable / dead)
+    corrupt: int = 0       # host entries failing checksum on promote
+    promote_failures: int = 0  # promotes refused (corrupt or device OOM)
 
     def as_dict(self) -> dict:
         return {
             "device_hits": self.device_hits, "host_hits": self.host_hits,
             "misses": self.misses, "spills": self.spills,
             "promotions": self.promotions, "evictions": self.evictions,
+            "corrupt": self.corrupt,
+            "promote_failures": self.promote_failures,
         }
 
 
@@ -80,6 +94,7 @@ class WarmEntry:
     tier: str = DEVICE
     nbytes: int = 0
     lru: int = 0
+    checksum: int | None = None  # set at spill, verified at promote
 
 
 class WarmCache:
@@ -87,7 +102,8 @@ class WarmCache:
     keys so ``GraphService`` bookkeeping (floor computation, staleness
     eviction) reads it exactly like the flat dict it replaces."""
 
-    def __init__(self, policy: TierPolicy | None = None, obs=None):
+    def __init__(self, policy: TierPolicy | None = None, obs=None,
+                 faults=None):
         self.policy = policy or TierPolicy()
         self._entries: dict = {}
         self._clock = 0
@@ -96,6 +112,9 @@ class WarmCache:
         # promote / evict) and per-tier hits emit events + counters on the
         # "cache" track; obs=None records nothing
         self.obs = obs
+        # optional repro.resilience.FaultPlan: injects host_spill
+        # corruption and cache_promote OOM; faults=None is zero-overhead
+        self.faults = faults
 
     def _obs_event(self, name: str, key=None, **args) -> None:
         if self.obs is None:
@@ -149,6 +168,25 @@ class WarmCache:
             self._touch(entry)
         return entry
 
+    def check(self, key) -> WarmEntry | None:
+        """:meth:`peek` plus integrity verification: a host-tier entry
+        whose bytes no longer match its spill-time checksum is counted
+        (``stats.corrupt``), evicted, and ``None`` returned — the caller
+        recomputes instead of serving damaged state.  The query front
+        end uses this for version-current hits, which are served
+        straight from the entry without going through :meth:`promote`."""
+        entry = self.peek(key)
+        if entry is None:
+            return None
+        if (entry.tier == HOST and entry.checksum is not None
+                and state_checksum(entry.values, entry.delta)
+                != entry.checksum):
+            self.stats.corrupt += 1
+            self._obs_event("corrupt", key, nbytes=entry.nbytes)
+            self.evict(key)
+            return None
+        return entry
+
     def get(self, key) -> WarmEntry | None:
         """Look up without tier movement (no promotion): returns the
         entry whatever its tier, bumping LRU and per-tier hit/miss
@@ -198,14 +236,34 @@ class WarmCache:
         spill -> promote -> replay is bit-identical to never-evicted for
         MIN programs and tolerance-bounded for SUM programs
         (property-tested in ``tests/test_serve.py``).
+
+        Integrity: a host entry whose bytes no longer match the checksum
+        taken at spill time is *corrupt* — it is counted
+        (``stats.corrupt``), evicted, and ``None`` is returned so the
+        caller falls through to a full recompute instead of warm-starting
+        from garbage.  An injected ``cache_promote`` OOM likewise returns
+        ``None`` (entry stays in the host tier, recompute path taken).
         """
         entry = self._entries.get(key)
         if entry is None:
             return None
         if entry.tier == HOST:
+            if entry.checksum is not None and state_checksum(
+                    entry.values, entry.delta) != entry.checksum:
+                self.stats.corrupt += 1
+                self.stats.promote_failures += 1
+                self._obs_event("corrupt", key, nbytes=entry.nbytes)
+                self.evict(key)
+                return None
+            if self.faults is not None and self.faults.fire(
+                    "cache_promote") == "oom":
+                self.stats.promote_failures += 1
+                self._obs_event("promote_oom", key, nbytes=entry.nbytes)
+                return None
             entry.values = jax.device_put(jnp.asarray(entry.values))
             entry.delta = jax.device_put(jnp.asarray(entry.delta))
             entry.tier = DEVICE
+            entry.checksum = None
             self.stats.promotions += 1
             self._obs_event("promote", key, nbytes=entry.nbytes)
             self._touch(entry)
@@ -217,6 +275,12 @@ class WarmCache:
         entry.values = np.asarray(entry.values)
         entry.delta = np.asarray(entry.delta)
         entry.tier = HOST
+        entry.checksum = state_checksum(entry.values, entry.delta)
+        if self.faults is not None and self.faults.fire(
+                "host_spill") == "corrupt":
+            # the spilled bytes land damaged; the checksum (taken from
+            # the intact state) will catch this at promote time
+            entry.values = self.faults.corrupt(entry.values)
         self.stats.spills += 1
         self._obs_event("spill", key, nbytes=entry.nbytes)
 

@@ -16,6 +16,7 @@ from repro.stream.delta_csr import (
     OP_REWEIGHT,
     DeltaCSR,
     EdgeBatch,
+    InvalidBatchError,
     UpdateReport,
     random_batch,
 )
@@ -24,7 +25,8 @@ from repro.stream.service import GraphService, QueryResult
 
 __all__ = [
     "OP_DELETE", "OP_INSERT", "OP_REWEIGHT",
-    "DeltaCSR", "EdgeBatch", "UpdateReport", "random_batch",
+    "DeltaCSR", "EdgeBatch", "InvalidBatchError", "UpdateReport",
+    "random_batch",
     "incremental_state", "run_incremental",
     "GraphService", "QueryResult",
 ]

@@ -50,6 +50,17 @@ from repro.graph.csr import CSRGraph, DeviceCSR, csr_from_edges
 OP_INSERT, OP_DELETE, OP_REWEIGHT = 0, 1, 2
 
 
+class InvalidBatchError(ValueError):
+    """An ``EdgeBatch`` failed validation; the whole batch was rejected
+    atomically — no host-log or device-buffer mutation happened and
+    ``version`` did not move.  ``index`` is the offending entry."""
+
+    def __init__(self, msg: str, index: int | None = None):
+        super().__init__(msg if index is None
+                         else f"batch entry {index}: {msg}")
+        self.index = index
+
+
 @dataclass
 class EdgeBatch:
     """One update batch: parallel arrays of (op, src, dst, weight).
@@ -163,6 +174,10 @@ class DeltaCSR:
         self.version = 0
         self.layout_version = 0
         self.dirty: set[int] = set()  # dirty partitions since last merge
+        # bounded batch_id -> UpdateReport memory for idempotent
+        # redelivery (exactly-once apply under at-least-once delivery)
+        self._applied: dict = {}
+        self.dedup_window = 64
         self._inv_deg_cache: dict[bool, jnp.ndarray] = {}
         # shared across the Runtime views runtime_for builds, so the
         # chunked driver's per-(program, config, shapes) eval_shape
@@ -290,7 +305,64 @@ class DeltaCSR:
         return dsts, ws
 
     # ---------------------------------------------------------------- updates
-    def apply(self, batch: EdgeBatch) -> UpdateReport:
+    def validate_batch(self, batch: EdgeBatch) -> None:
+        """Reject a malformed batch *before any mutation*: unknown ops,
+        negative/out-of-range endpoints, non-finite weights on
+        INSERT/REWEIGHT, and delete-of-absent-edge (checked against the
+        live multiset with the batch's own earlier entries applied, so
+        insert-then-delete within one batch is legal).  Raises
+        :class:`InvalidBatchError`; on return ``apply`` is guaranteed to
+        succeed without partial effects."""
+        n = self.n_nodes
+        if len(batch) == 0:
+            return
+        bad = np.nonzero(~np.isin(batch.op, (OP_INSERT, OP_DELETE,
+                                             OP_REWEIGHT)))[0]
+        if bad.size:
+            i = int(bad[0])
+            raise InvalidBatchError(f"unknown op {int(batch.op[i])}", i)
+        bad = np.nonzero((batch.src < 0) | (batch.src >= n)
+                         | (batch.dst < 0) | (batch.dst >= n))[0]
+        if bad.size:
+            i = int(bad[0])
+            raise InvalidBatchError(
+                f"edge endpoint out of range: ({int(batch.src[i])}, "
+                f"{int(batch.dst[i])}) with n_nodes={n} (vertex set is "
+                "fixed)", i)
+        writes = (batch.op == OP_INSERT) | (batch.op == OP_REWEIGHT)
+        bad = np.nonzero(writes & ~np.isfinite(batch.weight))[0]
+        if bad.size:
+            i = int(bad[0])
+            raise InvalidBatchError(
+                f"non-finite weight {float(batch.weight[i])}", i)
+        # delete-of-absent: walk the batch against lazily-seeded live
+        # (u, v) multiset counts — mirrors apply's multigraph semantics
+        # (DELETE matches one live parallel copy; REWEIGHT of an absent
+        # edge degenerates to an insert)
+        counts: dict[tuple[int, int], int] = {}
+        seeded: set[int] = set()
+        for i in range(len(batch)):
+            u, v = int(batch.src[i]), int(batch.dst[i])
+            if u not in seeded:
+                seeded.add(u)
+                dsts, _ = self._out_edges(u)
+                for d in dsts:
+                    key = (u, int(d))
+                    counts[key] = counts.get(key, 0) + 1
+            o = int(batch.op[i])
+            if o == OP_INSERT:
+                counts[(u, v)] = counts.get((u, v), 0) + 1
+            elif o == OP_DELETE:
+                c = counts.get((u, v), 0)
+                if c <= 0:
+                    raise InvalidBatchError(
+                        f"delete of absent edge ({u}, {v})", i)
+                counts[(u, v)] = c - 1
+            elif counts.get((u, v), 0) == 0:
+                counts[(u, v)] = 1  # reweight-of-absent inserts
+
+    def apply(self, batch: EdgeBatch, batch_id=None,
+              faults=None) -> UpdateReport:
         """Apply one batch; patch device buffers (or merge-compact on
         overflow); bump ``version``; return the report.
 
@@ -303,13 +375,29 @@ class DeltaCSR:
         to the warm-started single-device ``async_sweep=False`` run for
         min-combine programs (values, iterations, transfer accounting,
         engine picks) and tolerance-bounded for sum-combine — the
-        contract ``tests/test_stream_sharded.py`` enforces."""
-        n = self.n_nodes
-        if len(batch) and (
-            batch.src.min() < 0 or batch.src.max() >= n
-            or batch.dst.min() < 0 or batch.dst.max() >= n
-        ):
-            raise ValueError("edge endpoints out of range (vertex set is fixed)")
+        contract ``tests/test_stream_sharded.py`` enforces.
+
+        Atomicity: :meth:`validate_batch` runs first, so a batch that
+        would fail (bad op, out-of-range endpoint, NaN weight,
+        delete-of-absent) raises :class:`InvalidBatchError` with **zero
+        side effects** — no host-log entry, no device patch, no version
+        bump.
+
+        ``batch_id`` (optional) makes delivery idempotent: an id seen
+        before returns the original :class:`UpdateReport` without
+        re-applying (redelivered batches must not double-apply — the
+        ``resilience.supervisor.deliver_update`` contract).  ``faults``
+        injects delivery drops (site ``update_delivery``): a dropped
+        batch raises ``UpdateLost`` before validation, exactly as if it
+        never arrived."""
+        if batch_id is not None and batch_id in self._applied:
+            return self._applied[batch_id]
+        if faults is not None and faults.fire("update_delivery") == "drop":
+            from repro.resilience.faults import UpdateLost
+
+            raise UpdateLost("update_delivery", 0,
+                             f"injected drop of batch {batch_id!r}")
+        self.validate_batch(batch)
 
         affected = np.unique(batch.src)
         pre_adj = {int(u): self._out_edges(int(u)) for u in affected}
@@ -370,7 +458,7 @@ class DeltaCSR:
         def _cols(rec, j, dt):
             return np.array([r[j] for r in rec], dtype=dt)
 
-        return UpdateReport(
+        report = UpdateReport(
             version=self.version,
             dirty_partitions=np.array(sorted(dirty), np.int64),
             merged=merged,
@@ -383,6 +471,11 @@ class DeltaCSR:
             pre_adj=pre_adj,
             post_adj=post_adj,
         )
+        if batch_id is not None:
+            self._applied[batch_id] = report
+            while len(self._applied) > self.dedup_window:
+                self._applied.pop(next(iter(self._applied)))
+        return report
 
     def _insert(self, u, v, wt, p, touched, extra):
         B = self.block_size
@@ -411,7 +504,9 @@ class DeltaCSR:
                     extra[p].pop(j)
                     self.out_deg[u] -= 1
                     return float(ew)
-            return None  # deleting a non-existent edge is a no-op
+            # unreachable after validate_batch (delete-of-absent is
+            # rejected up front); kept as a defensive no-op
+            return None
         old = float(self._w[slot])
         last = p * self.block_size + int(self.counts[p]) - 1
         # swap-remove keeps the live prefix dense (edge order is free)

@@ -187,6 +187,8 @@ def run_incremental(
     calibrator=None,
     mesh=None,
     obs=None,
+    faults=None,
+    retry=None,
 ) -> HyTMResult:
     """Converge the post-update graph from the warm (values, Δ) state of a
     previous converged run, seeding only update-affected vertices.
@@ -225,10 +227,10 @@ def run_incremental(
         return run_hytm(
             None, program, source=source, config=config,
             runtime=runtime, mesh=runtime.mesh, initial_state=state,
-            calibrator=calibrator, obs=obs,
+            calibrator=calibrator, obs=obs, faults=faults, retry=retry,
         )
     return run_hytm(
         None, program, source=source, config=config,
         runtime=dcsr.runtime_for(program), initial_state=state,
-        calibrator=calibrator, obs=obs,
+        calibrator=calibrator, obs=obs, faults=faults, retry=retry,
     )

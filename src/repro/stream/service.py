@@ -101,6 +101,8 @@ class GraphService:
         device_budget_bytes: int | None = None,
         lane_buckets: Sequence[int] | None = None,
         obs=None,
+        faults=None,
+        supervisor=None,
         **delta_kw,
     ):
         # optional repro.obs.TraceRecorder threaded through every consumer
@@ -109,6 +111,14 @@ class GraphService:
         # run_hytm/run_incremental dispatches.  obs=None (default) records
         # nothing anywhere — the untraced service is bit-identical.
         self.obs = obs
+        # optional repro.resilience hooks, threaded the same way: a
+        # FaultPlan reaches the warm cache (spill corruption, promote
+        # OOM), the scheduler (lane alloc/dispatch), and the engine
+        # dispatches; a Supervisor supplies the retry policy and the
+        # load-shed rung.  Both None (default) = zero overhead, the
+        # exact PR-8 code path.
+        self.faults = faults
+        self.supervisor = supervisor
         self.config = config if config is not None else HyTMConfig()
         self.dcsr = DeltaCSR(graph, self.config, **delta_kw)
         # With config.mesh_axis set, the service serves *from the mesh*:
@@ -142,7 +152,7 @@ class GraphService:
         self.cache = WarmCache(TierPolicy(
             device_budget_bytes=device_budget_bytes,
             max_reports=max_reports,
-        ), obs=obs)
+        ), obs=obs, faults=faults)
         self._cache = self.cache  # dict-like; historical alias
         self._reports: list[UpdateReport] = []
         self.stats = ServiceStats()
@@ -160,17 +170,30 @@ class GraphService:
         # (degenerate single-tenant mode here; multi-tenant closed-loop
         # serving drives LaneScheduler.pump directly — serve_bench)
         self.scheduler = LaneScheduler(
-            self, buckets=tuple(lane_buckets) if lane_buckets else None)
+            self, buckets=tuple(lane_buckets) if lane_buckets else None,
+            supervisor=supervisor)
 
     # ----------------------------------------------------------------- update
     @property
     def version(self) -> int:
         return self.dcsr.version
 
-    def update(self, batch: EdgeBatch) -> UpdateReport:
+    def update(self, batch: EdgeBatch, batch_id=None,
+               faults=None) -> UpdateReport:
         """Apply an edge-update batch.  All cached results become stale for
-        direct hits (version bump) and turn into warm states."""
-        rep = self.dcsr.apply(batch)
+        direct hits (version bump) and turn into warm states.
+
+        ``batch_id`` opts into exactly-once delivery: a redelivered id
+        returns the original report without re-applying (no version
+        bump, no duplicate report in the log) — the dedup contract
+        ``resilience.supervisor.deliver_update`` relies on.  ``faults``
+        forwards to ``DeltaCSR.apply`` (injected delivery drops)."""
+        v0 = self.dcsr.version
+        rep = self.dcsr.apply(batch, batch_id=batch_id, faults=faults)
+        if self.dcsr.version == v0:
+            # deduplicated redelivery: the container returned the cached
+            # report without applying — keep the log and stats exact
+            return rep
         self._reports.append(rep)
         self._prune_reports()
         self.stats.n_updates += 1
@@ -233,7 +256,7 @@ class GraphService:
         results: dict[int | None, QueryResult] = {}
         fresh: list[int | None] = []
         for s in dict.fromkeys(keyed):  # dedupe, keep order
-            entry = self.cache.peek((program, s))
+            entry = self.cache.check((program, s))
             if entry is not None and entry.version == self.version:
                 results[s] = QueryResult(
                     source=s, values=np.asarray(entry.values), iterations=0,
@@ -280,13 +303,20 @@ class GraphService:
     def _query_incremental(self, program, s) -> QueryResult:
         # spilled warm states come back through the device tier first
         # (bit-exact round trip — warm_cache.promote), then replay the
-        # reports applied since their version
+        # reports applied since their version.  promote() returns None
+        # when the entry failed its integrity checksum (corrupt spill —
+        # detected, counted, evicted) or an injected promote OOM refused
+        # the transfer: degrade to the full-recompute path rather than
+        # warm-start from garbage.
         entry = self.cache.promote((program, s))
+        if entry is None:
+            return self._query_fresh(program, [s])[s]
         res = run_incremental(
             self.dcsr, program, self._reports_since(entry.version),
             np.asarray(entry.values), np.asarray(entry.delta),
             source=s, config=self.config,
             calibrator=self._calibrator, mesh=self.mesh, obs=self.obs,
+            faults=self.faults, retry=self._retry_policy(),
         )
         self._absorb_run(res)
         self._store(program, s, res.values, res.delta)
@@ -296,6 +326,9 @@ class GraphService:
             source=s, values=res.values, iterations=res.iterations,
             cache_hit=False, mode="incremental",
         )
+
+    def _retry_policy(self):
+        return self.supervisor.policy if self.supervisor is not None else None
 
     def _runtime_for(self, program):
         """The container view matching the configured execution path:
@@ -315,6 +348,7 @@ class GraphService:
                     None, program, source=s, config=self.config,
                     runtime=self._runtime_for(program), mesh=self.mesh,
                     calibrator=self._calibrator, obs=self.obs,
+                    faults=self.faults, retry=self._retry_policy(),
                 )
                 self._absorb_run(res)
                 self._store(program, s, res.values, res.delta)

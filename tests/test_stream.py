@@ -7,6 +7,7 @@ update batches."""
 import dataclasses
 
 import numpy as np
+import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
@@ -16,6 +17,7 @@ from repro.graph.generators import rmat_graph
 from repro.stream import (
     DeltaCSR,
     EdgeBatch,
+    InvalidBatchError,
     random_batch,
     run_incremental,
 )
@@ -79,9 +81,11 @@ def test_delta_csr_patch_and_versioning():
         1 for t in ref if t[0] == 5
     )
 
-    # deleting a non-existent edge is a no-op
-    rep2 = dc.apply(EdgeBatch.deletes([s0], [d0]))
-    assert dc.version == 2 and len(rep2.del_src) == 0
+    # deleting a non-existent edge is rejected atomically: typed error,
+    # no version bump, edge multiset untouched
+    with pytest.raises(InvalidBatchError):
+        dc.apply(EdgeBatch.deletes([s0], [d0]))
+    assert dc.version == 1
     assert _edge_multiset(dc) == sorted(ref)
 
 
