@@ -76,18 +76,62 @@ _DEVICE_SWEEP_SCRIPT = """
     print(f"RESULT,{{n_dev}},{{wall * 1e6:.1f}},{{res.modeled_seconds * 1e3:.4f}},"
           f"{{res.iterations}},{{res.total_transfer_bytes:.0f}},"
           f"{{res.modeled_ici_seconds * 1e3:.4f}},{{res.total_ici_bytes:.0f}}")
+
+    if n_dev > 1:
+        # owner-sharded leg: per-device vertex-state residency drops to
+        # the owned slice (+ halo) while the answer stays bit-identical
+        import dataclasses
+        import numpy as np
+        from repro.core.cost_model import vertex_state_bytes
+        from repro.dist.graph_shard import _owner_place_state
+
+        cfg_o = dataclasses.replace(cfg, vertex_sharding="owner")
+        rt_o = build_sharded_runtime(g, cfg_o, rt.mesh)
+        run_hytm(g, SSSP, source=0, config=cfg_o, runtime=rt_o)  # warm
+        res_o = run_hytm(g, SSSP, source=0, config=cfg_o, runtime=rt_o)
+        np.testing.assert_array_equal(res_o.values, res.values)
+        assert res_o.iterations == res.iterations
+        assert res_o.total_transfer_bytes == res.total_transfer_bytes
+        # measured bytes: what each device actually holds for one placed
+        # (values, delta, frontier) triple — peak = the max over devices
+        st = _owner_place_state(rt_o, SSSP, *SSSP.init_state(g.n_nodes, 0))
+        per_dev = {{}}
+        for arr in (st.values, st.delta, st.frontier):
+            for sh in arr.addressable_shards:
+                d = sh.device.id
+                per_dev[d] = per_dev.get(d, 0) + sh.data.nbytes
+        measured = max(per_dev.values())
+        modeled = vertex_state_bytes(
+            g.n_nodes, n_dev, "owner", halo=rt_o.halo.max_halo)
+        repl = vertex_state_bytes(g.n_nodes)
+        print(f"MEM,{{n_dev}},{{measured}},{{modeled}},{{repl}},"
+              f"{{rt_o.halo.max_halo}},{{rt_o.halo.halo_total}}")
 """
 
 
-def run_devices(device_counts=(1, 2, 4, 8), n_nodes=5_000, n_edges=160_000,
-                n_partitions=32, fast: bool = False):
+def run_devices(device_counts=None, n_nodes=5_000, n_edges=160_000,
+                n_partitions=32, fast: bool = False,
+                selfcheck: bool = False):
     """Scale-out sweep: one subprocess per forced-host device count, the
     sharded sweep on >1 device (the 1-device row is the single-device
     reference path).  Emits wall time + the modeled transfer metrics,
     which must be device-count-invariant (the model counts bytes, not
-    devices) — a cheap end-to-end consistency check on the sharding."""
+    devices) — a cheap end-to-end consistency check on the sharding.
+
+    Multi-device rows also run the owner-sharded leg
+    (``vertex_sharding="owner"``): the subprocess asserts bit-identity
+    with the replicated run and reports per-device peak vertex-state
+    bytes — measured from the placed arrays' addressable shards — plus
+    the modeled owned-slice + halo bytes
+    (``cost_model.vertex_state_bytes``).  ``selfcheck`` gates the
+    ~``n/D`` scaling: each device may hold at most its padded owned
+    slice, a D-fold drop from the replicated ``9n``-byte ceiling."""
+    if device_counts is None:
+        # --fast trims only the *default* sweep; an explicit device list
+        # (e.g. the CI 16-device owner-sharding gate) runs as given,
+        # still on the shrunken fast graph
+        device_counts = (1, 2) if fast else (1, 2, 4, 8)
     if fast:
-        device_counts = tuple(d for d in device_counts if d <= 2) or (1, 2)
         n_nodes, n_edges = min(n_nodes, 2_000), min(n_edges, 40_000)
     from repro.launch.mesh import forced_host_device_env
 
@@ -97,6 +141,7 @@ def run_devices(device_counts=(1, 2, 4, 8), n_nodes=5_000, n_edges=160_000,
         )
     )
     rows = {}
+    mem = {}
     for n_dev in device_counts:
         out = subprocess.run(
             [sys.executable, "-c", script],
@@ -117,9 +162,80 @@ def run_devices(device_counts=(1, 2, 4, 8), n_nodes=5_000, n_edges=160_000,
             f"modeled_ms={modeled_ms} iters={iters} bytes={bytes_} "
             f"ici_ms={ici_ms} ici_bytes={ici_bytes}",
         )
+        for mline in out.stdout.splitlines():
+            if not mline.startswith("MEM,"):
+                continue
+            _, _, measured, modeled, repl, max_halo, halo_total = \
+                mline.split(",")
+            mem[n_dev] = (int(measured), int(modeled), int(repl),
+                          int(max_halo), int(halo_total))
+            emit(
+                f"fig9/devices_{n_dev}/owner_state_bytes", 0.0,
+                f"measured={measured} modeled={modeled} replicated={repl} "
+                f"max_halo={max_halo} halo_total={halo_total}",
+            )
+    if selfcheck:
+        _selfcheck_owner_memory(mem, n_nodes, device_counts)
     return rows
 
 
+def _selfcheck_owner_memory(mem: dict, n_nodes: int,
+                            device_counts) -> None:
+    """The owner-sharding memory gate: every multi-device row must have
+    produced its MEM record (the subprocess already asserted
+    bit-identity before printing it), measured per-device state bytes
+    must equal the padded owned slice — a ~D-fold drop from the
+    replicated 9n ceiling — and the modeled total must be owned slice +
+    halo, with the halo a strict subset of the non-owned vertices."""
+    from repro.core.cost_model import STATE_BYTES_PER_VERTEX
+
+    expected = [d for d in device_counts if d > 1]
+    missing = [d for d in expected if d not in mem]
+    if missing:
+        raise AssertionError(
+            f"owner-sharding selfcheck: no MEM record for device counts "
+            f"{missing} — the owner leg did not run")
+    for n_dev, (measured, modeled, repl, max_halo, halo_total) in mem.items():
+        n_loc = -(-n_nodes // n_dev)
+        owned = STATE_BYTES_PER_VERTEX * n_loc
+        if measured != owned:
+            raise AssertionError(
+                f"devices={n_dev}: measured per-device state bytes "
+                f"{measured} != owned-slice bytes {owned} (~n/D scaling "
+                f"violated)")
+        if measured * n_dev > repl + STATE_BYTES_PER_VERTEX * n_dev:
+            raise AssertionError(
+                f"devices={n_dev}: owner layout total {measured * n_dev} "
+                f"exceeds replicated-per-device {repl} + padding")
+        if modeled != owned + STATE_BYTES_PER_VERTEX * max_halo:
+            raise AssertionError(
+                f"devices={n_dev}: modeled bytes {modeled} != owned "
+                f"{owned} + halo {STATE_BYTES_PER_VERTEX * max_halo}")
+        if not 0 <= max_halo <= n_loc * n_dev - n_loc:
+            raise AssertionError(
+                f"devices={n_dev}: max_halo {max_halo} outside "
+                f"[0, n_pad - n_loc]")
+    print(f"OK fig9-devices owner-memory selfcheck: "
+          f"{sorted(mem)} device counts, per-device state bytes = "
+          f"9*ceil(n/D) each")
+
+
 if __name__ == "__main__":
-    run()
-    run_devices()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--selfcheck", action="store_true",
+                    help="gate the owner-sharded ~n/D per-device "
+                         "state-byte scaling (runs the device sweep only)")
+    ap.add_argument("--devices", type=int, nargs="*", default=None,
+                    help="device counts for the scale-out sweep")
+    args = ap.parse_args()
+    kw = {}
+    if args.devices:
+        kw["device_counts"] = tuple(args.devices)
+    if args.selfcheck:
+        run_devices(fast=args.fast, selfcheck=True, **kw)
+    else:
+        run(fast=args.fast)
+        run_devices(fast=args.fast, **kw)

@@ -73,7 +73,10 @@ def main() -> None:
         "fig7": lambda: fig7_execution_path.run(**kw),
         "fig8": lambda: fig8_gains.run(**kw),
         "fig9": lambda: fig9_scaling.run(fast=args.fast),
-        "fig9-devices": lambda: fig9_scaling.run_devices(fast=args.fast),
+        # selfcheck always on: the owner-sharding ~n/D per-device
+        # state-byte gate rides every fig9-devices run
+        "fig9-devices": lambda: fig9_scaling.run_devices(
+            fast=args.fast, selfcheck=True),
         "kernels": lambda: kernels.run(fast=args.fast),
         "kernels-roofline": lambda: roofline.run_engines(fast=args.fast),
         "roofline": lambda: roofline.run(fast=args.fast),

@@ -235,9 +235,37 @@ KEY_MERGED_ENTRIES = "merged_entries"
 KEY_ICI_BYTES = "ici_bytes"
 KEY_ICI_TIME = "ici_time"
 KEY_ICI_ENGINE = "ici_engine"
+# Owner-sharded state layout (HyTMConfig.vertex_sharding="owner"):
+# per-device halo size (boundary entries a compacted exchange would ship)
+# and per-device vertex-state bytes (vertex_state_bytes below).
+KEY_HALO_ENTRIES = "halo_entries"
+KEY_STATE_BYTES_PER_DEVICE = "state_bytes_per_device"
 # ServiceStats.extra side-channel names (stream.service / serve.scheduler).
 KEY_WARM_CACHE = "warm_cache"
 KEY_ENGINE_CORRECTIONS = "engine_corrections"
+
+# f32 values + f32 delta + bool frontier, each one entry per vertex.
+STATE_BYTES_PER_VERTEX = 4 + 4 + 1
+
+
+def vertex_state_bytes(
+    n_nodes: int,
+    n_devices: int = 1,
+    vertex_sharding: str = "replicated",
+    halo: int = 0,
+) -> int:
+    """Per-device bytes the (values, Δ, frontier) triple pins.
+
+    ``replicated`` (the PR-9 layout): every device holds the full
+    ``(n,)`` triple — the memory ceiling the owner layout lifts.
+    ``owner``: each device holds its ``ceil(n/D)`` owned slice plus a
+    ``halo`` of boundary entries referenced by its local edge blocks, so
+    state scales ~n/D with the mesh (fig9_scaling's --selfcheck gate).
+    """
+    if vertex_sharding == "owner":
+        n_loc = -(-n_nodes // max(n_devices, 1))
+        return STATE_BYTES_PER_VERTEX * (n_loc + halo)
+    return STATE_BYTES_PER_VERTEX * n_nodes
 
 
 # --------------------------------------------------------------------------

@@ -140,6 +140,18 @@ class HyTMConfig:
     # across devices, so it reproduces the single-device
     # ``async_sweep=False`` dataflow exactly.
     mesh_axis: str | None = None
+    # Vertex-state layout of the sharded path (read only when mesh_axis
+    # is set).  "replicated" (default): every device holds the full (n,)
+    # values/Δ/frontier triple — byte-identical to the pre-owner-sharding
+    # behavior.  "owner": each device owns the ceil(n/D) vertices of its
+    # partition rows and holds only that slice (plus the boundary halo
+    # its local edge blocks reference), exchanging boundary contributions
+    # per iteration — per-device vertex-state bytes drop ~D-fold
+    # (cost_model.vertex_state_bytes) while results stay bit-identical to
+    # the single-device ``async_sweep=False`` oracle for min-combine
+    # programs and tolerance-bounded for sum-combine
+    # (dist.graph_shard).
+    vertex_sharding: str = "replicated"
 
 
 @jax.tree_util.register_dataclass
@@ -248,7 +260,16 @@ def _sweep(
 
         out = relax_with_engine(eng, block, operand, n, program, use_kernels)
 
-        if program.combine == MIN:
+        if program.peel_k is not None:
+            # peeling (k-core): the aggregate is each destination's count
+            # of newly-removed in-neighbors — its remaining degree drops
+            # by that much.  Δ (the removed flag) is not consumed here;
+            # removal updates happen once per iteration in
+            # ``_iteration_impl``.  Counts are additive, so the async and
+            # sync sweeps are identical.
+            values = values - out.agg
+            activated = activated | out.touched
+        elif program.combine == MIN:
             improved = out.touched & (out.agg < values)
             values = jnp.where(improved, out.agg, values)
             activated = activated | improved
@@ -348,7 +369,11 @@ def _iteration_impl(
 
     # (6) recompute-once: loaded priority partitions, zero extra transfer.
     engines2 = jnp.where(sched.second_pass, plan.engines, NONE)
-    if program.combine == MIN:
+    if program.peel_k is not None:
+        # peeling re-relaxation would re-subtract the same removal counts
+        # (double-count); an empty frontier makes pass 2 a harmless no-op
+        frontier2 = jnp.zeros_like(frontier)
+    elif program.combine == MIN:
         frontier2 = frontier | activated
     else:
         # |Δ|: pending deltas are non-negative on a cold start, but the
@@ -362,11 +387,24 @@ def _iteration_impl(
     activated = activated | activated2
 
     # next frontier
-    if program.combine == MIN:
-        next_frontier = activated
+    if program.peel_k is not None:
+        # removal update: alive vertices whose remaining degree fell
+        # below k are removed now and become the next round's frontier
+        alive = state2.delta < 0.5
+        newly = alive & (state2.values < program.peel_k)
+        next_frontier = newly
+        new_state = HyTMState(
+            values=state2.values,
+            delta=state2.delta + newly.astype(jnp.float32),
+            frontier=next_frontier,
+        )
     else:
-        next_frontier = jnp.abs(state2.delta) > program.tolerance
-    new_state = HyTMState(values=state2.values, delta=state2.delta, frontier=next_frontier)
+        if program.combine == MIN:
+            next_frontier = activated
+        else:
+            next_frontier = jnp.abs(state2.delta) > program.tolerance
+        new_state = HyTMState(values=state2.values, delta=state2.delta,
+                              frontier=next_frontier)
 
     per_engine_time, mispredictions = selection_diagnostics(
         plan.engines, plan.transfer_time, stats, plan.costs, correction,
@@ -681,6 +719,16 @@ def run_hytm(
     ``config.mesh_axis`` set it must be a ``graph_shard.ShardedRuntime``
     (reuse also keeps the compiled sharded sweep warm).
 
+    ``config.vertex_sharding`` selects the sharded path's vertex-state
+    layout: ``"replicated"`` (default, full ``(n,)`` triple per device,
+    byte-identical to previous behavior) or ``"owner"`` (each device
+    holds only its ``ceil(n/D)`` owned slice; boundary contributions are
+    exchanged per iteration, charged on the ICI track via the halo-aware
+    cost model).  Results, iteration counts, transfer bytes, and engine
+    picks are identical between the two layouts — bit-identical for
+    min-combine programs, tolerance-bounded for sum-combine.  Ignored on
+    the single-device path.
+
     ``initial_state`` warm-starts the convergence loop from an arbitrary
     (values, Δ, frontier) triple instead of ``program.init_state`` — the
     entry point of the incremental path (repro.stream.incremental).  With
@@ -742,8 +790,18 @@ def run_hytm(
         weighted_norm=program.use_delta and program.weighted,
     )
     if initial_state is None:
-        values, delta, frontier = program.init_state(rt.csr.n_nodes, source)
-        state = HyTMState(values=values, delta=delta, frontier=frontier)
+        if program.peel_k is not None:
+            # peeling seeds from the runtime's (symmetrized) out-degrees,
+            # which init_state cannot see: values = remaining degree,
+            # Δ = removed flag, frontier = the initially-removed set
+            deg = rt.csr.out_degree.astype(jnp.float32)
+            removed = deg < program.peel_k
+            state = HyTMState(values=deg, delta=removed.astype(jnp.float32),
+                              frontier=removed)
+        else:
+            values, delta, frontier = program.init_state(
+                rt.csr.n_nodes, source)
+            state = HyTMState(values=values, delta=delta, frontier=frontier)
     else:
         state = initial_state
 

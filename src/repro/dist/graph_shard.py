@@ -39,6 +39,26 @@ optionally reweighed by the online-feedback correction
 (``HyTMConfig.autotune``, repro.autotune).  The executed collective
 stays the bulk-synchronous pmin/psum merge, preserving the oracle
 equivalence contract.
+
+Vertex-state layout (``HyTMConfig.vertex_sharding``): by default the
+(values, Δ, frontier) triple is **replicated** — every device holds the
+full ``(n,)`` vectors, the per-device memory ceiling.  With ``"owner"``
+the triple is **owner-sharded** (Totem's owner/halo split): the node
+count pads to ``n_pad = ceil(n/D)*D``, device ``d`` owns the contiguous
+slice ``[d*n_loc, (d+1)*n_loc)`` and holds only it, and each sweep pass
+(a) all-gathers the frontier/operand shards into the full view its local
+edge blocks read (the halo fill), (b) relaxes locally exactly as before,
+and (c) merges back to owned slices — ``pmin`` + owned-slice extraction
+for min-combiners (bit-exact: the same elementwise pmin, sliced), a
+tiled ``psum_scatter`` for sum-combiners.  Per-device state drops
+~D-fold (``cost_model.vertex_state_bytes``); the boundary-vertex counts
+a compacted exchange would actually ship are precomputed host-side as a
+:class:`HaloPlan`, and ``halo_level_cost`` caps the ICI level's
+compacted candidate at the halo size so the two-level cost model (and
+the autotune corrections steering it) charge the owner layout's real
+exchange.  Results stay bit-identical to the single-device
+``async_sweep=False`` oracle for min-combiners and tolerance-bounded for
+sum-combiners, exactly like the replicated layout.
 """
 
 from __future__ import annotations
@@ -115,6 +135,52 @@ class BlockedEdges:
     in_range: jax.Array  # (P, B) bool
 
 
+@dataclass(frozen=True)
+class HaloPlan:
+    """Host-side owner/halo layout of one sharded runtime.
+
+    Device ``d`` owns the contiguous vertex slice
+    ``[d*n_loc, (d+1)*n_loc)`` of the ``n_pad = n_loc*D``-padded id
+    space; its *halo* is the set of vertices outside that slice which
+    its local edge blocks reference (as source or destination) — the
+    boundary entries a compacted owner-layout exchange would ship.
+    Rebuilt whenever the edge-block grid changes (build, refill, patch,
+    merge-compaction / ``layout_version`` bumps)."""
+
+    n_pad: int
+    n_loc: int
+    halo_counts: tuple     # (D,) ints: unique boundary vertices per device
+    halo_total: int
+
+    @property
+    def max_halo(self) -> int:
+        return max(self.halo_counts) if self.halo_counts else 0
+
+
+def build_halo_plan(
+    src: np.ndarray, dst: np.ndarray, valid: np.ndarray,
+    n_nodes: int, n_devices: int,
+) -> HaloPlan:
+    """Build the owner/halo plan from the host-side ``(P_total, B)``
+    blocked-edge grids (rows ``[d*P_local, (d+1)*P_local)`` live on
+    device ``d``)."""
+    n_loc = -(-n_nodes // n_devices)
+    n_pad = n_loc * n_devices
+    P_total = src.shape[0]
+    P_local = P_total // n_devices
+    counts = []
+    for d in range(n_devices):
+        rows = slice(d * P_local, (d + 1) * P_local)
+        v = np.asarray(valid[rows], bool)
+        refs = np.unique(np.concatenate(
+            [np.asarray(src[rows])[v], np.asarray(dst[rows])[v]]
+        )) if v.any() else np.empty(0, np.int64)
+        lo, hi = d * n_loc, (d + 1) * n_loc
+        counts.append(int(np.count_nonzero((refs < lo) | (refs >= hi))))
+    return HaloPlan(n_pad=n_pad, n_loc=n_loc, halo_counts=tuple(counts),
+                    halo_total=int(sum(counts)))
+
+
 @dataclass
 class ShardedRuntime:
     """Device-placed inputs shared by every sharded iteration."""
@@ -129,6 +195,16 @@ class ShardedRuntime:
     n_nodes: int
     n_partitions: int          # padded: multiple of mesh.shape[axis]
     n_hub_partitions: int
+    # Vertex-state layout (HyTMConfig.vertex_sharding).  "owner": state
+    # vectors are logically (n_pad,) and owner-sharded P(axis) — each
+    # device stores its (n_loc,) owned slice — and the per-vertex runtime
+    # vectors above are replicated but padded to (n_pad,) with inert
+    # values (out_degree 0, zc_req 0, inv_deg 1, vertex_part_id P-1).
+    # "replicated" keeps today's (n,) layout byte-identical; n_pad ==
+    # n_nodes and halo is None.
+    vertex_sharding: str = "replicated"
+    n_pad: int = 0
+    halo: HaloPlan | None = None
     # (program, config[, chunk]) -> jitted iteration/chunk; reusing a
     # runtime across run_hytm_sharded calls reuses the compiled sweep
     # instead of retracing a fresh shard_map closure every run.  The
@@ -198,14 +274,6 @@ def build_sharded_runtime(
     part_id = np.repeat(
         np.arange(P_total, dtype=np.int32), table.vertices_per_partition
     )
-    parts = DevicePartitions(
-        vertex_start=jnp.asarray(table.vertex_start, jnp.int32),
-        edge_start=jnp.asarray(table.edge_start, jnp.int32),
-        part_edges=jnp.asarray(epp, jnp.int32),
-        vertex_part_id=jnp.asarray(part_id),
-        n_partitions=P_total,
-        block_size=B,
-    )
 
     row = NamedSharding(mesh, P(axis, None))
     rep = NamedSharding(mesh, P())
@@ -229,6 +297,27 @@ def build_sharded_runtime(
     n_hub_parts = int(np.searchsorted(np.asarray(table.vertex_start), n_hubs, side="left"))
     n_hub_parts = max(n_hub_parts, 1) if n_hubs > 0 else 0
 
+    sharding = _check_vertex_sharding(config.vertex_sharding)
+    halo = None
+    n_pad = g.n_nodes
+    if sharding == "owner":
+        halo = build_halo_plan(src, dst, in_range, g.n_nodes, n_dev)
+        n_pad = halo.n_pad
+        out_degree = _pad_vertex_vec(out_degree, n_pad, 0)
+        zc_req = _pad_vertex_vec(zc_req, n_pad, 0.0)
+        inv_deg = _pad_vertex_vec(inv_deg, n_pad, 1.0)
+        part_id = np.concatenate(
+            [part_id, np.full(n_pad - g.n_nodes, P_total - 1, np.int32)])
+
+    parts = DevicePartitions(
+        vertex_start=jnp.asarray(table.vertex_start, jnp.int32),
+        edge_start=jnp.asarray(table.edge_start, jnp.int32),
+        part_edges=jnp.asarray(epp, jnp.int32),
+        vertex_part_id=jnp.asarray(part_id),
+        n_partitions=P_total,
+        block_size=B,
+    )
+
     return ShardedRuntime(
         mesh=mesh,
         axis=axis,
@@ -240,7 +329,27 @@ def build_sharded_runtime(
         n_nodes=g.n_nodes,
         n_partitions=P_total,
         n_hub_partitions=n_hub_parts,
+        vertex_sharding=sharding,
+        n_pad=n_pad,
+        halo=halo,
     )
+
+
+def _check_vertex_sharding(sharding: str) -> str:
+    if sharding not in ("replicated", "owner"):
+        raise ValueError(
+            f"vertex_sharding must be 'replicated' or 'owner', "
+            f"got {sharding!r}")
+    return sharding
+
+
+def _pad_vertex_vec(vec: jax.Array, n_pad: int, fill) -> jax.Array:
+    """Pad a per-vertex runtime vector from (n,) to (n_pad,) with an
+    inert fill value (padded ids carry no edges and never activate)."""
+    extra = n_pad - vec.shape[0]
+    if extra <= 0:
+        return vec
+    return jnp.concatenate([vec, jnp.full(extra, fill, vec.dtype)])
 
 
 # --------------------------------------------------------------------------
@@ -251,18 +360,24 @@ def _local_sweep(
     blocks: BlockedEdges,      # (P_local, B) — this device's shard
     engines: jax.Array,        # (P_local,) — NONE entries are skipped
     order: jax.Array,          # (P_local,) local processing order
-    frontier: jax.Array,       # (n,) replicated
-    operand: jax.Array,        # (n,) replicated message operand
+    frontier: jax.Array,       # (n,) full per-device view (halo-filled)
+    operand: jax.Array,        # (n,) full message operand view
     n: int,
     program: VertexProgram,
     axis: str,
     use_kernels: bool = False,
+    owner: bool = False,
+    n_loc: int = 0,
 ):
     """Relax this device's partitions, then merge across the mesh.
 
-    Returns the globally merged (agg, touched): ``pmin`` for traversal
-    (min) combiners, ``psum`` for accumulative (sum) combiners — one
-    collective exchange of the (n,) contribution vector per pass.
+    Replicated layout: returns the globally merged (n,) (agg, touched) —
+    ``pmin`` for traversal (min) combiners, ``psum`` for accumulative
+    (sum) combiners — one collective exchange of the contribution vector
+    per pass.  Owner layout: returns this device's **owned (n_loc,)
+    slice** of the same merge — the pmin result sliced at the owner
+    offset (bit-exact: the identical elementwise pmin, restricted), a
+    tiled ``psum_scatter`` for sum combiners.
     """
     identity = jnp.inf if program.combine == MIN else 0.0
 
@@ -284,9 +399,21 @@ def _local_sweep(
     (agg, touched), _ = jax.lax.scan(body, init, order)
     if program.combine == MIN:
         agg = jax.lax.pmin(agg, axis)
+        touched = jax.lax.psum(touched.astype(jnp.int32), axis) > 0
+        if owner:
+            dev = jax.lax.axis_index(axis)
+            agg = jax.lax.dynamic_slice_in_dim(agg, dev * n_loc, n_loc)
+            touched = jax.lax.dynamic_slice_in_dim(touched, dev * n_loc, n_loc)
     else:
-        agg = jax.lax.psum(agg, axis)
-    touched = jax.lax.psum(touched.astype(jnp.int32), axis) > 0
+        if owner:
+            agg = jax.lax.psum_scatter(agg, axis, scatter_dimension=0,
+                                       tiled=True)
+            touched = jax.lax.psum_scatter(
+                touched.astype(jnp.int32), axis, scatter_dimension=0,
+                tiled=True) > 0
+        else:
+            agg = jax.lax.psum(agg, axis)
+            touched = jax.lax.psum(touched.astype(jnp.int32), axis) > 0
     return agg, touched
 
 
@@ -326,9 +453,14 @@ def _make_iteration_impl(
     calls while the compiled sweep survives: same shapes hit the jit
     cache, a merge-compaction's new shapes re-specialize through it."""
     mesh, axis = rt.mesh, rt.axis
-    n = rt.n_nodes
-    P_total = rt.n_partitions
     n_dev = int(mesh.shape[axis])
+    owner = rt.vertex_sharding == "owner"
+    # owner layout: state vectors are (n_pad,) owner-sharded; each sweep
+    # pass all-gathers the (n_loc,) shards into the full view the local
+    # edge blocks read, then merges back to owned slices (_local_sweep)
+    n = rt.n_pad if owner else rt.n_nodes
+    n_loc = n // n_dev if owner else 0
+    P_total = rt.n_partitions
     P_local = P_total // n_dev
     mode = config.cds_mode
     # resolved once at trace time, like the single-device sweep; the
@@ -362,14 +494,22 @@ def _make_iteration_impl(
                 config.recompute_once, pid_offset=dev * P_local,
                 priority_mask=mask_l,
             )
+            if owner:
+                # halo fill: gather the owned shards into the full view
+                # the local edge blocks read (dense exchange; the cost
+                # model charges the compacted halo candidate against it)
+                frontier_ = jax.lax.all_gather(frontier_, axis, tiled=True)
+                operand_ = jax.lax.all_gather(operand_, axis, tiled=True)
             agg, touched = _local_sweep(
                 blocks_l, engines_l, sched.order, frontier_, operand_,
                 n, program, axis, use_kernels,
+                owner=owner, n_loc=n_loc,
             )
             return agg, touched
 
         shard = P(axis)
         rep = P()
+        state_spec = shard if owner else rep
         fn = shard_map(
             local,
             mesh=mesh,
@@ -377,9 +517,9 @@ def _make_iteration_impl(
                 BlockedEdges(src=P(axis, None), dst=P(axis, None),
                              weight=P(axis, None), in_range=P(axis, None)),
                 jax.tree.map(lambda _: shard, stats),
-                shard, shard, rep, rep, rep,
+                shard, shard, state_spec, state_spec, rep,
             ),
-            out_specs=(rep, rep),
+            out_specs=(state_spec, state_spec),
             check_rep=False,
         )
         return fn(blocks, stats, second_mask, delta_mass, frontier,
@@ -445,12 +585,21 @@ def _make_iteration_impl(
             blocks, stats, second_mask, frontier, operand, delta_mass,
             correction, pass_two=False,
         )
-        values1, delta1, activated = _apply_merged(
-            values, delta, frontier, agg, touched, program,
-        )
+        if program.peel_k is not None:
+            # peeling: merged agg is the per-vertex count of newly-removed
+            # in-neighbors; subtract from the remaining degree (additive,
+            # so async == sync == sharded — core.hytm._sweep's peel branch)
+            values1, delta1, activated = values - agg, delta, touched
+        else:
+            values1, delta1, activated = _apply_merged(
+                values, delta, frontier, agg, touched, program,
+            )
 
         # (5) pass 2: recompute-once over loaded priority partitions
-        if program.combine == MIN:
+        if program.peel_k is not None:
+            # a second peel pass would double-subtract the removal counts
+            frontier2 = jnp.zeros_like(frontier)
+        elif program.combine == MIN:
             frontier2 = frontier | activated
         else:
             # |Δ| matches core.hytm: signed correction deltas (the
@@ -468,16 +617,27 @@ def _make_iteration_impl(
         processed2 = second_mask[parts.vertex_part_id] & (
             plan.engines[parts.vertex_part_id] != NONE
         )
-        values2, delta2, activated2 = _apply_merged(
-            values1, delta1, frontier2 & processed2, agg2, touched2, program,
-        )
+        if program.peel_k is not None:
+            values2, delta2, activated2 = values1 - agg2, delta1, touched2
+        else:
+            values2, delta2, activated2 = _apply_merged(
+                values1, delta1, frontier2 & processed2, agg2, touched2,
+                program,
+            )
         activated = activated | activated2
         # entries a compacted ICI exchange would ship: destinations any
         # device touched this iteration (both passes) — NOT the source
         # frontier, which undercounts by the fan-out in hub regimes
         merged_entries = jnp.sum((touched | touched2).astype(jnp.int32))
 
-        if program.combine == MIN:
+        if program.peel_k is not None:
+            # newly-removed: alive vertices whose remaining degree fell
+            # below k this round (matches core.hytm's peel post-pass)
+            alive = delta2 < 0.5
+            newly = alive & (values2 < program.peel_k)
+            next_frontier = newly
+            delta2 = delta2 + newly.astype(jnp.float32)
+        elif program.combine == MIN:
             next_frontier = activated
         else:
             next_frontier = jnp.abs(delta2) > program.tolerance
@@ -695,9 +855,65 @@ def ici_level_cost(
     return dense_bytes, t_dense, FILTER
 
 
+def halo_level_cost(
+    n_nodes: int,
+    merged_entries: float,
+    halo_total: int,
+    n_devices: int,
+    link,
+    correction: np.ndarray | None = None,
+    n_collectives: int = 4,
+) -> tuple[float, float, int]:
+    """``ici_level_cost`` generalized to the owner/halo layout: a
+    compacted exchange never ships more than the boundary vertices the
+    edge blocks actually reference, so the compacted candidate's entry
+    count is capped at ``HaloPlan.halo_total`` — the halo is the
+    owner-layout analogue of the touched-destination set.  The dense
+    candidate (all-gather + merge of whole vectors) is unchanged, and the
+    select-corrected / account-uncorrected contract carries over."""
+    return ici_level_cost(
+        n_nodes, min(float(merged_entries), float(halo_total)), n_devices,
+        link, correction, n_collectives,
+    )
+
+
 # --------------------------------------------------------------------------
 # Convergence loop
 # --------------------------------------------------------------------------
+
+def owner_state_pad_values(program: VertexProgram) -> tuple[float, float]:
+    """(values, delta) fill for the ``[n, n_pad)`` ghost vertices of the
+    owner layout.  Pads carry no edges, so the fills only need to keep
+    them *inert* in the next-frontier rules: Δ-pads 0 would re-activate
+    under a peel (alive with degree < k), so peels pad Δ=1 (removed);
+    min-combiners pad values=inf (unreachable); frontier pads are always
+    False."""
+    if program.peel_k is not None:
+        return 0.0, 1.0
+    if program.use_delta:
+        return 0.0, 0.0
+    return float(np.inf), 0.0
+
+
+def _owner_place_state(
+    rt: ShardedRuntime, program: VertexProgram,
+    values: jax.Array, delta: jax.Array, frontier: jax.Array,
+) -> HyTMState:
+    """Pad an (n,) state triple to (n_pad,) and owner-shard it P(axis) —
+    the placement every owner-mode dispatch (cold, warm, incremental,
+    resumed) takes."""
+    pad_v, pad_d = owner_state_pad_values(program)
+    values = _pad_vertex_vec(jnp.asarray(values, jnp.float32), rt.n_pad,
+                             pad_v)
+    delta = _pad_vertex_vec(jnp.asarray(delta, jnp.float32), rt.n_pad, pad_d)
+    frontier = _pad_vertex_vec(jnp.asarray(frontier, bool), rt.n_pad, False)
+    shard = NamedSharding(rt.mesh, P(rt.axis))
+    return HyTMState(
+        values=jax.device_put(values, shard),
+        delta=jax.device_put(delta, shard),
+        frontier=jax.device_put(frontier, shard),
+    )
+
 
 def run_hytm_sharded(
     g: CSRGraph,
@@ -720,6 +936,18 @@ def run_hytm_sharded(
     modeled transfer accounting as single-device, and state trajectories
     matching the single-device ``async_sweep=False`` run (exact for
     min-combine programs; up to FP summation order for sum-combine).
+
+    ``config.vertex_sharding`` picks the vertex-state layout.
+    ``"replicated"`` (default) keeps the full (n,) triple on every
+    device — byte-identical to the historical path.  ``"owner"``
+    owner-shards the triple: each device stores only its contiguous
+    ``(n_loc,) = (ceil(n/D),)`` owned slice plus the halo view its edge
+    blocks gather per pass, cutting per-device vertex-state bytes
+    ~D-fold (``cost_model.vertex_state_bytes``); the ICI level then
+    charges ``halo_level_cost`` — the compacted candidate capped at the
+    runtime's :class:`HaloPlan` boundary count.  Both layouts satisfy
+    the same oracle contract above; ``HyTMResult.values``/``delta`` are
+    always returned as host (n,) arrays regardless of layout.
 
     ``initial_state`` warm-starts the sharded convergence loop from an
     arbitrary (values, Δ, frontier) triple — the entry point of the
@@ -756,9 +984,33 @@ def run_hytm_sharded(
             g, config, mesh, n_hubs=n_hubs,
             weighted_norm=program.use_delta and program.weighted,
         )
+    owner = _check_vertex_sharding(config.vertex_sharding) == "owner"
+    if rt.vertex_sharding != config.vertex_sharding:
+        raise ValueError(
+            f"runtime was built with vertex_sharding="
+            f"{rt.vertex_sharding!r} but config requests "
+            f"{config.vertex_sharding!r}; rebuild the runtime")
     if initial_state is None:
-        values, delta, frontier = program.init_state(rt.n_nodes, source)
-        state = HyTMState(values=values, delta=delta, frontier=frontier)
+        if program.peel_k is not None:
+            # peeling programs seed from vertex degrees (init_state has no
+            # degree access); rt.out_degree is padded in owner mode —
+            # slice to the real vertices so pads never enter the frontier
+            deg = np.asarray(rt.out_degree)[:rt.n_nodes].astype(np.float32)
+            removed = deg < program.peel_k
+            values, delta, frontier = (
+                jnp.asarray(deg), jnp.asarray(removed, jnp.float32),
+                jnp.asarray(removed))
+        else:
+            values, delta, frontier = program.init_state(rt.n_nodes, source)
+        if owner:
+            state = _owner_place_state(rt, program, values, delta, frontier)
+        else:
+            state = HyTMState(values=values, delta=delta, frontier=frontier)
+    elif owner:
+        state = _owner_place_state(
+            rt, program, jnp.asarray(initial_state.values),
+            jnp.asarray(initial_state.delta),
+            jnp.asarray(initial_state.frontier))
     else:
         # replicate the warm triple over the mesh — identical placement to
         # the cold start, so the compiled sweep sees one layout either way
@@ -795,9 +1047,20 @@ def run_hytm_sharded(
         KEY_ICI_BYTES: [], KEY_ICI_TIME: [], KEY_ICI_ENGINE: []}
 
     def charge_ici(merged_entries: float) -> None:
-        ib, it_, ie = ici_level_cost(
-            rt.n_nodes, float(merged_entries), n_dev, config.ici_link, corr_np,
-        )
+        if owner and rt.halo is not None:
+            # owner layout: a compacted exchange ships at most the halo
+            halo_entries = min(float(merged_entries),
+                               float(rt.halo.halo_total))
+            ib, it_, ie = halo_level_cost(
+                rt.n_nodes, float(merged_entries), rt.halo.halo_total,
+                n_dev, config.ici_link, corr_np,
+            )
+        else:
+            halo_entries = None
+            ib, it_, ie = ici_level_cost(
+                rt.n_nodes, float(merged_entries), n_dev, config.ici_link,
+                corr_np,
+            )
         it = len(ici_hist[KEY_ICI_BYTES])  # global iteration index
         ici_hist[KEY_ICI_BYTES].append(ib)
         ici_hist[KEY_ICI_TIME].append(it_)
@@ -808,6 +1071,7 @@ def run_hytm_sharded(
             record_ici(
                 obs, track="ici", it=it, bytes_=ib, seconds=it_, engine=ie,
                 merged_entries=float(merged_entries),
+                halo_entries=halo_entries,
             )
 
     t0 = time.monotonic()
@@ -955,8 +1219,10 @@ def run_hytm_sharded(
     for k, v in ici_hist.items():
         history[k] = np.asarray(v)
     result = HyTMResult(
-        values=np.asarray(state.values),
-        delta=np.asarray(state.delta),
+        # owner mode: gather the sharded (n_pad,) vectors and drop the
+        # ghost pads so callers always see host (n,) arrays
+        values=np.asarray(state.values)[:rt.n_nodes],
+        delta=np.asarray(state.delta)[:rt.n_nodes],
         iterations=iters,
         wall_seconds=wall,
         modeled_seconds=float(np.sum(history[KEY_TRANSFER_TIME])),

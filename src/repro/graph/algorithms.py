@@ -55,8 +55,23 @@ class VertexProgram:
     # graph directly (CC, by contrast, sweeps whatever edges it's given
     # and callers symmetrize explicitly).
     symmetrize: bool = False
+    # Peeling programs (k-core): vertices are iteratively *removed* when
+    # their remaining degree drops below ``peel_k``; the frontier is the
+    # newly-removed set (collapsing monotonically), messages are unit
+    # removal counts combined with SUM, and the value is the remaining
+    # effective degree.  Integer counts are exact in f32, so peeling runs
+    # bit-identical across single-device / sharded / owner-sharded paths
+    # (the MIN-family exactness contract).  State is seeded from the
+    # runtime's out-degrees by ``run_hytm``/``run_hytm_sharded`` —
+    # ``init_state`` has no degree access and must not be used.
+    peel_k: float | None = None
 
     def init_state(self, n: int, source: int | None):
+        if self.peel_k is not None:
+            raise ValueError(
+                f"{self.name}: peeling programs seed from vertex degrees; "
+                "use run_hytm/run_hytm_sharded (they special-case the "
+                "init), not init_state")
         if self.use_delta and self.personalized and source is not None:
             # Δ-PPR: all (1-d) teleport mass starts as pending delta on
             # the personalization source; fixpoint values solve
@@ -101,6 +116,13 @@ def _php_msg(src_delta_over_deg, w):
     return src_delta_over_deg * w
 
 
+def _kcore_msg(src_op, w):
+    # unit removal count, independent of the source operand (the engines
+    # mask inactive lanes to the SUM identity 0.0, so only newly-removed
+    # sources contribute)
+    return jnp.ones_like(src_op)
+
+
 SSSP = VertexProgram("sssp", MIN, _sssp_msg, weighted=True)
 BFS = VertexProgram("bfs", MIN, _bfs_msg, weighted=False)
 CC = VertexProgram("cc", MIN, _cc_msg, weighted=False)
@@ -112,8 +134,15 @@ PAGERANK = VertexProgram("pagerank", SUM, _pr_msg, use_delta=True, weighted=Fals
 PHP = VertexProgram("php", SUM, _php_msg, use_delta=True, weighted=True)
 PPR = VertexProgram("ppr", SUM, _pr_msg, use_delta=True, weighted=False,
                     personalized=True)
+# k-core decomposition at fixed k (peeling): defined on the undirected
+# graph; values = remaining effective degree, Δ = removed flag (0 alive /
+# 1 removed), frontier = newly-removed vertices.  The collapsing frontier
+# is the stress case for the compacted halo exchange.
+KCORE = VertexProgram("kcore", SUM, _kcore_msg, weighted=False,
+                      symmetrize=True, damping=1.0, peel_k=2.0)
 
-ALGORITHMS = {p.name: p for p in (SSSP, BFS, CC, WCC, PAGERANK, PHP, PPR)}
+ALGORITHMS = {p.name: p for p in (SSSP, BFS, CC, WCC, PAGERANK, PHP, PPR,
+                                  KCORE)}
 
 
 # --------------------------------------------------------------------------
@@ -198,6 +227,32 @@ def reference_wcc(g: CSRGraph) -> np.ndarray:
     comp_min = np.full(n, n, dtype=np.int64)
     np.minimum.at(comp_min, roots, np.arange(n, dtype=np.int64))
     return comp_min[roots]
+
+
+def reference_kcore(g: CSRGraph, k: float = 2.0):
+    """Synchronous k-core peeling on the symmetrized graph, mirroring the
+    device program round for round: every round the newly-removed set
+    pushes one unit along its out-edges, every destination's remaining
+    degree drops by its count of newly-removed in-neighbors (removed
+    destinations included — the device subtracts unconditionally), and
+    alive vertices falling below ``k`` join the next round's removal.
+    Returns ``(removed, remaining_degree)``."""
+    sym = g.symmetrize()
+    n = sym.n_nodes
+    deg = sym.out_degrees.astype(np.float64)
+    src = sym.edge_sources()
+    dst = sym.indices
+    removed = deg < k
+    newly = removed.copy()
+    while newly.any():
+        counts = np.zeros(n)
+        m = newly[src]
+        np.add.at(counts, dst[m], 1.0)
+        deg = deg - counts
+        nxt = (~removed) & (deg < k)
+        removed |= nxt
+        newly = nxt
+    return removed, deg
 
 
 def reference_ppr(

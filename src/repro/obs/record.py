@@ -108,9 +108,14 @@ def record_chunk(
 def record_ici(
     obs: Any, *, track: str, it: int, bytes_: float, seconds: float,
     engine: int, merged_entries: float, wall: float | None = None,
+    halo_entries: float | None = None,
 ) -> None:
     """One instant per sharded-iteration ICI exchange (dense vs compact
-    all-reduce pick), plus the unified ICI metrics."""
+    all-reduce pick), plus the unified ICI metrics.  ``halo_entries`` is
+    set on owner-sharded runs: the boundary entries a compacted exchange
+    would actually ship (``merged_entries`` capped at the runtime's
+    ``HaloPlan.halo_total``), surfaced as the ``ici.halo_bytes``
+    counter (8 B per entry, matching ``halo_level_cost``)."""
     name = ENGINE_NAMES.get(int(engine), str(int(engine)))
     m = obs.metrics
     m.counter("ici.bytes", "modeled cross-device merge bytes").inc(
@@ -119,10 +124,17 @@ def record_ici(
         1, engine=name)
     m.counter("ici.modeled_seconds", "modeled ICI merge seconds").inc(
         float(seconds), engine=name)
+    extra = {}
+    if halo_entries is not None:
+        m.counter(
+            "ici.halo_bytes",
+            "compacted owner-halo exchange bytes (8 B/boundary entry)",
+        ).inc(float(halo_entries) * 8.0, engine=name)
+        extra["halo_entries"] = float(halo_entries)
     obs.instant(
         EV_ICI_MERGE, cat=CAT_ICI, track=track, vt=float(it), wall=wall,
         bytes=float(bytes_), modeled_seconds=float(seconds), engine=name,
-        merged_entries=float(merged_entries),
+        merged_entries=float(merged_entries), **extra,
     )
 
 

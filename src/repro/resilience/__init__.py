@@ -16,6 +16,7 @@ from repro.resilience.checkpoint import (
     RunCheckpoint,
     calibrator_state,
     load_reports,
+    migrate_state_layout,
     restore,
     restore_calibrator,
     resume_run,
@@ -47,7 +48,8 @@ from repro.resilience.supervisor import (
 
 __all__ = [
     "CheckpointError", "CheckpointHook", "RunCheckpoint",
-    "calibrator_state", "load_reports", "restore", "restore_calibrator",
+    "calibrator_state", "load_reports", "migrate_state_layout",
+    "restore", "restore_calibrator",
     "resume_run", "save", "save_reports", "stitch",
     "DeviceOOM", "DispatchFault", "DispatchTimeout", "FaultError",
     "FaultEvent", "FaultPlan", "FaultSpec", "UpdateLost", "plan_of",

@@ -40,7 +40,10 @@ from pathlib import Path
 
 import numpy as np
 
-SCHEMA_VERSION = 1
+# v2 adds the vertex-state layout fields (state_layout, n_nodes) for
+# owner-sharded runs; v1 checkpoints still load (implicitly replicated)
+SCHEMA_VERSION = 2
+_SUPPORTED_SCHEMAS = (1, 2)
 _META_KEY = "__meta__"
 
 
@@ -93,6 +96,13 @@ class RunCheckpoint:
     frontier: np.ndarray | None = None
     history: dict[str, np.ndarray] = field(default_factory=dict)
     calibrator: dict | None = None
+    # vertex-state layout the snapshot was taken under ("replicated" |
+    # "owner").  Owner snapshots hold the gathered (n_pad,) arrays;
+    # n_nodes records the real vertex count so resume/migration can
+    # slice the ghost pads off.  v1 checkpoints restore as
+    # ("replicated", 0).
+    state_layout: str = "replicated"
+    n_nodes: int = 0
 
     @property
     def anchor(self) -> tuple[int, int]:
@@ -119,6 +129,8 @@ def save(ckpt: RunCheckpoint, path: str | os.PathLike) -> Path:
         "iterations": int(ckpt.iterations),
         "graph_version": int(ckpt.graph_version),
         "layout_version": int(ckpt.layout_version),
+        "state_layout": ckpt.state_layout,
+        "n_nodes": int(ckpt.n_nodes),
         "calibrator": ckpt.calibrator,
         "crc": {k: _crc(v) for k, v in arrays.items()},
     }
@@ -155,9 +167,10 @@ def restore(path: str | os.PathLike,
         meta = json.loads(bytes(blob.tobytes()).decode())
     except (ValueError, UnicodeDecodeError) as e:
         raise CheckpointError(f"checkpoint metadata corrupt: {path}") from e
-    if meta.get("schema") != SCHEMA_VERSION:
+    if meta.get("schema") not in _SUPPORTED_SCHEMAS:
         raise CheckpointError(
-            f"checkpoint schema {meta.get('schema')!r} != {SCHEMA_VERSION}")
+            f"checkpoint schema {meta.get('schema')!r} not in "
+            f"{_SUPPORTED_SCHEMAS}")
     for k, want in meta.get("crc", {}).items():
         if k not in arrays:
             raise CheckpointError(f"checkpoint array missing: {k}")
@@ -180,6 +193,8 @@ def restore(path: str | os.PathLike,
         history={k[len("hist::"):]: v for k, v in arrays.items()
                  if k.startswith("hist::")},
         calibrator=meta.get("calibrator"),
+        state_layout=meta.get("state_layout", "replicated"),
+        n_nodes=int(meta.get("n_nodes", 0)),
     )
     if expect_anchor is not None and ckpt.anchor != tuple(expect_anchor):
         raise CheckpointError(
@@ -198,12 +213,18 @@ class CheckpointHook:
 
     def __init__(self, path: str | os.PathLike, *, program: str = "",
                  anchor: tuple[int, int] = (0, 0), every: int = 1,
-                 base_iterations: int = 0):
+                 base_iterations: int = 0,
+                 state_layout: str = "replicated", n_nodes: int = 0):
         self.path = Path(path)
         self.program = program
         self.anchor = (int(anchor[0]), int(anchor[1]))
         self.every = max(int(every), 1)
         self.base_iterations = int(base_iterations)
+        # owner-sharded runs pass state_layout="owner" + the real vertex
+        # count: np.asarray gathers the (n_pad,) sharded arrays, and the
+        # snapshot records both so restore can slice the pads off
+        self.state_layout = state_layout
+        self.n_nodes = int(n_nodes)
         self.n_chunks = 0
         self.saved = 0
 
@@ -223,9 +244,68 @@ class CheckpointHook:
             history={k: (np.concatenate(v) if v else np.zeros((0,)))
                      for k, v in rows.items()},
             calibrator=calibrator_state(calibrator),
+            state_layout=self.state_layout,
+            n_nodes=self.n_nodes,
         )
         save(ckpt, self.path)
         self.saved += 1
+
+
+def migrate_state_layout(ckpt: RunCheckpoint, to_layout: str, *,
+                         n_devices: int = 1,
+                         program=None) -> RunCheckpoint:
+    """Convert a checkpoint's vertex-state arrays between layouts.
+
+    ``owner -> replicated`` slices the gathered ``(n_pad,)`` arrays down
+    to the recorded ``n_nodes``; ``replicated -> owner`` pads them with
+    the program's inert fills (``graph_shard.owner_state_pad_values``)
+    up to ``ceil(n/D)*D`` for ``n_devices``.  The real-vertex bytes are
+    untouched either way, so migrate -> resume stays bit-identical to a
+    same-layout resume.  ``program`` (a ``VertexProgram``) is needed for
+    ``-> owner`` to pick the fills; omitted, it is looked up by the
+    checkpoint's program name in ``repro.graph.algorithms.ALGORITHMS``.
+    """
+    if to_layout not in ("replicated", "owner"):
+        raise ValueError(f"unknown state layout {to_layout!r}")
+    if ckpt.state_layout == to_layout:
+        return ckpt
+    if ckpt.values is None:
+        raise CheckpointError("checkpoint holds no state arrays to migrate")
+    if to_layout == "replicated":
+        if not ckpt.n_nodes:
+            raise CheckpointError(
+                "owner-layout checkpoint lacks n_nodes; cannot slice pads")
+        n = ckpt.n_nodes
+        return dataclasses.replace(
+            ckpt, values=ckpt.values[:n], delta=ckpt.delta[:n],
+            frontier=ckpt.frontier[:n], state_layout="replicated",
+            n_nodes=n)
+    from repro.dist.graph_shard import owner_state_pad_values
+
+    if program is None:
+        from repro.graph.algorithms import ALGORITHMS
+
+        program = ALGORITHMS.get(ckpt.program)
+        if program is None:
+            raise CheckpointError(
+                f"cannot infer pad fills for unknown program "
+                f"{ckpt.program!r}; pass program= explicitly")
+    n = ckpt.values.shape[0]
+    n_pad = -(-n // max(int(n_devices), 1)) * max(int(n_devices), 1)
+    pad_v, pad_d = owner_state_pad_values(program)
+
+    def _pad(arr, fill):
+        extra = n_pad - arr.shape[0]
+        if extra <= 0:
+            return arr
+        return np.concatenate(
+            [arr, np.full(extra, fill, dtype=arr.dtype)])
+
+    return dataclasses.replace(
+        ckpt, values=_pad(ckpt.values, pad_v),
+        delta=_pad(ckpt.delta, pad_d),
+        frontier=_pad(ckpt.frontier, False),
+        state_layout="owner", n_nodes=n)
 
 
 def stitch(ckpt: RunCheckpoint, result):
@@ -277,14 +357,28 @@ def resume_run(path: str | os.PathLike, g, program, *, config, source=0,
     if config.sync_every < 2:
         raise ValueError("resume_run requires the chunked driver "
                          "(sync_every >= 2)")
+    run_layout = getattr(config, "vertex_sharding", "replicated")
+    if ckpt.state_layout != run_layout:
+        raise CheckpointError(
+            f"checkpoint state_layout={ckpt.state_layout!r} does not match "
+            f"the run's vertex_sharding={run_layout!r}; convert it with "
+            f"migrate_state_layout first")
     remaining = config.max_iters - ckpt.iterations
     if remaining <= 0:
         raise CheckpointError(
             f"checkpoint already holds {ckpt.iterations} iterations >= "
             f"max_iters={config.max_iters}")
-    state = HyTMState(values=jnp.asarray(ckpt.values),
-                      delta=jnp.asarray(ckpt.delta),
-                      frontier=jnp.asarray(ckpt.frontier))
+    values, delta, frontier = ckpt.values, ckpt.delta, ckpt.frontier
+    if ckpt.state_layout == "owner" and ckpt.n_nodes:
+        # drop the gathered ghost pads: run_hytm_sharded re-pads and
+        # owner-shards the triple for the *current* mesh, so a resume on
+        # a different device count still lands bit-identically
+        values = values[:ckpt.n_nodes]
+        delta = delta[:ckpt.n_nodes]
+        frontier = frontier[:ckpt.n_nodes]
+    state = HyTMState(values=jnp.asarray(values),
+                      delta=jnp.asarray(delta),
+                      frontier=jnp.asarray(frontier))
     if checkpoint is not None:
         checkpoint.base_iterations = ckpt.iterations
     result = run_hytm(
@@ -371,9 +465,10 @@ def load_reports(path: str | os.PathLike,
     if blob is None:
         raise CheckpointError(f"report log has no metadata: {path}")
     meta = json.loads(bytes(blob.tobytes()).decode())
-    if meta.get("schema") != SCHEMA_VERSION:
+    if meta.get("schema") not in _SUPPORTED_SCHEMAS:
         raise CheckpointError(
-            f"report log schema {meta.get('schema')!r} != {SCHEMA_VERSION}")
+            f"report log schema {meta.get('schema')!r} not in "
+            f"{_SUPPORTED_SCHEMAS}")
     for k, want in meta.get("crc", {}).items():
         if k not in arrays or _crc(arrays[k]) != want:
             raise CheckpointError(f"report log checksum mismatch on {k}")

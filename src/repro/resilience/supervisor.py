@@ -241,8 +241,16 @@ def run_supervised(g, program, source=0, config=None, *, n_hubs: int = 0,
     while True:
         hook = None
         if ckpt_path is not None and cfg.sync_every > 1:
-            hook = CheckpointHook(ckpt_path, program=program.name,
-                                  anchor=anchor, every=checkpoint_every)
+            # owner-sharded runs snapshot gathered (n_pad,) arrays — the
+            # hook records the layout + real vertex count so restore can
+            # slice the pads and reject cross-layout resumes typed-ly
+            n_nodes = (g.n_nodes if g is not None
+                       else getattr(rt, "n_nodes", 0))
+            hook = CheckpointHook(
+                ckpt_path, program=program.name, anchor=anchor,
+                every=checkpoint_every,
+                state_layout=getattr(cfg, "vertex_sharding", "replicated"),
+                n_nodes=n_nodes)
         try:
             if have_ckpt:
                 return resume_run(

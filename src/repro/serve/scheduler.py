@@ -50,6 +50,7 @@ import time
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -175,7 +176,20 @@ class LaneScheduler:
 
     @property
     def lane_bytes(self) -> int:
-        return LANE_STATE_BYTES_PER_NODE * self.svc.dcsr.n_nodes
+        """Device bytes one lane pins.  Owner-sharded serving stores each
+        lane split across the mesh, so the budgeted (per-device) cost is
+        the owned ``(n_loc,)`` slice, not the full ``(n,)`` row — the same
+        owned-slice granularity the warm cache accounts at."""
+        n = self.svc.dcsr.n_nodes
+        if self._owner_mode():
+            n_dev = int(self.svc.mesh.shape[self.svc.config.mesh_axis])
+            n = -(-n // n_dev)
+        return LANE_STATE_BYTES_PER_NODE * n
+
+    def _owner_mode(self) -> bool:
+        svc = self.svc
+        return (svc.mesh is not None
+                and svc.config.vertex_sharding == "owner")
 
     def bucket_for(self, q: int) -> int:
         for b in self.buckets:
@@ -201,8 +215,8 @@ class LaneScheduler:
         entry = svc.cache.get(key)
         if entry is not None and entry.version == svc.version:
             svc.stats.n_cache_hits += 1
-            return self._finish(req, np.asarray(entry.values),
-                                np.asarray(entry.delta), 0, "cache")
+            return self._finish(req, entry.host_values(),
+                                entry.host_delta(), 0, "cache")
         if entry is not None and svc.incremental:
             # import here: repro.stream imports repro.serve (service owns
             # a LaneScheduler), so the reverse edge must stay lazy
@@ -220,8 +234,7 @@ class LaneScheduler:
             entry = svc.cache.promote(key)
             if entry is not None:
                 state = incremental_state(
-                    req.program, np.asarray(entry.values),
-                    np.asarray(entry.delta),
+                    req.program, entry.host_values(), entry.host_delta(),
                     svc._reports_since(entry.version), svc.dcsr, key[1],
                 )
                 svc.stats.n_incremental += 1
@@ -307,17 +320,59 @@ class LaneScheduler:
         return jobs
 
     # ------------------------------------------------------------- dispatch
+    def _lane_pad(self, program: VertexProgram):
+        """Owner-mode lane geometry: ``(n_pad, pad_values, pad_delta)``,
+        or ``None`` when lanes run replicated (n,)."""
+        if not self._owner_mode():
+            return None
+        from repro.dist.graph_shard import owner_state_pad_values
+
+        rt = self.svc._runtime_for(program)
+        pad_v, pad_d = owner_state_pad_values(program)
+        return rt.n_pad, pad_v, pad_d
+
+    @staticmethod
+    def _pad_triple(triple, pad):
+        """Pad one lane's (n,) init triple to (n_pad,) with the program's
+        inert fills (graph_shard.owner_state_pad_values)."""
+        n_pad, pad_v, pad_d = pad
+        v, d, f = (jnp.asarray(t) for t in triple)
+        extra = n_pad - v.shape[0]
+        if extra > 0:
+            v = jnp.concatenate([v, jnp.full((extra,), pad_v, v.dtype)])
+            d = jnp.concatenate([d, jnp.full((extra,), pad_d, d.dtype)])
+            f = jnp.concatenate([f, jnp.zeros((extra,), f.dtype)])
+        return v, d, f
+
     def _stack_state(self, program: VertexProgram,
                      jobs: list[_LaneJob | None], bucket: int) -> HyTMState:
         n = self.svc.dcsr.n_nodes
         dead = dead_lane_state(program, n)
         triples = [j.init if j is not None else dead for j in jobs]
         triples += [dead] * (bucket - len(jobs))
-        return HyTMState(
+        pad = self._lane_pad(program)
+        if pad is not None:
+            triples = [self._pad_triple(t, pad) for t in triples]
+        state = HyTMState(
             values=jnp.stack([t[0] for t in triples]),
             delta=jnp.stack([t[1] for t in triples]),
             frontier=jnp.stack([t[2] for t in triples]),
         )
+        if pad is not None:
+            # (Q, n_pad) with the vertex dim owner-sharded: each device
+            # holds every lane's owned slice — per-device lane state is
+            # Q * n_loc, the granularity lane_bytes pins
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            lane = NamedSharding(
+                self.svc.mesh,
+                PartitionSpec(None, self.svc.config.mesh_axis))
+            state = HyTMState(
+                values=jax.device_put(state.values, lane),
+                delta=jax.device_put(state.delta, lane),
+                frontier=jax.device_put(state.frontier, lane),
+            )
+        return state
 
     def _dispatch(self, program: VertexProgram, state: HyTMState,
                   bucket: int, correction):
@@ -373,6 +428,7 @@ class LaneScheduler:
     def _dispatch_sharded(self, program: VertexProgram, state: HyTMState,
                           bucket: int, correction, chunk: int):
         from repro.dist.graph_shard import (
+            halo_level_cost,
             ici_level_cost,
             make_sharded_batched_chunk,
         )
@@ -404,11 +460,23 @@ class LaneScheduler:
                    if correction is not None else None)
         obs = svc.obs
         base = self.stats.engine_iterations
+        owner = rt.vertex_sharding == "owner" and rt.halo is not None
         for k, me in enumerate(np.asarray(merged)[:n_done]):
-            ib, it_, ie = ici_level_cost(
-                bucket * svc.dcsr.n_nodes, float(me), n_dev,
-                svc.config.ici_link, corr_np,
-            )
+            halo_entries = None
+            if owner:
+                # each lane's compacted exchange is capped by the same
+                # halo plan, so the batched collective caps at Q * halo
+                halo_cap = float(bucket) * float(rt.halo.halo_total)
+                halo_entries = min(float(me), halo_cap)
+                ib, it_, ie = halo_level_cost(
+                    bucket * svc.dcsr.n_nodes, float(me), halo_cap,
+                    n_dev, svc.config.ici_link, corr_np,
+                )
+            else:
+                ib, it_, ie = ici_level_cost(
+                    bucket * svc.dcsr.n_nodes, float(me), n_dev,
+                    svc.config.ici_link, corr_np,
+                )
             svc.stats.extra[KEY_ICI_BYTES] = (
                 svc.stats.extra.get(KEY_ICI_BYTES, 0.0) + ib)
             svc.stats.extra[KEY_ICI_TIME] = (
@@ -418,7 +486,8 @@ class LaneScheduler:
 
                 record_ici(obs, track="ici", it=base + k, bytes_=ib,
                            seconds=it_, engine=ie,
-                           merged_entries=float(me))
+                           merged_entries=float(me),
+                           halo_entries=halo_entries)
         return state, n_done, np.asarray(lane_active), correction
 
     def _observe(self, pe_sum, mp_sum, t_chunk, warm, correction):
@@ -541,8 +610,10 @@ class LaneScheduler:
                 ]
                 if not done_idx:
                     continue
-                values = np.asarray(state.values)
-                deltas = np.asarray(state.delta)
+                # owner-mode lanes carry (n_pad,) rows — slice the ghost
+                # pads off so stored/served results are canonical (n,)
+                values = np.asarray(state.values)[:, :svc.dcsr.n_nodes]
+                deltas = np.asarray(state.delta)[:, :svc.dcsr.n_nodes]
                 freed = 0
                 for i in done_idx:
                     job = lane_jobs[i]
@@ -574,9 +645,11 @@ class LaneScheduler:
                 if self.backfill and queue:
                     refill = self._admit_jobs(queue, program, freed, results)
                     slots = [i for i, j in enumerate(lane_jobs) if j is None]
+                    pad = self._lane_pad(program) if refill else None
                     for slot, job in zip(slots, refill):
                         lane_jobs[slot] = job
-                        v, d, f = job.init
+                        v, d, f = (self._pad_triple(job.init, pad)
+                                   if pad is not None else job.init)
                         state = HyTMState(
                             values=state.values.at[slot].set(v),
                             delta=state.delta.at[slot].set(d),

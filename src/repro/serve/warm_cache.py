@@ -50,6 +50,49 @@ def state_checksum(values, delta) -> int:
 
 
 @dataclass(frozen=True)
+class OwnerPlacement:
+    """Owner-sharded device-tier placement (``HyTMConfig.vertex_sharding
+    == "owner"`` with a mesh): device-tier entries are padded to
+    ``n_pad = ceil(n/D)*D`` and owner-sharded over the mesh axis, so one
+    cached state costs each device only its ``(n_loc,)`` slice — the
+    owned-slice granularity the byte budget accounts at.  Host-tier
+    entries stay canonical ``(n,)`` numpy arrays (``to_host`` slices the
+    pads off), so the spill -> promote round trip remains bit-exact and
+    checksums are taken over the canonical bytes."""
+
+    mesh: object
+    axis: str
+    n_nodes: int
+
+    @property
+    def n_dev(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    @property
+    def n_pad(self) -> int:
+        return -(-self.n_nodes // self.n_dev) * self.n_dev
+
+    def to_device(self, arr):
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        arr = jnp.asarray(arr)
+        extra = self.n_pad - arr.shape[0]
+        if extra > 0:
+            arr = jnp.concatenate([arr, jnp.zeros(extra, arr.dtype)])
+        return jax.device_put(
+            arr, NamedSharding(self.mesh, PartitionSpec(self.axis)))
+
+    def to_host(self, arr) -> np.ndarray:
+        return np.asarray(arr)[:self.n_nodes]
+
+    def device_nbytes(self, values, delta) -> int:
+        # .nbytes of a sharded jax.Array is the GLOBAL footprint; the
+        # budget bounds what ONE device holds, so charge the per-device
+        # share
+        return (int(values.nbytes) + int(delta.nbytes)) // self.n_dev
+
+
+@dataclass(frozen=True)
 class TierPolicy:
     """The explicit tier policy (generalizing ``GraphService.max_reports``):
 
@@ -95,6 +138,16 @@ class WarmEntry:
     nbytes: int = 0
     lru: int = 0
     checksum: int | None = None  # set at spill, verified at promote
+    n_valid: int = 0        # >0: device arrays are owner-padded; real length
+
+    def host_values(self) -> np.ndarray:
+        """Canonical ``(n,)`` host view (owner-mode pads sliced off)."""
+        arr = np.asarray(self.values)
+        return arr[:self.n_valid] if self.n_valid else arr
+
+    def host_delta(self) -> np.ndarray:
+        arr = np.asarray(self.delta)
+        return arr[:self.n_valid] if self.n_valid else arr
 
 
 class WarmCache:
@@ -103,8 +156,12 @@ class WarmCache:
     eviction) reads it exactly like the flat dict it replaces."""
 
     def __init__(self, policy: TierPolicy | None = None, obs=None,
-                 faults=None):
+                 faults=None, placement: OwnerPlacement | None = None):
         self.policy = policy or TierPolicy()
+        # optional OwnerPlacement: device-tier entries are owner-sharded
+        # over the mesh and the budget accounts per-device owned-slice
+        # bytes; placement=None keeps single-device replicated arrays
+        self.placement = placement
         self._entries: dict = {}
         self._clock = 0
         self.stats = CacheStats()
@@ -211,11 +268,18 @@ class WarmCache:
         entries to host until the tier fits the budget minus
         ``reserved_bytes`` (bytes the scheduler has pinned for in-flight
         lane state — warm states yield to live lanes)."""
-        values = jnp.asarray(values)
-        delta = jnp.asarray(delta)
-        nbytes = int(values.nbytes) + int(delta.nbytes)
+        n_valid = 0
+        if self.placement is not None:
+            values = self.placement.to_device(values)
+            delta = self.placement.to_device(delta)
+            nbytes = self.placement.device_nbytes(values, delta)
+            n_valid = self.placement.n_nodes
+        else:
+            values = jnp.asarray(values)
+            delta = jnp.asarray(delta)
+            nbytes = int(values.nbytes) + int(delta.nbytes)
         entry = WarmEntry(version=version, values=values, delta=delta,
-                          tier=DEVICE, nbytes=nbytes)
+                          tier=DEVICE, nbytes=nbytes, n_valid=n_valid)
         self._touch(entry)
         self._entries[key] = entry
         self.shrink_to_budget(reserved_bytes)
@@ -260,8 +324,15 @@ class WarmCache:
                 self.stats.promote_failures += 1
                 self._obs_event("promote_oom", key, nbytes=entry.nbytes)
                 return None
-            entry.values = jax.device_put(jnp.asarray(entry.values))
-            entry.delta = jax.device_put(jnp.asarray(entry.delta))
+            if self.placement is not None:
+                entry.values = self.placement.to_device(entry.values)
+                entry.delta = self.placement.to_device(entry.delta)
+                entry.nbytes = self.placement.device_nbytes(
+                    entry.values, entry.delta)
+                entry.n_valid = self.placement.n_nodes
+            else:
+                entry.values = jax.device_put(jnp.asarray(entry.values))
+                entry.delta = jax.device_put(jnp.asarray(entry.delta))
             entry.tier = DEVICE
             entry.checksum = None
             self.stats.promotions += 1
@@ -272,9 +343,13 @@ class WarmCache:
 
     def _spill(self, key) -> None:
         entry = self._entries[key]
-        entry.values = np.asarray(entry.values)
-        entry.delta = np.asarray(entry.delta)
+        # host tier is always canonical (n,) numpy — owner-mode pads are
+        # sliced off so checksums cover exactly the state bytes
+        entry.values = entry.host_values()
+        entry.delta = entry.host_delta()
+        entry.n_valid = 0
         entry.tier = HOST
+        entry.nbytes = int(entry.values.nbytes) + int(entry.delta.nbytes)
         entry.checksum = state_checksum(entry.values, entry.delta)
         if self.faults is not None and self.faults.fire(
                 "host_spill") == "corrupt":

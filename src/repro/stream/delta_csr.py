@@ -269,9 +269,11 @@ class DeltaCSR:
         # merge-compaction re-blocks the grid: re-upload every sharded
         # view from the fresh layout (per device, via the row sharding)
         # and drop its compiled sweeps — the static partition grid the
-        # cached closures were built around may have moved
-        for (_axis, _devs, weighted), rt in self._sharded_views.items():
-            self._refill_sharded_view(rt, weighted)
+        # cached closures were built around may have moved.  Owner-layout
+        # views also rebuild their halo plan here (the layout_version
+        # bump moved the edge blocks, so the boundary sets moved too).
+        for key, rt in self._sharded_views.items():
+            self._refill_sharded_view(rt, key[2])
             rt.iteration_cache.clear()
 
     # ------------------------------------------------------------- inspection
@@ -573,8 +575,8 @@ class DeltaCSR:
             self.csr.out_degree, self.csr.seg_start, self.config.link
         )
         self._inv_deg_cache.clear()
-        for (_axis, _devs, weighted), rt in self._sharded_views.items():
-            self._patch_sharded_view(rt, weighted, idx)
+        for key, rt in self._sharded_views.items():
+            self._patch_sharded_view(rt, key[2], idx)
 
     def _refresh_seg_start(self, dirty) -> None:
         """Recompute ``seg_start`` for ``dirty`` partitions: vertex v's
@@ -659,19 +661,52 @@ class DeltaCSR:
                 f"config.mesh_axis={axis!r} is not an axis of the mesh "
                 f"(axes: {mesh.axis_names})")
         weighted = bool(program.use_delta and program.weighted)
-        key = (axis, tuple(int(d.id) for d in mesh.devices.flat), weighted)
+        # the layout is part of the view identity: owner and replicated
+        # views of the same mesh hold differently-padded vectors and
+        # differently-placed state, so they specialize separately
+        key = (axis, tuple(int(d.id) for d in mesh.devices.flat), weighted,
+               self.config.vertex_sharding)
         rt = self._sharded_views.get(key)
         if rt is None:
-            from repro.dist.graph_shard import ShardedRuntime
+            from repro.dist.graph_shard import (
+                ShardedRuntime, _check_vertex_sharding)
 
             rt = ShardedRuntime(
                 mesh=mesh, axis=axis, blocks=None, parts=None,
                 out_degree=None, zc_req=None, inv_deg=None,
                 n_nodes=self.n_nodes, n_partitions=0, n_hub_partitions=0,
+                vertex_sharding=_check_vertex_sharding(
+                    self.config.vertex_sharding),
             )
             self._refill_sharded_view(rt, weighted)
             self._sharded_views[key] = rt
         return rt
+
+    def _padded_vertex_vecs(self, rt, weighted: bool):
+        """(out_degree, zc_req, inv_deg) for a sharded view — padded from
+        (n,) to (n_pad,) with inert fills under the owner layout (pads
+        carry no edges: degree 0, zc 0, inv_deg 1)."""
+        out_degree = self.csr.out_degree
+        zc_req = self.zc_req
+        inv_deg = self._inv_deg(weighted)
+        if rt.vertex_sharding == "owner":
+            from repro.dist.graph_shard import _pad_vertex_vec
+
+            out_degree = _pad_vertex_vec(out_degree, rt.n_pad, 0)
+            zc_req = _pad_vertex_vec(zc_req, rt.n_pad, 0.0)
+            inv_deg = _pad_vertex_vec(inv_deg, rt.n_pad, 1.0)
+        return out_degree, zc_req, inv_deg
+
+    def _padded_part_id(self, rt, P_pad: int) -> jnp.ndarray:
+        """Per-vertex partition ids for a sharded view, padded to
+        (n_pad,) under the owner layout (pads park in the last padded
+        partition — empty, so stats never count them)."""
+        part_id = self.vertex_part
+        if rt.vertex_sharding == "owner" and rt.n_pad > self.n_nodes:
+            part_id = np.concatenate(
+                [part_id,
+                 np.full(rt.n_pad - self.n_nodes, P_pad - 1, np.int32)])
+        return jnp.asarray(part_id)
 
     def _grid_arrays(self, n_dev: int):
         """Padded (P_pad, B) host grids of the blocked edge log."""
@@ -693,18 +728,27 @@ class DeltaCSR:
         device; between merges ``_patch_sharded_view`` scatters)."""
         from jax.sharding import NamedSharding, PartitionSpec
 
-        from repro.dist.graph_shard import BlockedEdges
+        from repro.dist.graph_shard import BlockedEdges, build_halo_plan
 
         n_dev = int(rt.mesh.shape[rt.axis])
         P_pad, grid = self._grid_arrays(n_dev)
+        src_g, dst_g = grid(self._src, 0), grid(self._dst, 0)
+        valid_g = grid(self._valid, False)
         row = NamedSharding(rt.mesh, PartitionSpec(rt.axis, None))
         rep = NamedSharding(rt.mesh, PartitionSpec())
         rt.blocks = BlockedEdges(
-            src=jax.device_put(grid(self._src, 0), row),
-            dst=jax.device_put(grid(self._dst, 0), row),
+            src=jax.device_put(src_g, row),
+            dst=jax.device_put(dst_g, row),
             weight=jax.device_put(grid(self._w, np.float32(np.inf)), row),
-            in_range=jax.device_put(grid(self._valid, False), row),
+            in_range=jax.device_put(valid_g, row),
         )
+        owner = rt.vertex_sharding == "owner"
+        if owner:
+            rt.halo = build_halo_plan(src_g, dst_g, valid_g, self.n_nodes,
+                                      n_dev)
+            rt.n_pad = rt.halo.n_pad
+        else:
+            rt.halo, rt.n_pad = None, self.n_nodes
         pad = P_pad - self.n_partitions
         vstart = np.concatenate(
             [self.vertex_start, np.full(pad, self.vertex_start[-1])])
@@ -716,13 +760,13 @@ class DeltaCSR:
             edge_start=jax.device_put(jnp.asarray(cap_start, jnp.int32), rep),
             part_edges=jax.device_put(jnp.asarray(counts, jnp.int32), rep),
             vertex_part_id=jax.device_put(
-                jnp.asarray(self.vertex_part), rep),
+                self._padded_part_id(rt, P_pad), rep),
             n_partitions=P_pad,
             block_size=self.block_size,
         )
-        rt.out_degree = jax.device_put(self.csr.out_degree, rep)
-        rt.zc_req = jax.device_put(self.zc_req, rep)
-        rt.inv_deg = jax.device_put(self._inv_deg(weighted), rep)
+        rt.out_degree, rt.zc_req, rt.inv_deg = (
+            jax.device_put(v, rep)
+            for v in self._padded_vertex_vecs(rt, weighted))
         rt.n_partitions = P_pad
 
     def _patch_sharded_view(self, rt, weighted: bool,
@@ -730,10 +774,14 @@ class DeltaCSR:
         """Scatter the touched lanes into the device-sharded (P_pad, B)
         grid and refresh the replicated (P,)/(n,) vectors — no
         re-blocking, no re-upload of untouched rows.  ``idx`` is the
-        (bucket-padded) flat lane index ``_patch_device`` used."""
+        (bucket-padded) flat lane index ``_patch_device`` used.  An
+        owner-layout view also refreshes its halo plan from the host log
+        (moved lanes can add/remove boundary vertices — the plan only
+        steers the ICI cost accounting, but it must track the live edge
+        set for ``halo_level_cost`` to charge the real boundary)."""
         from jax.sharding import NamedSharding, PartitionSpec
 
-        from repro.dist.graph_shard import BlockedEdges
+        from repro.dist.graph_shard import BlockedEdges, build_halo_plan
 
         row = NamedSharding(rt.mesh, PartitionSpec(rt.axis, None))
         rep = NamedSharding(rt.mesh, PartitionSpec())
@@ -757,9 +805,15 @@ class DeltaCSR:
             rt.parts,
             part_edges=jax.device_put(jnp.asarray(counts, jnp.int32), rep),
         )
-        rt.out_degree = jax.device_put(self.csr.out_degree, rep)
-        rt.zc_req = jax.device_put(self.zc_req, rep)
-        rt.inv_deg = jax.device_put(self._inv_deg(weighted), rep)
+        if rt.vertex_sharding == "owner" and idx is not None:
+            n_dev = int(rt.mesh.shape[rt.axis])
+            _, grid = self._grid_arrays(n_dev)
+            rt.halo = build_halo_plan(
+                grid(self._src, 0), grid(self._dst, 0),
+                grid(self._valid, False), self.n_nodes, n_dev)
+        rt.out_degree, rt.zc_req, rt.inv_deg = (
+            jax.device_put(v, rep)
+            for v in self._padded_vertex_vecs(rt, weighted))
 
 
 def random_batch(

@@ -63,7 +63,7 @@ from repro.core.hytm import HyTMConfig, run_hytm
 from repro.graph.algorithms import VertexProgram
 from repro.graph.csr import CSRGraph
 from repro.serve.scheduler import LaneScheduler
-from repro.serve.warm_cache import TierPolicy, WarmCache
+from repro.serve.warm_cache import OwnerPlacement, TierPolicy, WarmCache
 from repro.stream.delta_csr import DeltaCSR, EdgeBatch, UpdateReport
 from repro.stream.incremental import run_incremental
 
@@ -149,10 +149,16 @@ class GraphService:
         # must not collide with each other's converged results.  The
         # tier policy makes the old flat ``max_reports`` bound explicit
         # and adds the device-tier LRU byte budget (warm_cache docstring).
+        # owner-sharded serving holds cache entries (and counts the byte
+        # budget) at owned-slice granularity — see warm_cache.OwnerPlacement
+        placement = None
+        if self.mesh is not None and self.config.vertex_sharding == "owner":
+            placement = OwnerPlacement(
+                self.mesh, self.config.mesh_axis, graph.n_nodes)
         self.cache = WarmCache(TierPolicy(
             device_budget_bytes=device_budget_bytes,
             max_reports=max_reports,
-        ), obs=obs, faults=faults)
+        ), obs=obs, faults=faults, placement=placement)
         self._cache = self.cache  # dict-like; historical alias
         self._reports: list[UpdateReport] = []
         self.stats = ServiceStats()
@@ -238,9 +244,12 @@ class GraphService:
 
     # ------------------------------------------------------------------ query
     def key_source(self, program: VertexProgram, s: int | None) -> int | None:
-        """Cache-key source: global accumulative programs collapse to
+        """Cache-key source: global accumulative programs — and peeling
+        programs (k-core), which have no source at all — collapse to
         ``None`` (one answer per graph version); traversals and
         personalized accumulative programs (Δ-PPR) key per source."""
+        if program.peel_k is not None:
+            return None
         if program.use_delta and not program.personalized:
             return None
         return s
@@ -259,7 +268,7 @@ class GraphService:
             entry = self.cache.check((program, s))
             if entry is not None and entry.version == self.version:
                 results[s] = QueryResult(
-                    source=s, values=np.asarray(entry.values), iterations=0,
+                    source=s, values=entry.host_values(), iterations=0,
                     cache_hit=True, mode="cache",
                 )
                 self.stats.n_cache_hits += 1
@@ -313,7 +322,7 @@ class GraphService:
             return self._query_fresh(program, [s])[s]
         res = run_incremental(
             self.dcsr, program, self._reports_since(entry.version),
-            np.asarray(entry.values), np.asarray(entry.delta),
+            entry.host_values(), entry.host_delta(),
             source=s, config=self.config,
             calibrator=self._calibrator, mesh=self.mesh, obs=self.obs,
             faults=self.faults, retry=self._retry_policy(),
@@ -341,8 +350,11 @@ class GraphService:
 
     def _query_fresh(self, program, sources) -> dict:
         out: dict[int | None, QueryResult] = {}
-        if program.use_delta and not program.personalized:
-            # global accumulative programs: a single full run
+        if program.peel_k is not None or (
+                program.use_delta and not program.personalized):
+            # global programs (accumulative, and peeling programs whose
+            # init comes from the runtime degree vector — they cannot be
+            # seeded per-lane): a single full run
             for s in sources:
                 res = run_hytm(
                     None, program, source=s, config=self.config,

@@ -10,16 +10,19 @@ from repro.core.hytm import HyTMConfig, run_hytm
 from repro.graph.algorithms import (
     BFS,
     CC,
+    KCORE,
     PAGERANK,
     PHP,
     SSSP,
     WCC,
     reference_bfs,
     reference_cc,
+    reference_kcore,
     reference_pagerank,
     reference_sssp,
     reference_wcc,
 )
+from repro.graph.csr import csr_from_edges
 from repro.graph.generators import grid_mesh_graph, rmat_graph, uniform_graph
 from repro.graph.hub_sort import hub_sort
 
@@ -76,6 +79,62 @@ def test_wcc_oracle_matches_label_propagation(n, m, seed):
     random graphs — two different fixpoint constructions, same labels."""
     g = uniform_graph(n, max(m, 1), seed=seed)
     assert np.array_equal(reference_wcc(g), reference_cc(g))
+
+
+@pytest.mark.parametrize("name,make", GRAPHS)
+def test_kcore(name, make):
+    """k-core peeling (k=2): Δ is the removed flag, values the remaining
+    effective degree — bit-identical to the synchronous NumPy oracle
+    (unit removal counts are exact integers in f32)."""
+    g = make()
+    res = run_hytm(g, KCORE, source=None, config=HyTMConfig(n_partitions=12))
+    removed, deg = reference_kcore(g, 2.0)
+    np.testing.assert_array_equal(np.asarray(res.delta) > 0.5, removed)
+    np.testing.assert_array_equal(res.values, deg)
+
+
+def test_kcore_cascade_peels_path_graph():
+    """A path graph is the worst-case cascade: only the endpoints start
+    below k=2, and each round's removal exposes the next vertex in, so
+    peeling takes ~n/2 rounds and ends with every vertex removed."""
+    n = 40
+    src = np.arange(n - 1, dtype=np.int64)
+    g = csr_from_edges(n, src, src + 1, None)
+    res = run_hytm(g, KCORE, source=None, config=HyTMConfig(n_partitions=4))
+    removed, deg = reference_kcore(g, 2.0)
+    assert removed.all()
+    assert res.iterations >= n // 2 - 1  # multi-round cascade, not one shot
+    np.testing.assert_array_equal(np.asarray(res.delta) > 0.5, removed)
+    np.testing.assert_array_equal(res.values, deg)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(4, 100),
+    m=st.integers(0, 500),
+    seed=st.integers(0, 10_000),
+    k=st.integers(1, 5),
+)
+def test_kcore_oracle_property(n, m, seed, k):
+    """Property: the device peeling program matches the NumPy oracle for
+    random graphs across k — removal set and remaining degrees both —
+    and the survivors really form a k-core (alive ⇒ alive-degree ≥ k on
+    the symmetrized graph)."""
+    g = uniform_graph(n, max(m, 1), seed=seed)
+    prog = dataclasses.replace(KCORE, peel_k=float(k))
+    res = run_hytm(g, prog, source=None, config=HyTMConfig(n_partitions=4))
+    removed, deg = reference_kcore(g, float(k))
+    got_removed = np.asarray(res.delta) > 0.5
+    np.testing.assert_array_equal(got_removed, removed)
+    np.testing.assert_array_equal(res.values, deg)
+    # independent invariant check: count alive neighbors directly
+    sym = g.symmetrize()
+    alive = ~removed
+    alive_deg = np.zeros(g.n_nodes)
+    es, ed = sym.edge_sources(), sym.indices
+    keep = alive[es] & alive[ed]
+    np.add.at(alive_deg, ed[keep], 1.0)
+    assert np.all(alive_deg[alive] >= k)
 
 
 @pytest.mark.parametrize("name,make", GRAPHS)

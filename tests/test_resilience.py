@@ -269,6 +269,142 @@ def test_kill_resume_forced_devices():
     assert "OK" in out
 
 
+_OWNER_RESUME_SCRIPT = """
+import dataclasses, os, tempfile
+import numpy as np
+from repro.core.hytm import HyTMConfig, run_hytm
+from repro.graph.algorithms import SSSP
+from repro.graph.generators import rmat_graph
+from repro.resilience import (CheckpointError, CheckpointHook, FaultSpec,
+                              RetriesExhausted, migrate_state_layout,
+                              plan_of, restore, resume_run, save)
+
+g = rmat_graph(300, 2400, seed=7)
+cfg = HyTMConfig(n_partitions=6, sync_every=2, async_sweep=False,
+                 mesh_axis="graph", vertex_sharding="owner")
+base = run_hytm(g, SSSP, source=0, config=cfg)
+ck = os.path.join(tempfile.mkdtemp(), "m.ckpt.npz")
+hook = CheckpointHook(ck, program=SSSP.name, anchor=(0, 0),
+                      state_layout="owner", n_nodes=g.n_nodes)
+plan = plan_of(FaultSpec("chunk_dispatch", "fail", at=(2,)), seed=5)
+try:
+    run_hytm(g, SSSP, source=0, config=cfg, faults=plan, on_chunk=hook)
+    raise SystemExit("injected kill did not fire")
+except RetriesExhausted:
+    pass
+res = resume_run(ck, g, SSSP, config=cfg, source=0, expect_anchor=(0, 0))
+np.testing.assert_array_equal(base.values, res.values)
+assert res.iterations == base.iterations
+assert res.total_transfer_bytes == base.total_transfer_bytes
+print("OK-RESUME", res.iterations)
+
+# layout mismatch is a typed CheckpointError naming the converter, not a
+# shape crash deep inside the sharded driver
+cfg_rep = dataclasses.replace(cfg, vertex_sharding="replicated")
+try:
+    resume_run(ck, g, SSSP, config=cfg_rep, source=0, expect_anchor=(0, 0))
+    raise SystemExit("expected CheckpointError")
+except CheckpointError as e:
+    assert "migrate_state_layout" in str(e), e
+print("OK-TYPED")
+
+# owner -> replicated -> owner migration round trip is bit-exact (pads
+# are deterministic fills), and the migrated replicated checkpoint
+# resumes to the same answer
+ckpt = restore(ck)
+assert ckpt.state_layout == "owner" and ckpt.n_nodes == 300
+rep = migrate_state_layout(ckpt, "replicated")
+assert rep.values.shape == (300,)
+back = migrate_state_layout(rep, "owner", n_devices=4)
+np.testing.assert_array_equal(back.values, ckpt.values)
+np.testing.assert_array_equal(back.delta, ckpt.delta)
+np.testing.assert_array_equal(back.frontier, ckpt.frontier)
+ck2 = ck + ".rep.npz"
+save(rep, ck2)
+res2 = resume_run(ck2, g, SSSP, config=cfg_rep, source=0,
+                  expect_anchor=(0, 0))
+np.testing.assert_array_equal(base.values, res2.values)
+assert res2.iterations == base.iterations
+print("OK-MIGRATE")
+"""
+
+
+def test_owner_kill_resume_and_migration_forced_devices():
+    """Owner-sharded kill+resume is bit-identical; resuming an
+    owner-layout checkpoint into a replicated run raises a typed
+    CheckpointError pointing at ``migrate_state_layout``; the migration
+    round-trips bit-exactly and the migrated checkpoint resumes to the
+    same answer on the replicated path."""
+    out = run_forced_devices(_OWNER_RESUME_SCRIPT, devices=4)
+    for marker in ("OK-RESUME", "OK-TYPED", "OK-MIGRATE"):
+        assert marker in out, out
+
+
+def test_migrate_state_layout_host_side():
+    """The layout converter needs no mesh: replicated -> owner pads with
+    the program's inert fills (+inf values / 0 delta / False frontier
+    for SSSP's MIN), owner -> replicated slices them back off, real
+    vertex bytes untouched; degenerate inputs raise typed errors."""
+    from repro.resilience import migrate_state_layout
+
+    n = 10
+    rng = np.random.default_rng(0)
+    ck = RunCheckpoint(
+        program="sssp", iterations=3,
+        values=rng.random(n).astype(np.float32),
+        delta=rng.random(n).astype(np.float32),
+        frontier=rng.random(n) > 0.5, n_nodes=n)
+    own = migrate_state_layout(ck, "owner", n_devices=4)
+    assert own.state_layout == "owner" and own.n_nodes == n
+    assert own.values.shape == (12,)  # ceil(10/4)*4
+    np.testing.assert_array_equal(own.values[:n], ck.values)
+    assert np.all(np.isinf(own.values[n:]))
+    assert not own.delta[n:].any() and not own.frontier[n:].any()
+    back = migrate_state_layout(own, "replicated")
+    np.testing.assert_array_equal(back.values, ck.values)
+    np.testing.assert_array_equal(back.delta, ck.delta)
+    np.testing.assert_array_equal(back.frontier, ck.frontier)
+    assert migrate_state_layout(ck, "replicated") is ck  # no-op
+    try:
+        migrate_state_layout(ck, "sharded")
+        raise AssertionError("expected ValueError on unknown layout")
+    except ValueError:
+        pass
+    try:
+        migrate_state_layout(dataclasses.replace(own, n_nodes=0),
+                             "replicated")
+        raise AssertionError("expected CheckpointError without n_nodes")
+    except CheckpointError:
+        pass
+    try:
+        migrate_state_layout(
+            dataclasses.replace(ck, program="nope"), "owner", n_devices=2)
+        raise AssertionError("expected CheckpointError on unknown program")
+    except CheckpointError:
+        pass
+
+
+def test_checkpoint_schema_v1_still_restores(tmp_path):
+    """A pre-owner-sharding (schema 1) checkpoint — no ``state_layout``
+    or ``n_nodes`` metadata — still restores, defaulting to the
+    replicated layout, so old checkpoints keep resuming on replicated
+    runs after the schema bump."""
+    import json
+    import zlib
+
+    vals = np.arange(5, dtype=np.float32)
+    crc = zlib.crc32(np.ascontiguousarray(vals).tobytes())
+    meta = {"schema": 1, "program": "sssp", "iterations": 2,
+            "graph_version": 0, "layout_version": 0, "calibrator": None,
+            "crc": {"values": crc}}
+    path = tmp_path / "v1.ckpt.npz"
+    np.savez(path, values=vals,
+             __meta__=np.frombuffer(json.dumps(meta).encode(), np.uint8))
+    back = restore(path, expect_anchor=(0, 0), program="sssp")
+    assert back.state_layout == "replicated" and back.n_nodes == 0
+    np.testing.assert_array_equal(back.values, vals)
+
+
 # --------------------------------------------------------------------------
 # warm cache: corrupt spilled entry -> detected, evicted, recomputed
 def test_warm_cache_bit_flip_detected():

@@ -25,6 +25,7 @@ The contract under test (the PR that lifted the single-device asserts):
 """
 
 import numpy as np
+import pytest
 
 from _forced_devices import run_forced_devices
 from repro.core.hytm import HyTMConfig, run_hytm
@@ -171,6 +172,119 @@ def test_sharded_warm_equivalence_4dev():
     out = run_forced_devices(_SHARDED_WARM_SCRIPT, devices=4)
     assert out.count("OK-MIN") == 4, out
     for marker in ("OK-ICI", "OK-SUM", "OK-SERVICE"):
+        assert marker in out, out
+
+
+_OWNER_SERVE_SCRIPT = """
+    import dataclasses
+    import numpy as np
+    import jax
+    assert len(jax.devices()) == {devices}, jax.devices()
+    from repro.core.hytm import HyTMConfig
+    from repro.graph.algorithms import ALGORITHMS, BFS, SSSP
+    from repro.graph.generators import rmat_graph
+    from repro.stream import GraphService, random_batch
+
+    KCORE = ALGORITHMS["kcore"]
+    g = rmat_graph(600, 5000, seed=11)
+    n_dev = len(jax.devices())
+    n_loc = -(-g.n_nodes // n_dev)
+
+    cfg_owner = HyTMConfig(n_partitions=16, async_sweep=False,
+                           mesh_axis="graph", sync_every=4,
+                           vertex_sharding="owner")
+    cfg_rep = dataclasses.replace(cfg_owner, vertex_sharding="replicated")
+    cfg_solo = dataclasses.replace(cfg_owner, mesh_axis=None,
+                                   vertex_sharding="replicated")
+
+    svc_o = GraphService(g, config=cfg_owner, max_lanes=4)
+    svc_r = GraphService(g, config=cfg_rep, max_lanes=4)
+    svc_s = GraphService(g, config=cfg_solo, max_lanes=4)
+
+    # ---- cold lane-batched queries: owner == replicated == solo ----
+    srcs = [0, 5, 9, 17, 23, 31]
+    ro, rr, rs = (s.query(BFS, srcs) for s in (svc_o, svc_r, svc_s))
+    for a, b, c in zip(ro, rr, rs):
+        assert a.values.shape == (600,), a.values.shape
+        np.testing.assert_array_equal(a.values, b.values)
+        np.testing.assert_array_equal(a.values, c.values)
+        assert a.iterations == b.iterations == c.iterations
+    print("OK-COLD", [r.iterations for r in ro])
+
+    # repeat = cache hits (host_values + owner placement round trip)
+    ro2 = svc_o.query(BFS, srcs)
+    assert all(r.cache_hit for r in ro2)
+    for a, b in zip(ro2, ro):
+        np.testing.assert_array_equal(a.values, b.values)
+    print("OK-HITS")
+
+    # ---- update batches + incremental warm recompute ----
+    rng = np.random.default_rng(3)
+    batch = random_batch(svc_s.dcsr, rng, n_insert=120, n_delete=60)
+    for svc in (svc_o, svc_r, svc_s):
+        svc.update(batch)
+    for a, c in zip(svc_o.query(SSSP, srcs), svc_s.query(SSSP, srcs)):
+        np.testing.assert_array_equal(a.values, c.values)
+    svc_o.query(SSSP, srcs)  # warm the cache for the incremental path
+    batch2 = random_batch(svc_s.dcsr, rng, n_insert=80, n_delete=40)
+    for svc in (svc_o, svc_s):
+        svc.update(batch2)
+    ro5, rs5 = svc_o.query(SSSP, srcs), svc_s.query(SSSP, srcs)
+    modes = sorted(set(r.mode for r in ro5))
+    assert "incremental" in modes, modes
+    for a, c in zip(ro5, rs5):
+        np.testing.assert_array_equal(a.values, c.values)
+    print("OK-INCREMENTAL", modes)
+
+    # ---- peeling routes down the global path (lanes would call
+    # init_state, which peel programs forbid) ----
+    ko = svc_o.query(KCORE, [None])
+    ks = svc_s.query(KCORE, [None])
+    np.testing.assert_array_equal(ko[0].values, ks[0].values)
+    assert ko[0].mode == "batched"
+    assert svc_o.query(KCORE, [3])[0].cache_hit  # source collapses to None
+    print("OK-KCORE", ko[0].iterations)
+
+    # ---- lane_bytes is the per-device owned slice ----
+    assert svc_o.scheduler.lane_bytes == 9 * n_loc, \\
+        (svc_o.scheduler.lane_bytes, n_loc)
+    assert svc_s.scheduler.lane_bytes == 9 * 600
+    print("OK-LANE-BYTES", svc_o.scheduler.lane_bytes)
+
+    # ---- tiny budget: owner-entry spill -> promote round trip ----
+    # per entry the device tier holds 8*n_loc bytes (values+delta f32,
+    # owned slice), two lanes pin 2*9*n_loc: 40*n_loc holds the lanes
+    # plus ~2.7 of the 6 entries, forcing spills, then promotes on reuse
+    svc_t = GraphService(g, config=cfg_owner, max_lanes=2,
+                         device_budget_bytes=40 * n_loc)
+    svc_u = GraphService(g, config=cfg_solo, max_lanes=2)
+    svc_t.query(BFS, srcs)
+    assert svc_t.cache.stats.spills > 0, svc_t.cache.stats.as_dict()
+    b = random_batch(svc_u.dcsr, np.random.default_rng(9),
+                     n_insert=50, n_delete=30)
+    svc_t.update(b); svc_u.update(b)
+    rt2, ru2 = svc_t.query(BFS, srcs), svc_u.query(BFS, srcs)
+    assert svc_t.cache.stats.promotions > 0, svc_t.cache.stats.as_dict()
+    for a, c in zip(rt2, ru2):
+        np.testing.assert_array_equal(a.values, c.values)
+    print("OK-SPILL-PROMOTE", svc_t.cache.stats.spills,
+          svc_t.cache.stats.promotions)
+"""
+
+
+@pytest.mark.parametrize("devices", [16])
+def test_owner_sharded_service_16dev(devices):
+    """The 16-device owner-sharding leg: ``GraphService`` with
+    ``vertex_sharding="owner"`` serves cold lane batches, cache hits,
+    update batches, and incremental warm recomputes bit-identically to
+    both the replicated mesh service and the single-device service,
+    while lane state and warm-cache entries are budgeted at the owned
+    ``ceil(n/D)`` slice; spilled owner entries promote back bit-exactly
+    and peel programs route down the global (non-lane) path."""
+    out = run_forced_devices(_OWNER_SERVE_SCRIPT.format(devices=devices),
+                             devices=devices)
+    for marker in ("OK-COLD", "OK-HITS", "OK-INCREMENTAL", "OK-KCORE",
+                   "OK-LANE-BYTES", "OK-SPILL-PROMOTE"):
         assert marker in out, out
 
 
